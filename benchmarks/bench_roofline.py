@@ -1,0 +1,51 @@
+"""Roofline bench: renders the §Roofline table from the dry-run artifacts
+(dryrun_single.jsonl / dryrun_multi.jsonl at the repo root). The dry-run
+itself is launched separately (launch/dryrun.py) because it needs 512
+placeholder devices; this bench only aggregates."""
+from __future__ import annotations
+
+import json
+import os
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def load_records():
+    recs = []
+    for fn in ("dryrun_single.jsonl", "dryrun_multi.jsonl"):
+        path = os.path.join(ROOT, fn)
+        if os.path.exists(path):
+            with open(path) as f:
+                for line in f:
+                    recs.append(json.loads(line))
+    return recs
+
+
+def run(quick: bool = True):
+    recs = load_records()
+    rows = []
+    if not recs:
+        return [{"name": "roofline/no-dryrun-artifacts", "us_per_call": "",
+                 "derived": "run launch/dryrun.py first"}]
+    for r in recs:
+        name = f"roofline/{r['mesh']}/{r['arch']}/{r['shape']}"
+        if r.get("roofline"):
+            rf = r["roofline"]
+            dom = rf["dominant"]
+            rows.append({
+                "name": name, "us_per_call": "",
+                "derived": (f"compute={rf['compute_s']:.2e}s,"
+                            f"memory={rf['memory_s']:.2e}s,"
+                            f"collective={rf['collective_s']:.2e}s,"
+                            f"dominant={dom},"
+                            f"useful={rf['useful_ratio']:.2f}"),
+            })
+        else:
+            rows.append({"name": name, "us_per_call": "",
+                         "derived": str(r.get("status", ""))[:80]})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,104 @@
+"""Fig. 1: the toy 2D two-client federated quadratic.
+
+MB-SGD converges (slowly) to the global optimum; FedAvg with 10/100 local
+steps stagnates at biased fixed points (more steps = worse); FedPA with
+10/100 posterior samples per round converges closer with MORE local
+computation (rho = 1, exact local posterior sampling as in the paper's toy).
+Outputs distance-to-optimum at the final round per method.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (aggregate_deltas_list, dp_delta,
+                        global_posterior_mode)
+from repro.core.server import init_server_state, server_update
+from repro.data import make_federated_lsq
+from repro.optim import sgd, sgdm
+
+
+def _setup(seed=3):
+    clients, data = make_federated_lsq(2, 50, 2, heterogeneity=40.0,
+                                       seed=seed)
+    mu = np.asarray(global_posterior_mode(clients))
+    return clients, mu
+
+
+def _dist(theta, mu):
+    return float(np.linalg.norm(np.asarray(theta) - mu))
+
+
+def run_mb_sgd(clients, mu, rounds, lr=5e-4):
+    theta = jnp.zeros(2)
+    traj = []
+    for _ in range(rounds):
+        g = sum(c.weight * c.grad(theta) for c in clients)
+        theta = theta - lr * g
+        traj.append(_dist(theta, mu))
+    return traj
+
+
+def run_fedavg(clients, mu, rounds, local_steps, client_lr=5e-4,
+               server_lr=1.0):
+    opt = sgdm(server_lr, 0.9)
+    st = init_server_state(jnp.zeros(2), opt)
+    traj = []
+    eye = jnp.eye(2)
+    for _ in range(rounds):
+        deltas = []
+        for c in clients:
+            m = eye - jnp.linalg.matrix_power(eye - client_lr * c.sigma_inv,
+                                              local_steps)
+            deltas.append(m @ (st.params - c.mu))   # exact K-step GD delta
+        st = server_update(st, aggregate_deltas_list(deltas), opt)
+        traj.append(_dist(st.params, mu))
+    return traj
+
+
+def run_fedpa(clients, mu, rounds, ell, rho=1.0, server_lr=0.02, seed=0):
+    rng = np.random.default_rng(seed)
+    opt = sgd(server_lr)
+    st = init_server_state(jnp.zeros(2), opt)
+    dp = jax.jit(lambda x0, xs: dp_delta(x0, xs, rho))
+    covs = [np.linalg.cholesky(np.linalg.inv(np.asarray(c.sigma_inv,
+                                                        np.float64)))
+            for c in clients]
+    traj = []
+    for _ in range(rounds):
+        deltas = []
+        for c, L in zip(clients, covs):
+            z = rng.standard_normal((ell, 2))
+            xs = jnp.asarray(np.asarray(c.mu)[None] + z @ L.T, jnp.float32)
+            deltas.append(dp(st.params, xs))
+        st = server_update(st, aggregate_deltas_list(deltas), opt)
+        traj.append(_dist(st.params, mu))
+    return traj
+
+
+def run(quick: bool = True):
+    rounds = 300 if quick else 800
+    clients, mu = _setup()
+    rows = []
+    for name, traj in [
+        ("mb_sgd", run_mb_sgd(clients, mu, rounds)),
+        ("fedavg_k10", run_fedavg(clients, mu, rounds, 10)),
+        ("fedavg_k100", run_fedavg(clients, mu, rounds, 100)),
+        ("fedpa_l10", run_fedpa(clients, mu, rounds, 10)),
+        ("fedpa_l100", run_fedpa(clients, mu, rounds, 100)),
+    ]:
+        rows.append({"name": f"fig1/{name}", "us_per_call": "",
+                     "derived": f"final_dist={traj[-1]:.4f}"})
+    # the paper's orderings, asserted
+    d = {r["name"].split("/")[1]: float(r["derived"].split("=")[1])
+         for r in rows}
+    assert d["fedavg_k100"] > d["fedavg_k10"] * 0.9, d   # more K hurts FedAvg
+    assert d["fedpa_l100"] < d["fedpa_l10"], d           # more l helps FedPA
+    assert d["fedpa_l100"] < d["fedavg_k100"], d
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

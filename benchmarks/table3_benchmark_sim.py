@@ -1,0 +1,103 @@
+"""Table 3 (simulated): FedAvg-1E vs FedAvg-ME vs FedPA-ME on a Dirichlet
+non-IID federated classification task with the paper's own CNN architecture
+(EMNIST-62's TFF reference model at smoke scale — the real benchmark data is
+network-gated in this container; see DESIGN.md §9).
+
+Metrics mirror the paper: best eval accuracy within the round budget and
+rounds-to-threshold.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedConfig
+from repro.configs.emnist_cnn import smoke as cnn_smoke
+from repro.core.round import FedSim
+from repro.data.dirichlet import (classification_batches,
+                                  make_dirichlet_classification)
+from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn_params
+
+
+def _image_data(num_clients, cfg, alpha, seed=0):
+    side = cfg.image_size
+    fc = make_dirichlet_classification(
+        num_clients, cfg.num_classes, side * side, n_per_client=64,
+        alpha=alpha, proto_scale=1.5, noise=1.5, seed=seed)
+    reshape = lambda x: x.reshape(-1, side, side, 1)
+    return fc, reshape
+
+
+def _run(algorithm, epochs, rounds, seed=0, alpha=0.1, num_clients=32):
+    cfg = cnn_smoke()
+    fc, reshape = _image_data(num_clients, cfg, alpha, seed)
+    batch_size = 16
+    steps_per_epoch = 64 // batch_size
+    local_steps = epochs * steps_per_epoch
+
+    def grad_fn(params, batch):
+        b = {"x": reshape(batch["x"]), "y": batch["y"]}
+        return jax.value_and_grad(lambda p: cnn_loss(p, b, cfg))(params)
+
+    def batch_fn(cid, r, steps):
+        return classification_batches(fc.client_x[cid], fc.client_y[cid],
+                                      batch_size, steps,
+                                      seed=r * 977 + cid)
+
+    kw = {}
+    if algorithm == "fedpa":
+        kw = dict(burn_in_steps=local_steps // 2,
+                  steps_per_sample=max(steps_per_epoch // 2, 1),
+                  shrinkage_rho=0.01, burn_in_rounds=rounds // 4)
+    fed = FedConfig(algorithm=algorithm, clients_per_round=8,
+                    local_steps=local_steps, server_opt="sgdm",
+                    server_lr=0.3, client_opt="sgdm", client_lr=0.01,
+                    client_momentum=0.9, **kw)
+    sim = FedSim(fed=fed, grad_fn=grad_fn, batch_fn=batch_fn,
+                 num_clients=num_clients, seed=seed)
+    params = init_cnn_params(jax.random.PRNGKey(seed), cfg)
+    tx = reshape(np.asarray(fc.test_x))
+    ty = jnp.asarray(fc.test_y)
+    acc_fn = jax.jit(lambda p: cnn_accuracy(p, tx, ty, cfg))
+    state, hist = sim.run(params, rounds,
+                          eval_fn=lambda p: {"acc": float(acc_fn(p))})
+    accs = [h["acc"] for h in hist]
+    return accs
+
+
+def _rounds_to(accs, thr):
+    for i, a in enumerate(accs):
+        if a >= thr:
+            return i + 1
+    return None
+
+
+def run(quick: bool = True):
+    rounds = 30 if quick else 100
+    rows = []
+    results = {}
+    for name, alg, epochs in [("fedavg_1e", "fedavg", 1),
+                              ("fedavg_me", "fedavg", 5),
+                              ("fedpa_me", "fedpa", 5)]:
+        accs = _run(alg, epochs, rounds)
+        results[name] = accs
+        best = max(accs)
+        r70 = _rounds_to(accs, 0.7)
+        rows.append({"name": f"table3/{name}", "us_per_call": "",
+                     "derived": f"best_acc={best:.3f},rounds_to_70%={r70}"})
+    # the paper's claims: multi-epoch learns in fewer rounds (Table 3's
+    # rounds-to-accuracy), and FedPA attains at least FedAvg-ME's best
+    big = rounds + 1
+    r_pa = _rounds_to(results["fedpa_me"], 0.7) or big
+    r_1e = _rounds_to(results["fedavg_1e"], 0.7) or big
+    assert r_pa <= r_1e, (r_pa, r_1e)
+    assert max(results["fedpa_me"]) >= max(results["fedavg_me"]) - 0.02
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,26 @@
+"""Lower + compile one (arch x shape) against the production mesh and print
+its memory analysis and roofline terms — the single-combo view of the
+multi-pod dry-run.
+
+  PYTHONPATH=src python examples/dryrun_one.py gemma3-27b train_4k [--multi-pod]
+"""
+import json
+import os
+import subprocess
+import sys
+
+
+def main():
+    arch = sys.argv[1] if len(sys.argv) > 1 else "gemma3-27b"
+    shape = sys.argv[2] if len(sys.argv) > 2 else "train_4k"
+    extra = sys.argv[3:]
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    raise SystemExit(subprocess.call(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", arch, "--shape", shape] + extra, env=env))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Quickstart: federated posterior averaging in ~60 lines.
+
+Builds a heterogeneous federated least-squares problem, runs FedAvg and
+FedPA through the exact same generalized federated optimization loop
+(Algorithm 1 — only the client update differs), and prints the distance to
+the true global optimum, which is known in closed form (Eq. 3).
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedConfig
+from repro.core import FedSim, global_posterior_mode
+from repro.data import make_federated_lsq
+from repro.data.synthetic_lsq import lsq_batches
+
+D, N_CLIENTS, N_PER_CLIENT = 8, 8, 100
+
+clients, data = make_federated_lsq(N_CLIENTS, N_PER_CLIENT, D,
+                                   heterogeneity=20.0, seed=0)
+mu_star = np.asarray(global_posterior_mode(clients))   # exact global optimum
+
+
+def grad_fn(params, batch):
+    def loss(p):
+        r = batch["x"] @ p - batch["y"]
+        return 0.5 * jnp.mean(r * r) * N_PER_CLIENT    # sum-scale objective
+    return jax.value_and_grad(loss)(params)
+
+
+def batch_fn(cid, round_idx, steps):
+    X, y = data[cid]
+    return lsq_batches(X, y, batch_size=25, num_steps=steps,
+                       seed=round_idx * 977 + cid)
+
+
+common = dict(clients_per_round=4, local_steps=300, client_opt="sgd",
+              client_lr=0.002)
+configs = {
+    "fedavg": FedConfig(algorithm="fedavg", server_opt="sgdm",
+                        server_lr=1.0, **common),
+    "fedpa": FedConfig(algorithm="fedpa", burn_in_steps=100,
+                       steps_per_sample=20, shrinkage_rho=1.0,
+                       server_opt="sgd", server_lr=0.03, **common),
+}
+
+for name, fed in configs.items():
+    sim = FedSim(fed=fed, grad_fn=grad_fn, batch_fn=batch_fn,
+                 num_clients=N_CLIENTS)
+    state, hist = sim.run(jnp.zeros(D), num_rounds=60)
+    dist = np.linalg.norm(np.asarray(state.params) - mu_star)
+    print(f"{name:7s}: final client loss {hist[-1]['client_loss']:.3f}, "
+          f"distance to global optimum {dist:.4f}")
+
+print("\nFedPA reaches a better optimum with the same local computation —")
+print("the posterior-correction of client deltas in action (paper Fig. 1).")

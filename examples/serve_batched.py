@@ -1,0 +1,27 @@
+"""Batched serving example: prefill a batch of prompts on a sliding-window
+architecture (gemma3-family smoke config), then decode with the ring-buffer
+KV cache — the decode_32k / long_500k code path at CPU scale.
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+import os
+import subprocess
+import sys
+
+
+def main():
+    cmd = [
+        sys.executable, "-m", "repro.launch.serve",
+        "--arch", "gemma3-27b",
+        "--batch", "4",
+        "--prompt-len", "96",
+        "--gen", "24",
+    ] + sys.argv[1:]
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    raise SystemExit(subprocess.call(cmd, env=env))
+
+
+if __name__ == "__main__":
+    main()

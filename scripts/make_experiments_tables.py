@@ -1,0 +1,84 @@
+"""Render EXPERIMENTS.md's §Dry-run and §Roofline tables from the sweep
+artifacts (dryrun_{single,multi}.jsonl + rooflines.jsonl)."""
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def load(fn):
+    path = os.path.join(ROOT, fn)
+    if not os.path.exists(path):
+        return []
+    return [json.loads(l) for l in open(path)]
+
+
+def fmt(x, nd=3):
+    if x is None:
+        return "-"
+    if isinstance(x, float):
+        if x == 0:
+            return "0"
+        if abs(x) < 1e-3 or abs(x) >= 1e5:
+            return f"{x:.2e}"
+        return f"{x:.{nd}f}"
+    return str(x)
+
+
+def dryrun_table():
+    rows = []
+    for rec in load("dryrun_single.jsonl") + load("dryrun_multi.jsonl"):
+        mem = rec.get("memory", {})
+        coll = rec.get("collectives", {})
+        status = rec.get("status", "?")
+        if status.startswith("skip"):
+            status = "skip (full attn)"
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "status": "ok" if status == "ok" else status,
+            "placement": rec.get("placement", "-"),
+            "lower_s": rec.get("lower_s"), "compile_s": rec.get("compile_s"),
+            "temp_GiB": (mem.get("temp_size_in_bytes", 0) / 2**30) or None,
+            "args_GiB": (mem.get("argument_size_in_bytes", 0) / 2**30) or None,
+            "coll_GiB": (coll.get("total_bytes", 0) / 2**30) or None,
+        })
+    return rows
+
+
+def roofline_table():
+    rows = []
+    for rec in load("rooflines.jsonl"):
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "compute_s": rec["compute_s"], "memory_s": rec["memory_s"],
+            "collective_s": rec["collective_s"], "dominant": rec["dominant"],
+            "model_TF": rec["model_flops"] / 1e12,
+            "useful": rec["useful_ratio"],
+        })
+    return rows
+
+
+def md_table(rows, keys):
+    if not rows:
+        return "(no data)"
+    out = ["| " + " | ".join(keys) + " |",
+           "|" + "|".join("---" for _ in keys) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(fmt(r.get(k)) for k in keys) + " |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "both"
+    if which in ("dryrun", "both"):
+        print("### Dry-run table\n")
+        print(md_table(dryrun_table(),
+                       ["arch", "shape", "mesh", "status", "placement",
+                        "compile_s", "temp_GiB", "args_GiB", "coll_GiB"]))
+        print()
+    if which in ("roofline", "both"):
+        print("### Roofline table\n")
+        print(md_table(roofline_table(),
+                       ["arch", "shape", "mesh", "compute_s", "memory_s",
+                        "collective_s", "dominant", "useful"]))

@@ -1,0 +1,5 @@
+from repro.checkpoint.io import (  # noqa: F401
+    latest_checkpoint,
+    restore_checkpoint,
+    save_checkpoint,
+)

@@ -1,0 +1,90 @@
+"""Pytree checkpointing: npz payload + json manifest.
+
+Leaves are addressed by their tree keypath so a checkpoint is readable
+without unpickling arbitrary objects, restores are structure-checked, and
+dtype/shape mismatches fail loudly. Used for federated server state
+(params + server-opt state + round counter).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _keystr(path) -> str:
+    return jax.tree_util.keystr(path) or "<root>"
+
+
+def save_checkpoint(ckpt_dir: str, state: Any, step: int,
+                    metadata: Optional[dict] = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(state)[0]
+    arrays = {}
+    manifest = []
+    for i, (path, leaf) in enumerate(leaves_with_paths):
+        arr = np.asarray(leaf)
+        dtype = str(arr.dtype)
+        if dtype not in ("float64", "float32", "float16", "int64", "int32",
+                         "int16", "int8", "uint8", "uint16", "uint32",
+                         "uint64", "bool"):
+            # npz can't store ml_dtypes (bfloat16, fp8): store widened,
+            # restore casts back via the template dtype (exact for bf16)
+            arr = arr.astype(np.float32)
+        key = f"leaf_{i}"
+        arrays[key] = arr
+        manifest.append({"key": key, "path": _keystr(path),
+                         "shape": list(arr.shape), "dtype": dtype})
+    base = os.path.join(ckpt_dir, f"ckpt_{step:08d}")
+    np.savez(base + ".npz", **arrays)
+    with open(base + ".json", "w") as f:
+        json.dump({"step": step, "metadata": metadata or {},
+                   "manifest": manifest}, f, indent=1)
+    return base + ".npz"
+
+
+def latest_checkpoint(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [
+        int(m.group(1))
+        for fn in os.listdir(ckpt_dir)
+        if (m := re.match(r"ckpt_(\d+)\.npz$", fn))
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, like: Any,
+                       step: Optional[int] = None) -> Tuple[Any, int, dict]:
+    """Restore into the structure of ``like`` (shape/dtype verified)."""
+    if step is None:
+        step = latest_checkpoint(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    base = os.path.join(ckpt_dir, f"ckpt_{step:08d}")
+    with open(base + ".json") as f:
+        meta = json.load(f)
+    data = np.load(base + ".npz")
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    if len(leaves_with_paths) != len(meta["manifest"]):
+        raise ValueError(
+            f"leaf count mismatch: template {len(leaves_with_paths)} vs "
+            f"checkpoint {len(meta['manifest'])}"
+        )
+    by_path = {m["path"]: m for m in meta["manifest"]}
+    out = []
+    for path, leaf in leaves_with_paths:
+        ks = _keystr(path)
+        if ks not in by_path:
+            raise KeyError(f"checkpoint missing leaf {ks}")
+        m = by_path[ks]
+        arr = data[m["key"]]
+        want = np.asarray(leaf)
+        if list(arr.shape) != list(want.shape):
+            raise ValueError(f"{ks}: shape {arr.shape} != template {want.shape}")
+        out.append(arr.astype(want.dtype))
+    return treedef.unflatten(out), meta["step"], meta["metadata"]

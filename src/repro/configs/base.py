@@ -1,0 +1,269 @@
+"""Config dataclasses for the FedPA framework.
+
+Everything is a frozen dataclass so configs are hashable and usable as jit
+static arguments. A model is described as a *pattern* of layers repeated
+``repeats`` times plus an optional ``tail`` — this is what lets the model
+builder stack parameters per pattern position and ``lax.scan`` over the
+repeats, keeping the HLO (and compile time) independent of depth.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Layer specs
+# ---------------------------------------------------------------------------
+
+#: Mixer kinds understood by the model builder.
+MIXERS = ("attn", "swa", "mlstm", "slstm", "rglru")
+#: FFN kinds.
+FFNS = ("dense", "moe", "none")
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """One decoder layer: a sequence mixer followed by an (optional) FFN."""
+
+    mixer: str = "attn"          # one of MIXERS
+    ffn: str = "dense"           # one of FFNS
+    window: int = 0              # sliding-window size; only used by mixer="swa"
+
+    def __post_init__(self):
+        if self.mixer not in MIXERS:
+            raise ValueError(f"unknown mixer {self.mixer!r}")
+        if self.ffn not in FFNS:
+            raise ValueError(f"unknown ffn {self.ffn!r}")
+        if self.mixer == "swa" and self.window <= 0:
+            raise ValueError("swa mixer requires window > 0")
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts FFN configuration (GShard-style one-hot dispatch)."""
+
+    num_experts: int = 0
+    top_k: int = 1
+    expert_d_ff: int = 0
+    shared_expert_d_ff: int = 0   # 0 = no shared expert
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 1e-2
+    # Tokens are routed in chunks of this many tokens (scan over chunks) so the
+    # dispatch/combine one-hot tensors stay bounded in VMEM/HBM.
+    chunk_tokens: int = 8192
+    # "onehot": GShard dense dispatch/combine einsums (baseline — 2TECd flops
+    # and (T,E,C) tensors per chunk). "sort": argsort-based gather/scatter
+    # routing — O(TKd) data movement, no dispatch flops (§Perf optimization).
+    routing: str = "onehot"
+
+    @property
+    def enabled(self) -> bool:
+        return self.num_experts > 0
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description for the generic pattern decoder."""
+
+    name: str
+    arch_type: str                 # dense | moe | ssm | hybrid | audio | vlm
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    pattern: Tuple[LayerSpec, ...]
+    repeats: int
+    tail: Tuple[LayerSpec, ...] = ()
+    head_dim: int = 0              # 0 -> d_model // num_heads
+    moe: MoEConfig = field(default_factory=MoEConfig)
+    qk_norm: bool = False
+    norm_eps: float = 1e-6
+    rope_theta: float = 10_000.0
+    tie_embeddings: bool = True
+    # Modality frontend stub: None | "audio" | "vision".  When set,
+    # input_specs() provides precomputed frame/patch embeddings in addition to
+    # token ids (early fusion), and the model consumes them directly.
+    frontend: Optional[str] = None
+    frontend_tokens: int = 0       # number of prefix embedding tokens
+    # Whether decode memory/compute is sub-quadratic enough for long_500k.
+    supports_long_decode: bool = False
+    # §Perf knob: pin a sharding constraint on each mixer/ffn output (the
+    # tensor-parallel boundary) so the TP all-reduce happens there, in the
+    # compute dtype, instead of being sunk past fp32 converts by SPMD.
+    tp_out_constraint: bool = False
+    # xLSTM / RG-LRU internals
+    conv_width: int = 4            # short conv width for slstm / rglru blocks
+    lru_d: int = 0                 # RG-LRU recurrent width (0 -> d_model)
+    expansion: float = 2.0         # internal up-projection factor for mlstm/rglru
+    citation: str = ""
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.num_heads % self.num_kv_heads != 0:
+            raise ValueError("num_heads must be divisible by num_kv_heads")
+        if len(self.layers()) != self.num_layers:
+            raise ValueError(
+                f"{self.name}: pattern({len(self.pattern)})x{self.repeats}"
+                f"+tail({len(self.tail)}) != derived num_layers"
+            )
+
+    # -- derived ------------------------------------------------------------
+    @property
+    def num_layers(self) -> int:
+        return len(self.pattern) * self.repeats + len(self.tail)
+
+    def layers(self) -> Tuple[LayerSpec, ...]:
+        return self.pattern * self.repeats + self.tail
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded so it shards cleanly 16-way and tiles the MXU."""
+        return _round_up(self.vocab_size, 128)
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def lru_width(self) -> int:
+        return self.lru_d or self.d_model
+
+    # -- bookkeeping ----------------------------------------------------------
+    def param_count(self) -> int:
+        """Exact parameter count via ``jax.eval_shape`` over the real init
+        (no allocation; late import avoids a configs<->models cycle)."""
+        from repro.models.model import count_params  # noqa: PLC0415
+        return count_params(self)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only routed experts) — the N in the
+        6ND MODEL_FLOPS roofline term."""
+        if not self.moe.enabled:
+            return self.param_count()
+        m = self.moe
+        n_moe_layers = sum(1 for s in self.layers() if s.ffn == "moe")
+        inactive = n_moe_layers * (m.num_experts - m.top_k) * 3 * self.d_model * m.expert_d_ff
+        return self.param_count() - inactive
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+INPUT_SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4_096, 256, "train"),
+    ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    ShapeConfig("long_500k", 524_288, 1, "decode"),
+)
+
+SHAPES = {s.name: s for s in INPUT_SHAPES}
+
+
+# ---------------------------------------------------------------------------
+# Federated algorithm config
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FedConfig:
+    """One federated round = ``clients_per_round`` clients x ``local_steps``."""
+
+    algorithm: str = "fedpa"       # fedavg | fedpa
+    clients_per_round: int = 16
+    local_steps: int = 8           # K: SGD steps per client per round
+    # --- FedPA/IASG (Algorithm 4) ---
+    burn_in_steps: int = 4         # B: per-round local burn-in steps
+    steps_per_sample: int = 2      # K_s: IASG window
+    shrinkage_rho: float = 0.1     # rho from Theorem 3
+    # --- optimizers ---
+    server_opt: str = "sgdm"       # sgd | sgdm | adam | adagrad | yogi
+    server_lr: float = 0.5
+    server_momentum: float = 0.9
+    client_opt: str = "sgdm"
+    client_lr: float = 0.01
+    client_momentum: float = 0.9
+    # burn-in *rounds* (run FedPA in FedAvg regime for first R rounds)
+    burn_in_rounds: int = 0
+    delta_dtype: str = "float32"
+    # FedPA: absorb samples into the online/any-time DP as they are produced
+    # (Appendix C) instead of stacking them first — saves the l x d sample
+    # buffer on the clients.
+    streaming_dp: bool = False
+    # MIME (Karimireddy et al. 2020): scale of the frozen server-momentum
+    # term mixed into local client steps.
+    mime_beta: float = 0.9
+
+    def __post_init__(self):
+        if self.algorithm not in ("fedavg", "fedpa", "mime"):
+            raise ValueError(f"unknown algorithm {self.algorithm!r}")
+        if self.algorithm == "fedpa":
+            if self.num_samples < 1:
+                raise ValueError(
+                    "fedpa needs local_steps > burn_in_steps + steps_per_sample"
+                )
+
+    @property
+    def num_samples(self) -> int:
+        """l: posterior samples per client per round (one per IASG window)."""
+        if self.algorithm != "fedpa":
+            return 0
+        return (self.local_steps - self.burn_in_steps) // self.steps_per_sample
+
+
+# ---------------------------------------------------------------------------
+# Mesh config
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...] = (16, 16)
+    axes: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def num_devices(self) -> int:
+        return math.prod(self.shape)
+
+    @property
+    def data_extent(self) -> int:
+        """Total client-parallel extent (pod x data)."""
+        n = 1
+        for ax, s in zip(self.axes, self.shape):
+            if ax in ("pod", "data"):
+                n *= s
+        return n
+
+    @property
+    def model_extent(self) -> int:
+        for ax, s in zip(self.axes, self.shape):
+            if ax == "model":
+                return s
+        return 1
+
+
+SINGLE_POD = MeshConfig((16, 16), ("data", "model"))
+MULTI_POD = MeshConfig((2, 16, 16), ("pod", "data", "model"))
+
+
+def replace(cfg, **kw):
+    """dataclasses.replace re-export for convenience."""
+    return dataclasses.replace(cfg, **kw)

@@ -1,0 +1,23 @@
+"""FedLM-100M — the framework's own ~100M-param dense decoder used by the
+end-to-end federated-training example (examples/train_lm_federated.py).
+
+Not part of the assigned pool; sized so a few hundred federated rounds run on
+modest hardware while exercising the exact same code paths as the 34B archs.
+"""
+from repro.configs.base import LayerSpec, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="fedlm-100m",
+        arch_type="dense",
+        d_model=768,
+        num_heads=12,
+        num_kv_heads=4,
+        d_ff=2048,
+        vocab_size=32_768,
+        pattern=(LayerSpec(mixer="attn", ffn="dense"),),
+        repeats=12,
+        qk_norm=True,
+        citation="this framework",
+    )

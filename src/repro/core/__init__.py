@@ -1,0 +1,38 @@
+"""The paper's primary contribution: federated posterior averaging.
+
+Layers (bottom-up): tree_math -> shrinkage/dp_delta/posterior/iasg
+(the posterior machinery) -> client/server (Algorithms 1-3) ->
+round (simulation) / sharded_round (multi-pod SPMD).
+"""
+from repro.core.client import make_client_update  # noqa: F401
+from repro.core.diagnostics import (  # noqa: F401
+    bias_variance,
+    effective_sample_size,
+    ess_from_losses,
+)
+from repro.core.dp_delta import (  # noqa: F401
+    DPState,
+    dp_delta,
+    fedavg_delta,
+    online_dp_delta,
+    online_dp_init,
+    online_dp_update,
+)
+from repro.core.iasg import IASGResult, iasg_sample, sgd_steps  # noqa: F401
+from repro.core.posterior import (  # noqa: F401
+    QuadraticClient,
+    client_from_data,
+    fedavg_fixed_point,
+    global_posterior_mode,
+    global_quadratic,
+)
+from repro.core.round import FedSim  # noqa: F401
+from repro.core.server import (  # noqa: F401
+    ServerState,
+    aggregate_deltas,
+    aggregate_deltas_list,
+    init_server_state,
+    server_update,
+)
+from repro.core.sharded_round import default_placement, make_fed_round  # noqa: F401
+from repro.core.shrinkage import dense_delta, shrinkage_cov  # noqa: F401

@@ -1,0 +1,42 @@
+"""Sampler-quality diagnostics (Appendix A.2)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def effective_sample_size(log_weights: jnp.ndarray) -> jnp.ndarray:
+    """ESS = (sum w)^2 / sum w^2 with w given in log-space.
+
+    The paper weighs samples proportionally to their posterior probability,
+    i.e. log w_j = -loss(theta_j); computed with logsumexp stabilization.
+    """
+    lse1 = jax.scipy.special.logsumexp(log_weights)
+    lse2 = jax.scipy.special.logsumexp(2.0 * log_weights)
+    return jnp.exp(2.0 * lse1 - lse2)
+
+
+def ess_from_losses(losses: jnp.ndarray) -> jnp.ndarray:
+    """ESS of samples whose losses (negative log posteriors) are given."""
+    return effective_sample_size(-losses)
+
+
+def sample_autocorr(samples: jnp.ndarray, lag: int = 1) -> jnp.ndarray:
+    """Mean lag-k autocorrelation across dimensions of (l, d) samples."""
+    x = samples - samples.mean(axis=0)
+    num = jnp.sum(x[:-lag] * x[lag:], axis=0)
+    den = jnp.sum(x * x, axis=0) + 1e-30
+    return jnp.mean(num / den)
+
+
+def bias_variance(estimates: jnp.ndarray, exact: jnp.ndarray):
+    """Empirical bias L2-norm and covariance Frobenius norm (Fig. 3 metrics).
+
+    ``estimates``: (n_trials, d) independent estimates of the same exact (d,)
+    quantity (a client delta). Returns (||bias||_2, ||Cov||_F).
+    """
+    mean = estimates.mean(axis=0)
+    bias = jnp.linalg.norm(mean - exact)
+    centered = estimates - mean
+    cov = centered.T @ centered / max(estimates.shape[0] - 1, 1)
+    return bias, jnp.linalg.norm(cov)

@@ -1,0 +1,191 @@
+"""Sherman-Morrison dynamic program for FedPA client deltas (Appendix C).
+
+Computes
+
+    Delta_hat_l = Sigma_hat_l^{-1} (x0 - xbar_l)
+
+in O(l^2 d) time and O(l d) memory, never materializing a d x d matrix,
+where Sigma_hat_l is the shrinkage covariance of the l posterior samples
+(see ``repro.core.shrinkage``). Works on arbitrary parameter pytrees; the
+history {u_k}, {v_k} is kept with a stacked leading sample axis per leaf so
+each leaf stays in its own (sharded) layout.
+
+Recurrences implemented (paper eqs. 21-28), with
+u_t = x_t - xbar_{t-1}, gamma_t = (t-1) rho / t, v_t = Sigma_tilde_{t-1}^{-1} u_t:
+
+    v_t     = u_t - sum_{k=2}^{t-1} c_k (v_k . u_t) v_k,   c_k = gamma_k / (1 + gamma_k a_k)
+    a_t     = u_t . v_t
+    Delta~_t = Delta~_{t-1} - [1 + gamma_t (t b_t - a_t) / (1 + gamma_t a_t)] v_t / t,
+               b_t = u_t . Delta~_{t-1}
+    Delta^_t = Delta~_t / rho_t
+
+Two implementations share the math:
+  * ``dp_delta``      — samples known up front (stacked trees), Python loop
+                        over the static sample count; used inside the jitted
+                        federated round.
+  * ``OnlineDP``      — streaming any-time state (init/update), used by the
+                        serving-style example and mirrored by the Pallas
+                        kernel in ``repro.kernels.fedpa_dp``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tree_math as tm
+from repro.core.shrinkage import gamma_t, rho_l
+
+
+def fedavg_delta(x0, x_final):
+    """FedAvg's (biased) client delta: Delta = I (theta_0 - theta_K).
+
+    This is exactly ``dp_delta`` with a single sample (or rho -> 0): FedPA
+    with identity covariance — the paper's Section 4 special-case claim,
+    asserted in tests/test_dp_delta.py.
+    """
+    return tm.tsub(x0, x_final)
+
+
+def dp_delta(x0, samples, rho, return_mean=False):
+    """Delta_hat_l from stacked posterior samples.
+
+    Args:
+      x0: parameter pytree (the server state broadcast this round).
+      samples: pytree with leading sample axis ``l`` on every leaf.
+      rho: shrinkage parameter in [0, inf); rho=0 reduces to FedAvg-on-mean.
+      return_mean: also return the sample mean xbar_l.
+
+    Returns Delta_hat_l as a pytree shaped like x0 (and optionally xbar_l).
+    """
+    ell = jax.tree_util.tree_leaves(samples)[0].shape[0]
+    x1 = tm.tindex(samples, 0)
+    xbar = x1
+    delta = tm.tsub(x0, x1)            # Delta~_1 (Sigma_tilde_1 = I)
+    vs, cs = [], []
+    for t in range(2, ell + 1):
+        x_t = tm.tindex(samples, t - 1)
+        u = tm.tsub(x_t, xbar)
+        # v_t = Sigma_tilde_{t-1}^{-1} u_t via the accumulated rank-1 history
+        v = u
+        for v_k, c_k in zip(vs, cs):
+            coef = c_k * tm.tvdot(v_k, u)
+            v = tm.taxpy(-coef, v_k, v)
+        g = gamma_t(t, rho)
+        a = tm.tvdot(u, v)
+        b = tm.tvdot(u, delta)
+        scale = (1.0 + g * (t * b - a) / (1.0 + g * a)) / t
+        delta = tm.taxpy(-scale, v, delta)
+        vs.append(v)
+        cs.append(g / (1.0 + g * a))
+        xbar = tm.taxpy(1.0 / t, u, xbar)
+    delta = tm.tscale(1.0 / rho_l(ell, rho), delta)
+    if return_mean:
+        return delta, xbar
+    return delta
+
+
+# ---------------------------------------------------------------------------
+# Streaming / any-time version
+# ---------------------------------------------------------------------------
+
+class DPState(NamedTuple):
+    """Any-time DP state after ``t`` samples (paper: the O(l d) DP tuple)."""
+
+    t: jnp.ndarray          # i32 scalar, number of samples absorbed
+    xbar: object            # running sample mean (tree)
+    delta_tilde: object     # Delta~_t (tree)
+    v_hist: object          # tree, leading axis ell_max: v_2..v_t in slots 0..t-2
+    c_hist: jnp.ndarray     # (ell_max,) combine coefficients c_k
+    x0: object              # broadcast server state (tree)
+
+    @property
+    def delta(self):
+        """Delta_hat_t — best any-time estimate given samples so far."""
+        raise AttributeError("use online_dp_delta(state, rho)")
+
+
+def online_dp_init(x0, ell_max: int, dtype=jnp.float32) -> DPState:
+    """Pre-sample state (t=0). ``ell_max`` bounds the history buffers so the
+    update is usable as a ``lax.scan`` body with static shapes."""
+    zeros = tm.tzeros_like(x0, dtype)
+    v_hist = tm.tmap(
+        lambda z: jnp.zeros((max(ell_max - 1, 1),) + z.shape, dtype), zeros
+    )
+    return DPState(
+        t=jnp.zeros((), jnp.int32),
+        xbar=zeros,
+        delta_tilde=zeros,
+        v_hist=v_hist,
+        c_hist=jnp.zeros((max(ell_max - 1, 1),), dtype),
+        x0=tm.tcast(x0, dtype),
+    )
+
+
+def online_dp_update(state: DPState, x_t, rho) -> DPState:
+    """Absorb one posterior sample. Traceable (lax.cond over the t=1 case)."""
+    x_t = tm.tcast(x_t, state.c_hist.dtype)
+    t_new = state.t + 1
+
+    def first(st: DPState) -> DPState:
+        return st._replace(
+            t=t_new, xbar=x_t, delta_tilde=tm.tsub(st.x0, x_t)
+        )
+
+    def rest(st: DPState) -> DPState:
+        tf = t_new.astype(st.c_hist.dtype)
+        u = tm.tsub(x_t, st.xbar)
+        # dots_k = v_k . u for the whole history at once, masked to k <= t
+        dots = _hist_dots(st.v_hist, u)
+        n_hist = st.c_hist.shape[0]
+        mask = jnp.arange(n_hist) < (st.t - 1)
+        coefs = jnp.where(mask, st.c_hist * dots, 0.0)
+        v = _hist_combine(u, st.v_hist, coefs)
+        g = (tf - 1.0) * rho / tf
+        a = tm.tvdot(u, v)
+        b = tm.tvdot(u, st.delta_tilde)
+        scale = (1.0 + g * (tf * b - a) / (1.0 + g * a)) / tf
+        delta_tilde = tm.taxpy(-scale, v, st.delta_tilde)
+        xbar = tm.taxpy(1.0 / tf, u, st.xbar)
+        v_hist = tm.tdynamic_update(st.v_hist, v, st.t - 1)
+        c_hist = jax.lax.dynamic_update_index_in_dim(
+            st.c_hist, g / (1.0 + g * a), st.t - 1, axis=0
+        )
+        return st._replace(
+            t=t_new, xbar=xbar, delta_tilde=delta_tilde, v_hist=v_hist,
+            c_hist=c_hist,
+        )
+
+    return jax.lax.cond(state.t == 0, first, rest, state)
+
+
+def online_dp_delta(state: DPState, rho):
+    """Delta_hat_t = Delta~_t / rho_t — the any-time estimate.
+
+    With t=0 this returns zeros; with t=1 it returns x0 - x1 == the FedAvg
+    delta (the paper's any-time property).
+    """
+    tf = jnp.maximum(state.t, 1).astype(state.c_hist.dtype)
+    r = 1.0 / (1.0 + (tf - 1.0) * rho)
+    return tm.tscale(1.0 / r, state.delta_tilde)
+
+
+def _hist_dots(v_hist, u):
+    """dots[k] = <v_hist[k], u> summed across leaves -> (ell_max-1,)."""
+    leaves_v = jax.tree_util.tree_leaves(v_hist)
+    leaves_u = jax.tree_util.tree_leaves(u)
+    dt = jnp.promote_types(leaves_u[0].dtype, jnp.float32)
+    acc = 0.0
+    for vh, ul in zip(leaves_v, leaves_u):
+        acc = acc + jnp.einsum("k...,...->k", vh.astype(dt), ul.astype(dt))
+    return acc
+
+
+def _hist_combine(u, v_hist, coefs):
+    """u - sum_k coefs[k] * v_hist[k], leafwise."""
+    def leaf(ul, vh):
+        c = coefs.reshape((-1,) + (1,) * ul.ndim)
+        return ul - jnp.sum(c * vh, axis=0)
+
+    return tm.tmap(leaf, u, v_hist)

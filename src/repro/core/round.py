@@ -1,0 +1,98 @@
+"""Single-process federated simulation (the paper's experimental regime).
+
+Drives Algorithm 1 with a Python loop over rounds and jitted client updates;
+used by the convergence tests, the Fig. 1 / Table 3 benchmarks, and the
+small examples. The production multi-pod path is ``sharded_round.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import FedConfig
+from repro.core.client import make_client_update
+from repro.core.server import (ServerState, aggregate_deltas_list,
+                               init_server_state, server_update)
+from repro.data.sampling import ClientSampler
+from repro.optim import get_optimizer
+
+
+@dataclasses.dataclass
+class FedSim:
+    """Generic federated simulation.
+
+    batch_fn(client_id, round_idx, num_steps) -> batches pytree with leading
+    step axis; grad_fn(params, batch) -> (loss, grads).
+    """
+
+    fed: FedConfig
+    grad_fn: Callable
+    batch_fn: Callable
+    num_clients: int
+    client_weights: Optional[np.ndarray] = None
+    seed: int = 0
+
+    def __post_init__(self):
+        self.sampler = ClientSampler(self.num_clients,
+                                     self.fed.clients_per_round, self.seed)
+        self.server_opt = get_optimizer(self.fed.server_opt,
+                                        self.fed.server_lr,
+                                        self.fed.server_momentum)
+        client_opt = get_optimizer(self.fed.client_opt, self.fed.client_lr,
+                                   self.fed.client_momentum)
+        self._update = jax.jit(
+            make_client_update(self.grad_fn, self.fed, client_opt)
+        )
+        # burn-in rounds run the FedAvg-regime update (Section 5.2)
+        if self.fed.algorithm == "fedpa" and self.fed.burn_in_rounds > 0:
+            avg = dataclasses.replace(self.fed, algorithm="fedavg")
+            self._burn_update = jax.jit(
+                make_client_update(self.grad_fn, avg, client_opt)
+            )
+        else:
+            self._burn_update = self._update
+
+    def init(self, params) -> ServerState:
+        return init_server_state(params, self.server_opt)
+
+    def _server_momentum(self, state: ServerState):
+        """Frozen server statistics shipped to MIME clients."""
+        opt = state.opt_state
+        if isinstance(opt, dict) and "m" in opt:
+            return opt["m"]
+        import repro.tree_math as tm
+        return tm.tzeros_like(state.params)
+
+    def round(self, state: ServerState, round_idx: int):
+        client_ids = self.sampler.sample(round_idx)
+        update = (self._burn_update if round_idx < self.fed.burn_in_rounds
+                  else self._update)
+        extra = ((self._server_momentum(state),)
+                 if self.fed.algorithm == "mime" else ())
+        deltas, losses = [], []
+        for cid in client_ids:
+            batches = self.batch_fn(int(cid), round_idx, self.fed.local_steps)
+            delta, m = update(state.params, batches, *extra)
+            deltas.append(delta)
+            losses.append(float(m["loss_last"]))
+        weights = (None if self.client_weights is None
+                   else [self.client_weights[int(c)] for c in client_ids])
+        mean_delta = aggregate_deltas_list(deltas, weights)
+        state = server_update(state, mean_delta, self.server_opt)
+        return state, {"client_loss": float(np.mean(losses))}
+
+    def run(self, params, num_rounds: int,
+            eval_fn: Optional[Callable] = None, eval_every: int = 1):
+        state = self.init(params)
+        history: List[dict] = []
+        for r in range(num_rounds):
+            state, metrics = self.round(state, r)
+            if eval_fn is not None and (r % eval_every == 0
+                                        or r == num_rounds - 1):
+                metrics = {**metrics, **eval_fn(state.params)}
+            metrics["round"] = r
+            history.append(metrics)
+        return state, history

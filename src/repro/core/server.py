@@ -1,0 +1,60 @@
+"""Server side of generalized federated optimization (Algorithm 1).
+
+The aggregated client delta is treated as a stochastic (pseudo-)gradient of
+the surrogate quadratic Q(theta) (Proposition 2) and fed to any server
+optimizer — SGD-M / Adam / Adagrad / Yogi, exactly the adaptive-FL framing
+of Reddi et al. (2020) that the paper builds on.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence
+
+import jax.numpy as jnp
+
+from repro.core import tree_math as tm
+from repro.optim import Optimizer
+
+
+class ServerState(NamedTuple):
+    params: object
+    opt_state: object
+    round: jnp.ndarray   # i32 scalar
+
+
+def init_server_state(params, server_opt: Optimizer) -> ServerState:
+    return ServerState(params, server_opt.init(params),
+                       jnp.zeros((), jnp.int32))
+
+
+def aggregate_deltas(deltas, weights: Optional[jnp.ndarray] = None):
+    """Weighted mean over the leading client axis of stacked deltas."""
+    if weights is None:
+        return tm.tmap(lambda d: jnp.mean(d, axis=0), deltas)
+    w = weights / jnp.sum(weights)
+    return tm.tmap(
+        lambda d: jnp.tensordot(w.astype(d.dtype), d, axes=1), deltas
+    )
+
+
+def aggregate_deltas_list(deltas: Sequence, weights=None):
+    """Same but for a Python list of per-client delta trees (simulation)."""
+    n = len(deltas)
+    if weights is None:
+        weights = [1.0 / n] * n
+    else:
+        tot = sum(weights)
+        weights = [w / tot for w in weights]
+    acc = tm.tscale(weights[0], deltas[0])
+    for w, d in zip(weights[1:], deltas[1:]):
+        acc = tm.taxpy(w, d, acc)
+    return acc
+
+
+def server_update(state: ServerState, mean_delta,
+                  server_opt: Optimizer) -> ServerState:
+    """theta <- SERVEROPT(theta, Delta). Deltas point along +grad, so they
+    plug directly into the (descent) optimizer update."""
+    updates, opt_state = server_opt.update(mean_delta, state.opt_state,
+                                           state.params)
+    params = tm.tmap(lambda p, u: p + u.astype(p.dtype), state.params, updates)
+    return ServerState(params, opt_state, state.round + 1)

@@ -1,0 +1,127 @@
+"""The production multi-pod federated round: one jitted SPMD program.
+
+The paper's communication pattern — broadcast theta, K isolated local steps
+per client, one O(d) delta aggregation — maps onto the TPU mesh as
+(DESIGN.md §3):
+
+  * ``parallel`` placement: clients are slices of the ("pod", "data") axes.
+    The client dimension is a ``vmap`` with ``spmd_axis_name`` set to the
+    client axes, so every per-client tensor (params copy, optimizer moments,
+    IASG samples, DP history) shards one-client-per-data-slice, and the only
+    cross-client collective is the delta mean — a single all-reduce of d
+    values per round, amortized over K local steps. This is the paper's
+    O(d)-communication claim made structural.
+
+  * ``sequential`` placement (>=10B archs): clients run one after another in
+    a ``lax.scan``, each using the whole mesh; the client-local batch shards
+    over ("pod", "data") and all parameter-shaped state (fp32 master, client
+    moments, IASG samples, DP vectors) is FSDP-sharded over data x model via
+    ``fsdp_constrain``, with a bf16 all-gather at each local step's compute
+    boundary (``tp_constrain``). This trades one weight all-gather per local
+    step for fitting O(l d) FedPA state in HBM.
+
+Both placements share the same client math (``make_client_update``); the
+server update runs once per round on the aggregated delta.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedConfig, ModelConfig
+from repro.core import tree_math as tm
+from repro.core.client import make_client_update
+from repro.core.server import ServerState, aggregate_deltas, server_update
+from repro.models.steps import lm_grad_fn
+from repro.optim import get_optimizer
+from repro.sharding import fsdp_constrain, tp_constrain
+
+
+def make_fed_round(
+    cfg: ModelConfig,
+    fed: FedConfig,
+    *,
+    placement: str = "parallel",
+    spmd_axes: Optional[Tuple[str, ...]] = None,
+    compute_dtype=jnp.bfloat16,
+    q_chunk: int = 1024,
+    remat: str = "full",
+    use_sampling: bool = True,
+) -> Callable:
+    """Build ``round_fn(server_state, client_batches) -> (state, metrics)``.
+
+    client_batches: {"tokens": (C, K, B_local, S+1) int32,
+                     ["frontend": (C, K, B_local, F, d)]}.
+    ``use_sampling=False`` gives the burn-in-round variant (FedAvg regime)
+    of the same FedPA config — used for the first ``burn_in_rounds`` rounds.
+    """
+    eff_fed = fed
+    if not use_sampling and fed.algorithm == "fedpa":
+        eff_fed = dataclasses.replace(fed, algorithm="fedavg")
+
+    grad_fn = lm_grad_fn(cfg, compute_dtype=compute_dtype, q_chunk=q_chunk,
+                         remat=remat)
+    client_opt = get_optimizer(eff_fed.client_opt, eff_fed.client_lr,
+                               eff_fed.client_momentum)
+    server_opt = get_optimizer(eff_fed.server_opt, eff_fed.server_lr,
+                               eff_fed.server_momentum)
+    client_update = make_client_update(grad_fn, eff_fed, client_opt)
+
+    if placement == "parallel":
+
+        def round_fn(state: ServerState, client_batches):
+            vm = jax.vmap(client_update, in_axes=(None, 0),
+                          spmd_axis_name=spmd_axes)
+            deltas, metrics = vm(state.params, client_batches)
+            mean_delta = aggregate_deltas(deltas)
+            new_state = server_update(state, mean_delta, server_opt)
+            return new_state, {
+                "loss_first": jnp.mean(metrics["loss_first"]),
+                "loss_last": jnp.mean(metrics["loss_last"]),
+            }
+
+        return round_fn
+
+    if placement != "sequential":
+        raise ValueError(f"unknown placement {placement!r}")
+
+    def fsdp_client_update(master_params, batches):
+        """One client with FSDP-sharded state; compute on gathered bf16."""
+        # the all-gather boundary: compute params are tensor-parallel only
+        gathered = tp_constrain(tm.tcast(master_params, compute_dtype))
+        delta, metrics = client_update(gathered, batches)
+        return fsdp_constrain(delta, like_params=master_params), metrics
+
+    def round_fn(state: ServerState, client_batches):
+        master = fsdp_constrain(state.params)
+
+        def body(acc, batches):
+            delta, metrics = fsdp_client_update(master, batches)
+            acc = tm.tadd(acc, delta)
+            return acc, metrics
+
+        C = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
+        zero = fsdp_constrain(
+            tm.tzeros_like(state.params, jnp.dtype(eff_fed.delta_dtype)),
+            like_params=state.params,
+        )
+        acc, metrics = jax.lax.scan(body, zero, client_batches)
+        mean_delta = tm.tscale(1.0 / C, acc)
+        new_state = server_update(state._replace(params=master), mean_delta,
+                                  server_opt)
+        new_state = new_state._replace(params=fsdp_constrain(new_state.params))
+        return new_state, {
+            "loss_first": jnp.mean(metrics["loss_first"]),
+            "loss_last": jnp.mean(metrics["loss_last"]),
+        }
+
+    return round_fn
+
+
+def default_placement(cfg: ModelConfig, threshold: int = 10_000_000_000) -> str:
+    """parallel for <10B-param archs (one client per data slice fits),
+    sequential-FSDP otherwise."""
+    return "parallel" if cfg.param_count() < threshold else "sequential"

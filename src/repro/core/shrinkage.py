@@ -1,0 +1,92 @@
+"""Shrinkage covariance estimation (Theorem 3 / Appendix C.1).
+
+The Ledoit-Wolf-style estimator
+
+    Sigma_hat_l = rho_l * I + (1 - rho_l) * S_l,   rho_l = 1 / (1 + (l-1) rho)
+
+is the unique shrinkage schedule for which the *unnormalized* matrix
+
+    Sigma_tilde_t = I + rho (t-1) S_t
+
+admits exact rank-1 updates
+
+    Sigma_tilde_t = Sigma_tilde_{t-1} + gamma_t u_t u_t^T,
+    u_t = x_t - xbar_{t-1},   gamma_t = (t-1) rho / t,
+
+which is what makes the O(l^2 d) Sherman-Morrison dynamic program of
+``dp_delta`` possible. This module holds the dense/closed-form pieces used by
+the DP, the tests, and the (offline) near-optimal-rho estimators.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rho_l(ell, rho):
+    """Shrinkage weight on the identity after ``ell`` samples."""
+    return 1.0 / (1.0 + (ell - 1.0) * rho)
+
+
+def gamma_t(t, rho):
+    """Rank-1 update coefficient: Sigma_tilde_t - Sigma_tilde_{t-1} = gamma_t u u^T."""
+    return (t - 1.0) * rho / t
+
+
+def sample_mean_cov(samples: jnp.ndarray):
+    """Sample mean and (unbiased, /(l-1)) sample covariance of (l, d) samples."""
+    ell = samples.shape[0]
+    mean = jnp.mean(samples, axis=0)
+    centered = samples - mean
+    denom = max(ell - 1, 1)
+    cov = centered.T @ centered / denom
+    return mean, cov
+
+
+def shrinkage_cov(samples: jnp.ndarray, rho: float) -> jnp.ndarray:
+    """Dense Sigma_hat_l = rho_l I + (1 - rho_l) S_l.  O(l d^2) — tests only."""
+    ell, d = samples.shape
+    _, cov = sample_mean_cov(samples)
+    r = rho_l(ell, rho)
+    return r * jnp.eye(d, dtype=cov.dtype) + (1.0 - r) * cov
+
+
+def shrinkage_cov_unnormalized(samples: jnp.ndarray, rho: float) -> jnp.ndarray:
+    """Dense Sigma_tilde_t = I + rho (t-1) S_t (the rank-1-recursive form)."""
+    ell, d = samples.shape
+    _, cov = sample_mean_cov(samples)
+    return jnp.eye(d, dtype=cov.dtype) + rho * (ell - 1.0) * cov
+
+
+def dense_delta(x0: jnp.ndarray, samples: jnp.ndarray, rho: float) -> jnp.ndarray:
+    """O(d^3) oracle: Delta_hat_l = Sigma_hat_l^{-1} (x0 - xbar_l).
+
+    This is the quantity Theorem 3 computes in O(l^2 d); the DP implementation
+    is asserted allclose against this in tests and benchmarked against it in
+    benchmarks/table1_client_cost.py.
+    """
+    mean = jnp.mean(samples, axis=0)
+    sigma = shrinkage_cov(samples, rho)
+    return jnp.linalg.solve(sigma, x0 - mean)
+
+
+# ---------------------------------------------------------------------------
+# Near-optimal shrinkage selection (Chen et al. 2010), offline alternative to
+# committing to a fixed rho (Appendix C, "Optimal selection of rho").
+# ---------------------------------------------------------------------------
+
+def oas_rho(samples: jnp.ndarray) -> jnp.ndarray:
+    """Oracle-Approximating Shrinkage weight rho_l* in [0, 1] (Chen et al. 2010).
+
+    Returns the *normalized* shrinkage weight on the identity (i.e. the thing
+    ``rho_l`` computes from the paper's rho); callers can invert the map
+    rho = (1/rho_l - 1)/(l - 1) if they need the paper's parameterization.
+    """
+    ell, d = samples.shape
+    mean = jnp.mean(samples, axis=0)
+    c = samples - mean
+    s = c.T @ c / max(ell - 1, 1)
+    tr_s = jnp.trace(s)
+    tr_s2 = jnp.sum(s * s)
+    num = (1.0 - 2.0 / d) * tr_s2 + tr_s**2
+    den = (ell + 1.0 - 2.0 / d) * (tr_s2 - tr_s**2 / d)
+    return jnp.clip(num / jnp.maximum(den, 1e-30), 0.0, 1.0)

@@ -1,0 +1,8 @@
+"""Back-compat shim: the pytree vector-space ops live at ``repro.tree_math``
+(top level, import-cycle-free — repro.optim needs them without touching
+repro.core's __init__)."""
+from repro.tree_math import *          # noqa: F401,F403
+from repro.tree_math import (          # noqa: F401
+    tadd, taxpy, tcast, tdynamic_index, tdynamic_update, tindex, tmap,
+    tnorm, tree_bytes, tree_size, tscale, tstack, tsub, tvdot, tzeros_like,
+)

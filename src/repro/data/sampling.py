@@ -1,0 +1,29 @@
+"""Client sampling for the cross-device setting: each round draws M of N
+clients uniformly without replacement, deterministically per (seed, round) —
+the stateless-clients regime the paper targets (the average client
+participates in ~a single round)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+class ClientSampler:
+    def __init__(self, num_clients: int, clients_per_round: int, seed: int = 0):
+        if clients_per_round > num_clients:
+            raise ValueError("clients_per_round > num_clients")
+        self.num_clients = num_clients
+        self.clients_per_round = clients_per_round
+        self.seed = seed
+
+    def sample(self, round_idx: int) -> np.ndarray:
+        rng = np.random.default_rng(
+            np.random.SeedSequence(entropy=self.seed, spawn_key=(round_idx,))
+        )
+        return rng.choice(self.num_clients, size=self.clients_per_round,
+                          replace=False)
+
+    def participation_counts(self, num_rounds: int) -> np.ndarray:
+        counts = np.zeros(self.num_clients, dtype=np.int64)
+        for r in range(num_rounds):
+            counts[self.sample(r)] += 1
+        return counts

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def dp_reduce_ref(u, delta, V):
+    """dots_k = <v_k, u>, uu = <u,u>, ud = <u,delta>  (fp32)."""
+    uf = u.astype(jnp.float32)
+    df = delta.astype(jnp.float32)
+    Vf = V.astype(jnp.float32)
+    return Vf @ uf, jnp.dot(uf, uf), jnp.dot(uf, df)
+
+
+def dp_map_ref(w, s, u, delta, V):
+    """v = u - sum_k w_k v_k;  delta' = delta - s v."""
+    uf = u.astype(jnp.float32)
+    df = delta.astype(jnp.float32)
+    Vf = V.astype(jnp.float32)
+    v = uf - w.astype(jnp.float32) @ Vf
+    return v.astype(u.dtype), (df - s * v).astype(delta.dtype)
+
+
+def dp_step_ref(u, delta, V, c_hist, t, rho):
+    """One full DP step (eqs. 22-23) in dense jnp — see ops.dp_step."""
+    dots, uu, ud = dp_reduce_ref(u, delta, V)
+    n_hist = c_hist.shape[0]
+    mask = jnp.arange(n_hist) < (t - 1)
+    w = jnp.where(mask, c_hist * dots, 0.0)
+    tf = jnp.asarray(t, jnp.float32)
+    g = (tf - 1.0) * rho / tf
+    a = uu - jnp.sum(w * dots)          # <u, v> via conjugacy
+    b = ud
+    scale = (1.0 + g * (tf * b - a) / (1.0 + g * a)) / tf
+    v, delta_new = dp_map_ref(w, scale, u, delta, V)
+    c_new = g / (1.0 + g * a)
+    return v, delta_new, a, c_new
+
+
+def swa_decode_ref(q, k, v, slot_pos, pos, *, window: int = 0):
+    """Masked softmax decode attention. Shapes as in ops.swa_decode."""
+    B, KV, G, dh = q.shape
+    qf = q.astype(jnp.float32)
+    kf = jnp.swapaxes(k, 1, 2).astype(jnp.float32)     # (B, KV, L, dh)
+    vf = jnp.swapaxes(v, 1, 2).astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bhld->bhgl", qf, kf) / jnp.sqrt(jnp.float32(dh))
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if window > 0:
+        valid = valid & (slot_pos > pos - window)
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgl,bhld->bhgd", p, vf)
+    return out.astype(q.dtype)

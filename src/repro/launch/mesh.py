@@ -1,0 +1,49 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before first jax use.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+from repro.configs.base import MULTI_POD, SINGLE_POD, MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips with a leading "pod"
+    axis. Axis semantics: ("pod",) "data" carry federated clients / batch;
+    "model" is tensor/expert parallel.
+
+    With 512 placeholder devices forced (the dry-run), the single-pod mesh
+    uses the first 256 — pod 0."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import (launch/dryrun.py does this)"
+        )
+    return jax.make_mesh(shape, axes, devices=devices,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def mesh_from_config(mc: MeshConfig):
+    return jax.make_mesh(mc.shape, mc.axes,
+                         axis_types=(AxisType.Auto,) * len(mc.axes))
+
+
+def mesh_config(multi_pod: bool = False) -> MeshConfig:
+    return MULTI_POD if multi_pod else SINGLE_POD
+
+
+def make_host_mesh():
+    """Whatever devices exist, as a 1D ("data",) mesh — CPU simulation."""
+    n = jax.device_count()
+    return jax.make_mesh((n,), ("data",), axis_types=(AxisType.Auto,))

@@ -1,0 +1,71 @@
+"""Re-derive roofline reports from saved compiled-HLO dumps — the §Perf
+iteration loop's fast path: analyzer changes re-parse in seconds instead of
+recompiling the 80-combo sweep.
+
+  PYTHONPATH=src python -m repro.launch.reanalyze hlo_dumps/ --out rooflines.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import gzip
+import json
+import os
+
+from repro import configs
+from repro.configs.base import SHAPES
+from repro.launch.dryrun import default_fed_config
+from repro.core.sharded_round import default_placement
+from repro.sharding.hlo_cost import analyze
+from repro.sharding.roofline import derive, format_table
+
+
+def reanalyze_file(path: str) -> dict:
+    base = os.path.basename(path).replace(".hlo.gz", "")
+    parts = base.split("__")
+    arch, shape_name, mesh_name = parts[:3]
+    variant = "__".join(parts[3:])
+    cfg = configs.get_config(arch)
+    shape = SHAPES[shape_name]
+    chips = 512 if mesh_name == "2x16x16" else 256
+    with gzip.open(path, "rt") as f:
+        hlo = f.read()
+    res = analyze(hlo)
+    fed = default_fed_config()
+    eff_steps = 1
+    if shape.kind == "train":
+        eff_steps = fed.local_steps
+        if default_placement(cfg) == "sequential":
+            eff_steps *= fed.clients_per_round
+    rep = derive(arch, shape, cfg, mesh_name, chips,
+                 {"flops": res["flops"], "bytes accessed": res["bytes"]},
+                 res["collectives"], local_steps=eff_steps)
+    rec = rep.as_row()
+    rec["hlo_file"] = path
+    if variant:
+        rec["variant"] = variant
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("hlo_dir")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--variants", action="store_true",
+                    help="include §Perf variant dumps, not just baselines")
+    args = ap.parse_args()
+    rows = []
+    for fn in sorted(os.listdir(args.hlo_dir)):
+        if not fn.endswith(".hlo.gz"):
+            continue
+        if not args.variants and len(fn.replace(".hlo.gz", "").split("__")) > 3:
+            continue
+        rec = reanalyze_file(os.path.join(args.hlo_dir, fn))
+        rows.append(rec)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+    print(format_table(rows))
+
+
+if __name__ == "__main__":
+    main()

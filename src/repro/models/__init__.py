@@ -1,0 +1,18 @@
+from repro.models.model import (  # noqa: F401
+    DecodeState,
+    abstract_decode_state,
+    abstract_params,
+    count_params,
+    decode_step,
+    forward,
+    init_decode_state,
+    init_params,
+    prefill,
+)
+from repro.models.steps import (  # noqa: F401
+    centralized_train_step,
+    lm_grad_fn,
+    lm_loss,
+    prefill_step,
+    serve_step,
+)

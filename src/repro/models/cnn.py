@@ -1,0 +1,66 @@
+"""The paper's own EMNIST-62 model: 2x(conv 3x3 + maxpool) + 128-dense
+(TFF reference architecture, Reddi et al. 2020). Used by the Table-3-style
+simulated benchmark; dropout omitted (deterministic evaluation)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.emnist_cnn import CNNConfig
+
+
+def init_cnn_params(rng, cfg: CNNConfig, dtype=jnp.float32):
+    ks = jax.random.split(rng, 4)
+    c0, c1 = cfg.conv_channels
+    k = cfg.kernel_size
+    s = lambda fan: 1.0 / jnp.sqrt(fan)
+    # spatial size after two 'SAME' conv + 2x2 maxpool stages
+    side = cfg.image_size // 4
+    flat = side * side * c1
+    return {
+        "conv0": jax.random.normal(ks[0], (k, k, cfg.in_channels, c0), dtype) * s(k * k * cfg.in_channels),
+        "b0": jnp.zeros((c0,), dtype),
+        "conv1": jax.random.normal(ks[1], (k, k, c0, c1), dtype) * s(k * k * c0),
+        "b1": jnp.zeros((c1,), dtype),
+        "dense": jax.random.normal(ks[2], (flat, cfg.hidden), dtype) * s(flat),
+        "bd": jnp.zeros((cfg.hidden,), dtype),
+        "out": jax.random.normal(ks[3], (cfg.hidden, cfg.num_classes), dtype) * s(cfg.hidden),
+        "bo": jnp.zeros((cfg.num_classes,), dtype),
+    }
+
+
+def _conv(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + b
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def cnn_forward(params, x, cfg: CNNConfig):
+    """x: (B, H, W, C) -> logits (B, num_classes)."""
+    h = jax.nn.relu(_conv(x, params["conv0"], params["b0"]))
+    h = _maxpool2(h)
+    h = jax.nn.relu(_conv(h, params["conv1"], params["b1"]))
+    h = _maxpool2(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["dense"] + params["bd"])
+    return h @ params["out"] + params["bo"]
+
+
+def cnn_loss(params, batch, cfg: CNNConfig):
+    logits = cnn_forward(params, batch["x"], cfg)
+    labels = batch["y"]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def cnn_accuracy(params, x, y, cfg: CNNConfig):
+    return jnp.mean(jnp.argmax(cnn_forward(params, x, cfg), axis=-1) == y)

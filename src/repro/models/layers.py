@@ -1,0 +1,81 @@
+"""Common layers: RMSNorm, RoPE, SwiGLU FFN, causal conv."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    """RMSNorm with (1 + scale) weighting (gemma convention; scale init 0)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def group_norm_heads(x, scale, eps: float = 1e-6):
+    """Per-head RMS normalization for (..., H, dh) tensors (xLSTM blocks)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    out = out * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def rope(x, positions, theta: float = 10_000.0):
+    """Rotary embeddings. x: (..., S, H, dh), positions: (S,) or (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    # broadcast over heads: (..., S, 1, half)
+    angles = angles[..., None, :]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """SwiGLU FFN: silu(x Wg) * (x Wu) Wd."""
+    g = jax.nn.silu(x @ w_gate)
+    return (g * (x @ w_up)) @ w_down
+
+
+def causal_conv1d(x, kernel, state=None):
+    """Depthwise causal conv along the sequence axis.
+
+    x: (B, S, C), kernel: (W, C). With ``state`` (B, W-1, C) provided,
+    performs the streaming update (decode): returns (y, new_state) where
+    x has S=1. Without state, left-pads with zeros (train/prefill) and
+    returns (y, final_state).
+    """
+    w = kernel.shape[0]
+    if state is None:
+        pad = jnp.zeros(x.shape[:1] + (w - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+W-1, C)
+    y = sum(xp[:, i : i + x.shape[1], :] * kernel[i] for i in range(w))
+    new_state = xp[:, -(w - 1):, :] if w > 1 else jnp.zeros_like(pad)
+    return y.astype(x.dtype), new_state
+
+
+def softmax_cross_entropy(logits, targets, valid_vocab: int | None = None,
+                          mask=None):
+    """Mean token-level cross entropy. logits fp32 (B, S, V); targets int
+    (B, S). ``valid_vocab`` masks out padded vocab rows."""
+    logits = logits.astype(jnp.float32)
+    if valid_vocab is not None and valid_vocab < logits.shape[-1]:
+        pad = jnp.arange(logits.shape[-1]) >= valid_vocab
+        logits = jnp.where(pad, -1e30, logits)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,110 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma). [arXiv:2402.19427]
+
+The Real-Gated Linear Recurrent Unit is a *diagonal linear* recurrence
+
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+    a_t = exp(-c * softplus(Lambda) * r_t),
+    r_t = sigmoid(blockdiag(W_a) x_t + b_a),  i_t = sigmoid(blockdiag(W_x) x_t + b_x)
+
+TPU adaptation: linearity + diagonality means the whole sequence reduces
+with ``lax.associative_scan`` (log-depth parallel prefix) instead of a
+sequential loop — this is the Griffin paper's own TPU implementation
+strategy and what makes RG-LRU training seq-parallel. Decode is the single
+recurrence step with streaming conv state.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import causal_conv1d
+
+_C = 8.0          # Griffin's fixed decay sharpness
+_NB = 8           # gate projection block-diagonal blocks
+
+
+class RGLRUState(NamedTuple):
+    h: jnp.ndarray      # (B, e) recurrent state
+    conv: jnp.ndarray   # (B, cw-1, e) streaming conv state
+
+
+def _e(cfg: ModelConfig) -> int:
+    return int(cfg.expansion * (cfg.lru_d or cfg.d_model))
+
+
+def init_rglru_params(rng, cfg: ModelConfig, dtype=jnp.float32):
+    d, e = cfg.d_model, _e(cfg)
+    eb = e // _NB
+    ks = jax.random.split(rng, 6)
+    s = lambda fan: 1.0 / jnp.sqrt(fan)
+    return {
+        "w_gate": jax.random.normal(ks[0], (d, e), dtype) * s(d),
+        "w_x": jax.random.normal(ks[1], (d, e), dtype) * s(d),
+        "conv": jax.random.normal(ks[2], (cfg.conv_width, e), dtype) * s(cfg.conv_width),
+        "rg_a": jax.random.normal(ks[3], (_NB, eb, eb), dtype) * s(eb),
+        "b_a": jnp.zeros((e,), dtype),
+        "rg_x": jax.random.normal(ks[4], (_NB, eb, eb), dtype) * s(eb),
+        "b_x": jnp.zeros((e,), dtype),
+        # Lambda init so a^c in ~(0.9, 0.999) at r=1 (Griffin appendix)
+        "lam": jnp.linspace(0.5, 4.0, e).astype(dtype),
+        "w_down": jax.random.normal(ks[5], (e, d), dtype) * s(e),
+    }
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> RGLRUState:
+    e = _e(cfg)
+    return RGLRUState(
+        h=jnp.zeros((batch, e), dtype),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, e), dtype),
+    )
+
+
+def _blockdiag(x, w):
+    """x: (..., e) @ block-diagonal w: (nb, e/nb, e/nb) -> (..., e)."""
+    nb, eb, _ = w.shape
+    xs = x.reshape(x.shape[:-1] + (nb, eb))
+    ys = jnp.einsum("...ne,nef->...nf", xs, w)
+    return ys.reshape(x.shape)
+
+
+def _rglru_gates(p, xc):
+    """Per-step decay a_t (log-space) and gated input. xc: (..., e) fp32."""
+    r = jax.nn.sigmoid(_blockdiag(xc, p["rg_a"].astype(xc.dtype)) + p["b_a"])
+    i = jax.nn.sigmoid(_blockdiag(xc, p["rg_x"].astype(xc.dtype)) + p["b_x"])
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(xc.dtype)) * r
+    multiplier = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return jnp.exp(log_a), multiplier * i * xc
+
+
+def rglru_forward(p, x, cfg: ModelConfig, return_cache: bool = False):
+    """Full-sequence Griffin recurrent block. x: (B, S, d) -> (B, S, d)."""
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    xi = x @ p["w_x"]
+    xc, conv_state = causal_conv1d(xi, p["conv"])
+    a, b = _rglru_gates(p, xc.astype(jnp.float32))
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = h.astype(x.dtype)
+    y = (h * gate) @ p["w_down"]
+    state = RGLRUState(h[:, -1].astype(jnp.float32), conv_state) \
+        if return_cache else None
+    return y, state
+
+
+def rglru_decode(p, x, state: RGLRUState, cfg: ModelConfig):
+    """One-token step. x: (B, 1, d)."""
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    xi = x @ p["w_x"]
+    xc, conv_state = causal_conv1d(xi, p["conv"], state.conv)
+    a, b = _rglru_gates(p, xc[:, 0].astype(jnp.float32))
+    h = a * state.h.astype(jnp.float32) + b
+    y = (h[:, None, :].astype(x.dtype) * gate) @ p["w_down"]
+    return y, RGLRUState(h, conv_state)

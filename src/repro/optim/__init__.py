@@ -1,0 +1,17 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adagrad,
+    adam,
+    apply_updates,
+    get_optimizer,
+    sgd,
+    sgdm,
+    yogi,
+)
+from repro.optim.schedules import (  # noqa: F401
+    constant,
+    cosine_decay,
+    exponential_decay,
+    inverse_time_decay,
+    warmup_cosine,
+)

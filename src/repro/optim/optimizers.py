@@ -1,0 +1,129 @@
+"""Minimal optax-style optimizers (pure pytree transforms).
+
+The paper's Algorithm 1 needs both a CLIENTOPT (SGD / SGD-momentum) and a
+SERVEROPT (SGD-M for EMNIST/CIFAR, Adam for StackOverflow NWP, Adagrad for
+StackOverflow LR — Table 4). All five are implemented here; ``update``
+returns additive updates (params_new = params + updates), and the learning
+rate may be a scalar or a schedule ``fn(step) -> lr``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro import tree_math as tm
+
+Schedule = Union[float, Callable[[jnp.ndarray], jnp.ndarray]]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]   # (grads, state, params) -> (updates, state)
+
+
+def _lr_at(lr: Schedule, step):
+    return lr(step) if callable(lr) else lr
+
+
+def apply_updates(params, updates):
+    return tm.tmap(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def sgd(lr: Schedule) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        a = _lr_at(lr, state["step"])
+        return tm.tscale(-a, grads), {"step": state["step"] + 1}
+
+    return Optimizer(init, update)
+
+
+def sgdm(lr: Schedule, momentum: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32), "m": tm.tzeros_like(params)}
+
+    def update(grads, state, params=None):
+        m = tm.tmap(lambda mi, g: momentum * mi + g, state["m"], grads)
+        d = tm.tmap(lambda mi, g: momentum * mi + g, m, grads) if nesterov else m
+        a = _lr_at(lr, state["step"])
+        return tm.tscale(-a, d), {"step": state["step"] + 1, "m": m}
+
+    return Optimizer(init, update)
+
+
+def adam(lr: Schedule, b1: float = 0.9, b2: float = 0.99,
+         eps: float = 1e-3) -> Optimizer:
+    """Adam with the FL-style large epsilon default (Reddi et al. 2020)."""
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": tm.tzeros_like(params, jnp.float32),
+            "v": tm.tzeros_like(params, jnp.float32),
+        }
+
+    def update(grads, state, params=None):
+        t = state["step"] + 1
+        m = tm.tmap(lambda mi, g: b1 * mi + (1 - b1) * g, state["m"], grads)
+        v = tm.tmap(lambda vi, g: b2 * vi + (1 - b2) * g * g, state["v"], grads)
+        tf = t.astype(jnp.float32)
+        mhat = tm.tscale(1.0 / (1 - b1**tf), m)
+        vhat = tm.tscale(1.0 / (1 - b2**tf), v)
+        a = _lr_at(lr, state["step"])
+        upd = tm.tmap(lambda mi, vi: -a * mi / (jnp.sqrt(vi) + eps), mhat, vhat)
+        return upd, {"step": t, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adagrad(lr: Schedule, eps: float = 1e-5) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "v": tm.tzeros_like(params, jnp.float32)}
+
+    def update(grads, state, params=None):
+        v = tm.tmap(lambda vi, g: vi + g * g, state["v"], grads)
+        a = _lr_at(lr, state["step"])
+        upd = tm.tmap(lambda g, vi: -a * g / (jnp.sqrt(vi) + eps), grads, v)
+        return upd, {"step": state["step"] + 1, "v": v}
+
+    return Optimizer(init, update)
+
+
+def yogi(lr: Schedule, b1: float = 0.9, b2: float = 0.99,
+         eps: float = 1e-3) -> Optimizer:
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": tm.tzeros_like(params, jnp.float32),
+            "v": tm.tzeros_like(params, jnp.float32),
+        }
+
+    def update(grads, state, params=None):
+        t = state["step"] + 1
+        m = tm.tmap(lambda mi, g: b1 * mi + (1 - b1) * g, state["m"], grads)
+        v = tm.tmap(
+            lambda vi, g: vi - (1 - b2) * jnp.sign(vi - g * g) * g * g,
+            state["v"], grads,
+        )
+        a = _lr_at(lr, state["step"])
+        upd = tm.tmap(lambda mi, vi: -a * mi / (jnp.sqrt(jnp.abs(vi)) + eps), m, v)
+        return upd, {"step": t, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+_REGISTRY = {"sgd": sgd, "sgdm": sgdm, "adam": adam, "adagrad": adagrad,
+             "yogi": yogi}
+
+
+def get_optimizer(name: str, lr: Schedule, momentum: float = 0.9) -> Optimizer:
+    if name == "sgdm":
+        return sgdm(lr, momentum)
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown optimizer {name!r}; known: {list(_REGISTRY)}")
+    return _REGISTRY[name](lr)

@@ -1,0 +1,34 @@
+"""Learning-rate schedules (server O(1/t) decay is what the paper's
+Appendix A convergence discussion assumes; AFO baselines use exponential
+client decay)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def inverse_time_decay(lr: float, decay: float = 1.0):
+    """lr / (1 + decay * t) — the O(t^{-1}) schedule of Appendix A.1."""
+    return lambda step: lr / (1.0 + decay * step.astype(jnp.float32))
+
+
+def exponential_decay(lr: float, rate: float, every: int):
+    return lambda step: lr * rate ** (step.astype(jnp.float32) / every)
+
+
+def cosine_decay(lr: float, total_steps: int, floor: float = 0.0):
+    def fn(step):
+        frac = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        return floor + (lr - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return fn
+
+
+def warmup_cosine(lr: float, warmup: int, total_steps: int, floor: float = 0.0):
+    cos = cosine_decay(lr, max(total_steps - warmup, 1), floor)
+    def fn(step):
+        s = step.astype(jnp.float32)
+        return jnp.where(s < warmup, lr * (s + 1) / warmup, cos(step - warmup))
+    return fn

@@ -1,0 +1,10 @@
+from repro.sharding.rules import (  # noqa: F401
+    axis_rules,
+    constrain,
+    current_mesh,
+    fsdp_constrain,
+    fsdp_shardings,
+    logical_spec,
+    param_shardings,
+    tp_constrain,
+)

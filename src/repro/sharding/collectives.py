@@ -1,0 +1,131 @@
+"""Parse collective operations out of lowered/compiled HLO text.
+
+``compiled.cost_analysis()`` reports FLOPs and bytes but not collective
+traffic, so the roofline's collective term comes from scanning the (post-
+SPMD-partitioning) HLO for all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops and summing their result-shape bytes.
+Convention: result bytes = bytes received per participating device per op
+execution (all-gather's result is the gathered tensor, reduce-scatter's the
+scattered shard — consistent with "bytes over the link" up to the usual
+ring-algorithm factor (p-1)/p ~ 1, which we fold into the hardware constant).
+Ops inside loop/scan bodies appear once in HLO but execute trip-count times;
+we scale by the enclosing while-loop trip count when it is statically
+recoverable from the HLO (the common case for lax.scan).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+COLLECTIVE_KINDS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+}
+
+# one typed array inside an HLO shape, e.g. f32[16,1024]{1,0}
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# an HLO instruction: "%name = <shape> <opcode>(..."  (opcode may carry
+# suffixes like all-gather-start)
+_INSTR_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of an HLO shape string (handles tuples)."""
+    total = 0
+    for dtype, dims in _ARRAY_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, dict]:
+    """Sum collective result bytes per kind from HLO text.
+
+    Returns {kind: {"bytes": int, "count": int}, ..., "total_bytes": int}.
+    """
+    # Build a map: computation name -> trip count, for while loops whose
+    # condition compares an induction variable against a constant (lax.scan).
+    trip_counts = _scan_trip_counts(hlo_text)
+
+    out: Dict[str, dict] = {k: {"bytes": 0, "count": 0}
+                            for k in COLLECTIVE_KINDS}
+    current_comp = None
+    comp_re = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*\S.*\{\s*$")
+    for line in hlo_text.splitlines():
+        mcomp = comp_re.match(line)
+        if mcomp:
+            current_comp = mcomp.group(1)
+            continue
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue  # avoid double counting async start/done pairs
+        shape_str, kind = m.group(1), m.group(2)
+        mult = trip_counts.get(current_comp, 1)
+        out[kind]["bytes"] += _shape_bytes(shape_str) * mult
+        out[kind]["count"] += mult
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if k in COLLECTIVE_KINDS)
+    return out
+
+
+def _scan_trip_counts(hlo_text: str) -> Dict[str, int]:
+    """Best-effort: map while-body computation names to static trip counts.
+
+    XLA emits lax.scan as ``while(... condition=%cond body=%body)`` where the
+    condition is ``lt(iv, constant)``. We find ``compare`` against integer
+    constants inside condition computations and attach the constant to the
+    corresponding body computation (named like region_X.Y / body fusion).
+    """
+    trips: Dict[str, int] = {}
+    # while instructions referencing condition & body computation names
+    # operands may carry typed, nested-paren annotations: skip to the keys
+    while_re = re.compile(
+        r"while\(.*?condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)"
+    )
+    # constants inside a computation: need per-computation parse
+    comps: Dict[str, str] = {}
+    name = None
+    buf: list = []
+    comp_re = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*\S.*\{\s*$")
+    for line in hlo_text.splitlines():
+        m = comp_re.match(line)
+        if m:
+            if name is not None:
+                comps[name] = "\n".join(buf)
+            name = m.group(1)
+            buf = []
+        elif name is not None:
+            buf.append(line)
+    if name is not None:
+        comps[name] = "\n".join(buf)
+
+    const_re = re.compile(r"s(?:32|64)\[\]\s+constant\((\d+)\)")
+    for m in while_re.finditer(hlo_text):
+        cond, body = m.group(1), m.group(2)
+        consts = const_re.findall(comps.get(cond, ""))
+        if consts:
+            trips[body] = max(int(c) for c in consts)
+    return trips

@@ -1,0 +1,153 @@
+"""Roofline term derivation from the compiled dry-run artifact.
+
+Per (arch x shape x mesh):
+
+    compute    = HLO_FLOPs      / (chips x 197 TFLOP/s bf16)
+    memory     = HLO_bytes      / (chips x 819 GB/s HBM)
+    collective = collective_bytes / (chips x 50 GB/s ICI per link)
+
+plus MODEL_FLOPS = 6 * N_active * D (the "useful" compute) and the
+MODEL/HLO ratio that exposes remat/dispatch overhead. This container is
+CPU-only — v5e-class hardware constants are the TARGET, so these terms are
+*derived*, not measured; EXPERIMENTS.md §Roofline reports them and §Perf
+iterates the dominant one down.
+
+Note on cost_analysis semantics: with SPMD partitioning XLA reports the
+per-partition (per-device) module's flops/bytes. We therefore divide by
+chips ONLY when normalizing analytic MODEL_FLOPS; the HLO terms use the
+per-device numbers directly. This is asserted empirically in
+tests/test_roofline.py by checking HLO_FLOPs against 6ND within a small
+factor on a dense arch.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclass(frozen=True)
+class Hardware:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12      # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9           # bytes/s per chip
+    ici_bw: float = 50e9            # bytes/s per link (~per chip per axis)
+
+
+V5E = Hardware()
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # raw per-device quantities from the compiled module
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    # derived terms (seconds)
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    dominant: str = ""
+    model_flops: float = 0.0
+    useful_ratio: float = 0.0
+    tokens: int = 0
+    collectives: Dict[str, dict] = field(default_factory=dict)
+    notes: str = ""
+
+    def as_row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "notes": self.notes,
+        }
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig,
+                local_steps: int = 1, num_samples: int = 0) -> float:
+    """6 * N_active * D analytic compute for the step the dry-run lowers.
+
+    Training: 6ND per local step x local_steps (fwd 2ND + bwd 4ND).
+    Prefill: 2ND. Decode: 2N per token x batch (D = batch tokens).
+    """
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens * max(local_steps, 1)
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    # decode: one token per request
+    return 2.0 * n * shape.global_batch
+
+
+def step_tokens(shape: ShapeConfig, local_steps: int = 1) -> int:
+    if shape.kind == "train":
+        return shape.global_batch * shape.seq_len * max(local_steps, 1)
+    if shape.kind == "prefill":
+        return shape.global_batch * shape.seq_len
+    return shape.global_batch
+
+
+def derive(arch: str, shape_cfg: ShapeConfig, cfg: ModelConfig, mesh_name: str,
+           chips: int, cost: dict, collectives: dict,
+           local_steps: int = 1, hw: Hardware = V5E,
+           per_device: bool = True, notes: str = "") -> RooflineReport:
+    """Build the three-term report from cost_analysis + parsed collectives."""
+    flops = float(cost.get("flops", 0.0))
+    bts = float(cost.get("bytes accessed", 0.0))
+    coll = float(collectives.get("total_bytes", 0))
+    if not per_device:  # numbers are whole-program: normalize
+        flops /= chips
+        bts /= chips
+        coll /= chips
+    mf = model_flops(cfg, shape_cfg, local_steps)
+    rep = RooflineReport(
+        arch=arch, shape=shape_cfg.name, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=bts, collective_bytes=coll,
+        compute_s=flops / hw.peak_flops,
+        memory_s=bts / hw.hbm_bw,
+        collective_s=coll / hw.ici_bw,
+        model_flops=mf,
+        tokens=step_tokens(shape_cfg, local_steps),
+        collectives={k: v for k, v in collectives.items()
+                     if isinstance(v, dict)},
+        notes=notes,
+    )
+    terms = {"compute": rep.compute_s, "memory": rep.memory_s,
+             "collective": rep.collective_s}
+    rep.dominant = max(terms, key=terms.get)
+    # useful_ratio compares per-chip shares of the analytic model flops
+    rep.useful_ratio = (mf / chips) / flops if flops else 0.0
+    return rep
+
+
+def format_table(reports, keys=("arch", "shape", "mesh", "compute_s",
+                                "memory_s", "collective_s", "dominant",
+                                "useful_ratio")) -> str:
+    rows = [r.as_row() if isinstance(r, RooflineReport) else r
+            for r in reports]
+    widths = {k: max(len(k), *(len(_fmt(row.get(k))) for row in rows))
+              for k in keys}
+    line = " | ".join(k.ljust(widths[k]) for k in keys)
+    sep = "-|-".join("-" * widths[k] for k in keys)
+    body = "\n".join(
+        " | ".join(_fmt(row.get(k)).ljust(widths[k]) for k in keys)
+        for row in rows
+    )
+    return f"{line}\n{sep}\n{body}"
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.3e}" if (abs(v) < 1e-3 or abs(v) >= 1e4) and v else f"{v:.4f}"
+    return str(v)

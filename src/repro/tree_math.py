@@ -1,0 +1,95 @@
+"""Pytree vector-space operations.
+
+FedPA's dynamic program is pure vector algebra (dots, axpys, scalings) over
+the model parameter vector. Implementing those ops directly on pytrees —
+rather than ravelling to a single flat vector — keeps every leaf in its own
+(possibly sharded) layout, which is what lets the same DP code run on a
+3-parameter toy quadratic and on a tensor-parallel 47B-parameter model
+without any cross-leaf reshard.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tmap(fn, *trees):
+    return jax.tree_util.tree_map(fn, *trees)
+
+
+def tadd(a, b):
+    return tmap(jnp.add, a, b)
+
+
+def tsub(a, b):
+    return tmap(jnp.subtract, a, b)
+
+
+def tscale(s, a):
+    return tmap(lambda x: s * x, a)
+
+
+def taxpy(s, x, y):
+    """y + s * x, leafwise."""
+    return tmap(lambda xi, yi: yi + s * xi, x, y)
+
+
+def tvdot(a, b, dtype=None):
+    """Global dot product across all leaves (accumulated in >= fp32)."""
+    leaves_a = jax.tree_util.tree_leaves(a)
+    leaves_b = jax.tree_util.tree_leaves(b)
+    if dtype is None:
+        # at least fp32; keep fp64 if the inputs carry it
+        promoted = jnp.promote_types(leaves_a[0].dtype, jnp.float32)
+        dtype = jnp.promote_types(promoted, leaves_b[0].dtype)
+    parts = [
+        jnp.vdot(x.astype(dtype), y.astype(dtype))
+        for x, y in zip(leaves_a, leaves_b)
+    ]
+    return jnp.sum(jnp.stack(parts))
+
+
+def tnorm(a):
+    return jnp.sqrt(tvdot(a, a))
+
+
+def tzeros_like(a, dtype=None):
+    return tmap(lambda x: jnp.zeros_like(x, dtype=dtype or x.dtype), a)
+
+
+def tcast(a, dtype):
+    return tmap(lambda x: x.astype(dtype), a)
+
+
+def tstack(trees):
+    """Stack a list of identically-structured trees along a new leading axis."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def tindex(tree, i):
+    """Select index ``i`` along the leading axis of every leaf."""
+    return tmap(lambda x: x[i], tree)
+
+
+def tdynamic_index(tree, i):
+    """Like tindex but with a traced index (lax.dynamic_index_in_dim)."""
+    return tmap(
+        lambda x: jax.lax.dynamic_index_in_dim(x, i, axis=0, keepdims=False), tree
+    )
+
+
+def tdynamic_update(tree, update, i):
+    """Write ``update`` into slot ``i`` of the leading axis of every leaf."""
+    return tmap(
+        lambda buf, u: jax.lax.dynamic_update_index_in_dim(buf, u, i, axis=0),
+        tree,
+        update,
+    )
+
+
+def tree_size(a) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(a))
+
+
+def tree_bytes(a) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(a))

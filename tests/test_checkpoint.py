@@ -1,0 +1,51 @@
+"""Checkpoint roundtrip + failure modes."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (latest_checkpoint, restore_checkpoint,
+                              save_checkpoint)
+from repro.core.server import ServerState
+
+
+def _state():
+    params = {"w": jnp.arange(6.0).reshape(2, 3),
+              "b": {"x": jnp.ones(4, jnp.bfloat16)}}
+    opt = {"m": jnp.zeros((2, 3)), "step": jnp.asarray(7, jnp.int32)}
+    return ServerState(params, opt, jnp.asarray(3, jnp.int32))
+
+
+def test_roundtrip(tmp_path):
+    st = _state()
+    save_checkpoint(str(tmp_path), st, 3, {"arch": "t"})
+    got, step, meta = restore_checkpoint(str(tmp_path), st)
+    assert step == 3 and meta["arch"] == "t"
+    np.testing.assert_array_equal(np.asarray(got.params["w"]),
+                                  np.asarray(st.params["w"]))
+    assert got.params["b"]["x"].dtype == jnp.bfloat16
+    assert int(got.round) == 3
+
+
+def test_latest_and_multiple(tmp_path):
+    st = _state()
+    for s in (1, 5, 3):
+        save_checkpoint(str(tmp_path), st, s)
+    assert latest_checkpoint(str(tmp_path)) == 5
+    _, step, _ = restore_checkpoint(str(tmp_path), st)
+    assert step == 5
+    _, step, _ = restore_checkpoint(str(tmp_path), st, step=3)
+    assert step == 3
+
+
+def test_shape_mismatch_fails(tmp_path):
+    st = _state()
+    save_checkpoint(str(tmp_path), st, 1)
+    bad = st._replace(params={"w": jnp.zeros((3, 3)),
+                              "b": {"x": jnp.ones(4, jnp.bfloat16)}})
+    with pytest.raises(ValueError):
+        restore_checkpoint(str(tmp_path), bad)
+
+
+def test_missing_dir_fails(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        restore_checkpoint(str(tmp_path / "nope"), _state())

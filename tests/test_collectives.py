@@ -1,0 +1,87 @@
+"""HLO collective parser + roofline derivation units."""
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config
+from repro.sharding.collectives import _shape_bytes, parse_collectives
+from repro.sharding.roofline import V5E, derive, format_table, model_flops
+
+HLO = """
+HloModule test
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  ...
+}
+
+%body.1 (p: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %ar = f32[128,256]{1,0} all-reduce(f32[128,256]{1,0} %x), replica_groups={}
+  ROOT %t = tuple(...)
+}
+
+%cond.1 (p: (s32[], f32[128,256])) -> pred[] {
+  %c = s32[] constant(7)
+  ROOT %lt = pred[] compare(s32[] %iv, s32[] %c), direction=LT
+}
+
+ENTRY %main (a: f32[512]) -> f32[512] {
+  %w = (s32[], f32[128,256]) while((s32[], f32[128,256]) %init), condition=%cond.1, body=%body.1
+  %ag = bf16[1024,64]{1,0} all-gather(bf16[512,64]{1,0} %a), dimensions={0}
+  %rs = f32[64]{0} reduce-scatter(f32[512]{0} %a), dimensions={0}
+  %a2a = f32[16,32]{1,0} all-to-all(f32[16,32]{1,0} %b), dimensions={0}
+  %cp = f32[256]{0} collective-permute(f32[256]{0} %a), source_target_pairs={{0,1}}
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[128,256]{1,0}") == 128 * 256 * 4
+    assert _shape_bytes("bf16[10]") == 20
+    assert _shape_bytes("(f32[4], bf16[8])") == 16 + 16
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_parse_kinds_and_loop_scaling():
+    c = parse_collectives(HLO)
+    assert c["all-gather"]["bytes"] == 1024 * 64 * 2
+    assert c["reduce-scatter"]["bytes"] == 64 * 4
+    assert c["all-to-all"]["bytes"] == 16 * 32 * 4
+    assert c["collective-permute"]["bytes"] == 256 * 4
+    # the all-reduce inside the while body is scaled by trip count 7
+    assert c["all-reduce"]["bytes"] == 128 * 256 * 4 * 7
+    assert c["all-reduce"]["count"] == 7
+    assert c["total_bytes"] == sum(
+        c[k]["bytes"] for k in ("all-reduce", "all-gather", "reduce-scatter",
+                                "all-to-all", "collective-permute"))
+
+
+def test_async_start_done_not_double_counted():
+    txt = """
+ENTRY %e () -> f32[8] {
+  %s = f32[8]{0} all-gather-start(f32[4]{0} %a)
+  %d = f32[8]{0} all-gather-done(f32[8]{0} %s)
+}
+"""
+    c = parse_collectives(txt)
+    assert c["all-gather"]["count"] == 1
+    assert c["all-gather"]["bytes"] == 32
+
+
+def test_model_flops_kinds():
+    cfg = get_config("qwen3-32b")
+    n = cfg.active_param_count()
+    tr = model_flops(cfg, SHAPES["train_4k"], local_steps=8)
+    assert tr == 6.0 * n * 256 * 4096 * 8
+    pf = model_flops(cfg, SHAPES["prefill_32k"])
+    assert pf == 2.0 * n * 32 * 32768
+    dc = model_flops(cfg, SHAPES["decode_32k"])
+    assert dc == 2.0 * n * 128
+
+
+def test_derive_and_dominant():
+    cfg = get_config("qwen3-32b")
+    rep = derive("qwen3-32b", SHAPES["decode_32k"], cfg, "16x16", 256,
+                 {"flops": 1e12, "bytes accessed": 1e12},
+                 {"total_bytes": 1e9}, hw=V5E)
+    assert rep.memory_s > rep.compute_s        # 1e12B/819GB/s >> 1e12F/197T
+    assert rep.dominant == "memory"
+    table = format_table([rep])
+    assert "qwen3-32b" in table and "memory" in table

@@ -1,0 +1,105 @@
+"""Config registry + invariants the dry-run relies on."""
+import dataclasses
+
+import pytest
+
+from repro import configs
+from repro.configs.base import (FedConfig, INPUT_SHAPES, LayerSpec,
+                                MULTI_POD, SINGLE_POD)
+
+
+def test_registry_complete():
+    assert len(configs.ASSIGNED_ARCHS) == 10
+    for a in configs.ASSIGNED_ARCHS:
+        cfg = configs.get_config(a)
+        assert cfg.name == a
+        assert cfg.citation
+    with pytest.raises(KeyError):
+        configs.get_config("gpt-5")
+
+
+def test_assigned_spec_numbers():
+    """Each config matches its assigned (L, d_model, H, kv, vocab)."""
+    want = {
+        "xlstm-125m": (12, 768, 4, 4, 50304),
+        "minitron-4b": (32, 3072, 24, 8, 256000),
+        "musicgen-medium": (48, 1536, 24, 24, 2048),
+        "internvl2-26b": (48, 6144, 48, 8, 92553),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 256000),
+        "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 151936),
+        "granite-34b": (88, 6144, 48, 1, 49152),
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 202048),
+        "gemma3-27b": (62, 5376, 32, 16, 262144),
+        "qwen3-32b": (64, 5120, 64, 8, 151936),
+    }
+    for a, (L, d, h, kv, v) in want.items():
+        c = configs.get_config(a)
+        assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+                c.vocab_size) == (L, d, h, kv, v), a
+
+
+def test_moe_specs():
+    q = configs.get_config("qwen3-moe-30b-a3b")
+    assert q.moe.num_experts == 128 and q.moe.top_k == 8
+    l4 = configs.get_config("llama4-scout-17b-a16e")
+    assert l4.moe.num_experts == 16 and l4.moe.top_k == 1
+
+
+def test_vocab_padding_shards_16_ways():
+    for a in configs.ALL_ARCHS:
+        c = configs.get_config(a)
+        assert c.padded_vocab % 128 == 0
+        assert c.padded_vocab >= c.vocab_size
+        assert c.padded_vocab - c.vocab_size < 128
+
+
+def test_smoke_reduction_invariants():
+    for a in configs.ALL_ARCHS:
+        s = configs.get_smoke(a)
+        f = configs.get_config(a)
+        assert s.num_layers == 2
+        assert s.d_model <= 512
+        if s.moe.enabled:
+            assert s.moe.num_experts <= 4
+        # same family: smoke mixers are a subset of the full pattern's
+        assert {sp.mixer for sp in s.layers()} <= {sp.mixer
+                                                   for sp in f.layers()}
+        assert s.arch_type == f.arch_type
+
+
+def test_input_shapes():
+    names = [s.name for s in INPUT_SHAPES]
+    assert names == ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    assert configs.SHAPES["long_500k"].seq_len == 524_288
+    assert configs.SHAPES["train_4k"].global_batch == 256
+
+
+def test_mesh_configs():
+    assert SINGLE_POD.num_devices == 256 and SINGLE_POD.data_extent == 16
+    assert MULTI_POD.num_devices == 512 and MULTI_POD.data_extent == 32
+    assert MULTI_POD.model_extent == 16
+
+
+def test_fed_config_validation():
+    with pytest.raises(ValueError):
+        FedConfig(algorithm="fedsgd")
+    with pytest.raises(ValueError):
+        FedConfig(algorithm="fedpa", local_steps=4, burn_in_steps=4,
+                  steps_per_sample=2)
+    f = FedConfig(algorithm="fedpa", local_steps=10, burn_in_steps=4,
+                  steps_per_sample=2)
+    assert f.num_samples == 3
+
+
+def test_layer_spec_validation():
+    with pytest.raises(ValueError):
+        LayerSpec(mixer="swa", window=0)
+    with pytest.raises(ValueError):
+        LayerSpec(mixer="ssm2")
+
+
+def test_long_decode_support_flags():
+    long_ok = {a for a in configs.ASSIGNED_ARCHS
+               if configs.get_config(a).supports_long_decode}
+    assert long_ok == {"xlstm-125m", "recurrentgemma-9b", "gemma3-27b",
+                       "llama4-scout-17b-a16e"}

@@ -1,0 +1,81 @@
+"""Optimizer math vs closed forms; schedules."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import optim
+from repro.optim import apply_updates
+
+
+def _step(opt, params, grads, n=1):
+    state = opt.init(params)
+    for _ in range(n):
+        updates, state = opt.update(grads, state, params)
+        params = apply_updates(params, updates)
+    return params, state
+
+
+def test_sgd():
+    p = {"w": jnp.asarray([1.0, 2.0])}
+    g = {"w": jnp.asarray([0.5, -1.0])}
+    out, _ = _step(optim.sgd(0.1), p, g)
+    np.testing.assert_allclose(np.asarray(out["w"]), [0.95, 2.1], rtol=1e-6)
+
+
+def test_sgdm_accumulates():
+    p = {"w": jnp.zeros(1)}
+    g = {"w": jnp.ones(1)}
+    out, _ = _step(optim.sgdm(0.1, 0.9), p, g, n=3)
+    # momentum: m1=1, m2=1.9, m3=2.71 -> sum = 5.61
+    np.testing.assert_allclose(np.asarray(out["w"]), [-0.561], rtol=1e-5)
+
+
+def test_adam_first_step_is_lr_sized():
+    p = {"w": jnp.zeros(2)}
+    g = {"w": jnp.asarray([1e-3, 1.0])}
+    out, _ = _step(optim.adam(0.1, eps=0.0), p, g)
+    # bias-corrected first step: -lr * g/|g|
+    np.testing.assert_allclose(np.asarray(out["w"]), [-0.1, -0.1], rtol=1e-5)
+
+
+def test_adagrad():
+    p = {"w": jnp.zeros(1)}
+    g = {"w": jnp.asarray([2.0])}
+    out, _ = _step(optim.adagrad(0.1, eps=0.0), p, g)
+    np.testing.assert_allclose(np.asarray(out["w"]), [-0.1], rtol=1e-6)
+
+
+def test_yogi_moves_against_gradient():
+    p = {"w": jnp.zeros(3)}
+    g = {"w": jnp.asarray([1.0, -2.0, 0.5])}
+    out, _ = _step(optim.yogi(0.05), p, g, n=2)
+    assert np.all(np.sign(np.asarray(out["w"])) == -np.sign(np.asarray(g["w"])))
+
+
+def test_get_optimizer_registry():
+    for name in ("sgd", "sgdm", "adam", "adagrad", "yogi"):
+        assert optim.get_optimizer(name, 0.1) is not None
+    with pytest.raises(KeyError):
+        optim.get_optimizer("lion", 0.1)
+
+
+def test_schedules():
+    s = optim.inverse_time_decay(1.0, 1.0)
+    assert float(s(jnp.asarray(0))) == 1.0
+    assert float(s(jnp.asarray(9))) == pytest.approx(0.1)
+    c = optim.cosine_decay(1.0, 100)
+    assert float(c(jnp.asarray(0))) == pytest.approx(1.0)
+    assert float(c(jnp.asarray(100))) == pytest.approx(0.0, abs=1e-6)
+    w = optim.warmup_cosine(1.0, 10, 110)
+    assert float(w(jnp.asarray(0))) == pytest.approx(0.1)
+    assert float(w(jnp.asarray(9))) == pytest.approx(1.0)
+
+
+def test_schedule_inside_optimizer():
+    opt = optim.sgd(optim.inverse_time_decay(1.0, 1.0))
+    p = {"w": jnp.zeros(1)}
+    g = {"w": jnp.ones(1)}
+    state = opt.init(p)
+    u1, state = opt.update(g, state, p)
+    u2, state = opt.update(g, state, p)
+    assert abs(float(u2["w"][0])) == pytest.approx(abs(float(u1["w"][0])) / 2)

@@ -1,0 +1,72 @@
+"""Propositions 1 & 2 and the federated-quadratics analysis (Section 3)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import posterior as po
+from repro.data import make_federated_lsq, make_quadratic_clients
+
+jax.config.update("jax_enable_x64", True)
+
+
+def test_global_mode_minimizes_Q():
+    clients = make_quadratic_clients(4, 5, seed=1, dtype=jnp.float64)
+    mu = po.global_posterior_mode(clients)
+    Q, gradQ = po.global_quadratic(clients)
+    np.testing.assert_allclose(np.asarray(gradQ(mu)), 0.0, atol=1e-8)
+    # and it minimizes the federated objective F as well (Prop 1 + Prop 2)
+    F = po.global_objective(clients)
+    for _ in range(5):
+        other = mu + 0.1 * np.random.default_rng(0).normal(size=mu.shape)
+        assert float(F(jnp.asarray(other))) > float(F(mu))
+
+
+def test_global_mode_not_weighted_average_of_local_optima():
+    """Footnote 1: the global optimum is generally NOT any convex combo of
+    the local optima."""
+    clients = make_quadratic_clients(2, 2, seed=3, dtype=jnp.float64)
+    mu = np.asarray(po.global_posterior_mode(clients))
+    a, b = np.asarray(clients[0].mu), np.asarray(clients[1].mu)
+    # solve mu = t*a + (1-t)*b for t in both coordinates; inconsistent => not on segment
+    t0 = (mu[0] - b[0]) / (a[0] - b[0])
+    t1 = (mu[1] - b[1]) / (a[1] - b[1])
+    assert abs(t0 - t1) > 1e-3
+
+
+def test_client_from_data_matches_lstsq():
+    rng = np.random.default_rng(5)
+    X = rng.normal(size=(40, 3))
+    y = rng.normal(size=40)
+    c = po.client_from_data(jnp.asarray(X), jnp.asarray(y))
+    want, *_ = np.linalg.lstsq(X, y, rcond=None)
+    np.testing.assert_allclose(np.asarray(c.mu), want, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(c.sigma_inv), X.T @ X, rtol=1e-5,
+                               atol=1e-4)
+
+
+def test_fedavg_fixed_point_is_biased_and_bias_grows_with_k():
+    """Fig. 1's phenomenon: more local steps push FedAvg's fixed point
+    further from the global optimum (heterogeneous clients)."""
+    clients, _ = make_federated_lsq(3, 30, 4, heterogeneity=30.0, seed=2,
+                                    dtype=jnp.float64)
+    mu = np.asarray(po.global_posterior_mode(clients))
+    lr = 1e-3
+    d1 = np.linalg.norm(np.asarray(po.fedavg_fixed_point(clients, 1, lr)) - mu)
+    d10 = np.linalg.norm(np.asarray(po.fedavg_fixed_point(clients, 10, lr)) - mu)
+    d100 = np.linalg.norm(np.asarray(po.fedavg_fixed_point(clients, 100, lr)) - mu)
+    assert d1 < 1e-6          # K=1 == mini-batch SGD: unbiased fixed point
+    assert d100 > d10 > d1    # bias grows with local computation
+
+
+def test_exact_deltas_drive_server_to_global_optimum():
+    """Proposition 2: gradient descent on Q with exact client deltas
+    converges to the global posterior mode."""
+    clients = make_quadratic_clients(5, 6, seed=4, dtype=jnp.float64)
+    mu = np.asarray(po.global_posterior_mode(clients))
+    theta = jnp.zeros(6, jnp.float64)
+    _, gradQ = po.global_quadratic(clients)
+    A = sum(c.weight * c.sigma_inv for c in clients)
+    lr = 1.0 / float(jnp.linalg.norm(A, ord=2))
+    for _ in range(2000):
+        theta = theta - lr * gradQ(theta)
+    np.testing.assert_allclose(np.asarray(theta), mu, rtol=1e-5, atol=1e-6)

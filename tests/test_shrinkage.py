@@ -1,0 +1,85 @@
+"""Shrinkage estimator: closed forms and the rank-1 recursion (Appendix C.1)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import shrinkage as sh
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _samples(seed, ell, d):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=(ell, d)))
+
+
+@given(st.integers(2, 8), st.integers(1, 10),
+       st.floats(0.01, 10.0), st.integers(0, 5))
+@settings(max_examples=15, deadline=None)
+def test_rank1_recursion(ell, d, rho, seed):
+    """Sigma~_t = Sigma~_{t-1} + gamma_t u_t u_t^T exactly (eq. 18)."""
+    xs = _samples(seed, ell, d)
+    for t in range(2, ell + 1):
+        lhs = sh.shrinkage_cov_unnormalized(xs[:t], rho)
+        u = xs[t - 1] - jnp.mean(xs[: t - 1], axis=0)
+        rhs = sh.shrinkage_cov_unnormalized(xs[: t - 1], rho) \
+            + sh.gamma_t(t, rho) * jnp.outer(u, u)
+        np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                                   rtol=1e-9, atol=1e-9)
+
+
+@given(st.integers(1, 12), st.floats(0.0, 100.0))
+@settings(max_examples=50, deadline=None)
+def test_rho_l_range(ell, rho):
+    r = sh.rho_l(ell, rho)
+    assert 0.0 < r <= 1.0
+    if ell == 1:
+        assert r == 1.0   # Sigma_hat_1 == I: the FedAvg special case
+
+
+def test_normalized_vs_unnormalized():
+    xs = _samples(3, 5, 4)
+    rho = 0.7
+    r = sh.rho_l(5, rho)
+    np.testing.assert_allclose(
+        np.asarray(sh.shrinkage_cov(xs, rho)),
+        r * np.asarray(sh.shrinkage_cov_unnormalized(xs, rho)),
+        rtol=1e-12,
+    )
+
+
+def test_shrinkage_limits():
+    xs = _samples(1, 6, 3)
+    # rho -> 0: Sigma_hat == I
+    np.testing.assert_allclose(np.asarray(sh.shrinkage_cov(xs, 0.0)),
+                               np.eye(3), atol=1e-12)
+    # rho large: Sigma_hat -> sample covariance
+    big = sh.shrinkage_cov(xs, 1e9)
+    _, cov = sh.sample_mean_cov(xs)
+    np.testing.assert_allclose(np.asarray(big), np.asarray(cov), rtol=1e-6,
+                               atol=1e-6)
+
+
+def test_dense_delta_identity_case():
+    xs = _samples(2, 1, 4)
+    x0 = jnp.asarray(np.random.default_rng(9).normal(size=4))
+    # single sample: Sigma_hat = I -> delta = x0 - x1 (FedAvg)
+    np.testing.assert_allclose(np.asarray(sh.dense_delta(x0, xs, 0.5)),
+                               np.asarray(x0 - xs[0]), rtol=1e-10)
+
+
+def test_oas_rho_bounds():
+    xs = _samples(4, 8, 16)
+    r = float(sh.oas_rho(xs))
+    assert 0.0 <= r <= 1.0
+
+
+def test_dense_delta_matches_linear_solve():
+    xs = _samples(5, 6, 5)
+    x0 = jnp.asarray(np.random.default_rng(10).normal(size=5))
+    rho = 0.3
+    want = np.linalg.solve(np.asarray(sh.shrinkage_cov(xs, rho)),
+                           np.asarray(x0 - xs.mean(axis=0)))
+    np.testing.assert_allclose(np.asarray(sh.dense_delta(x0, xs, rho)), want,
+                               rtol=1e-8)
