@@ -1,0 +1,157 @@
+"""Round-engine microbenchmark: old per-client Python loop vs the unified
+compiled round (core/round_program.py), on the EMNIST CNN config at 16
+clients/round.
+
+The legacy baseline reproduces the pre-engine ``FedSim.round`` exactly: one
+jitted client-update dispatch per client with a blocking per-client loss
+sync, then eager (un-jitted) list aggregation and an eager server update.
+The engine runs the identical round math as ONE jitted program per round
+(placements: vmap over clients / scan-of-vmap chunks). Cohort batches for
+all timed rounds are pre-generated so both paths time the round itself,
+not the (identical) data pipeline.
+
+Quick mode uses the smoke-scale EMNIST CNN in the paper's cross-device
+regime (small per-client datasets => a handful of local steps per round),
+which is where per-client dispatch overhead dominates and the engine's win
+is largest; ``--full``/(quick=False) scales up to the 28x28 model with more
+local compute, where the two paths converge toward pure compute time on
+CPU hosts. Writes ``BENCH_round_engine.json`` next to the CWD for the CI
+artifact lane.
+
+  PYTHONPATH=src python -m benchmarks.bench_round_engine [--full]
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import FedConfig
+from repro.configs.emnist_cnn import config as cnn_full, smoke as cnn_smoke
+from repro.core.client import make_client_update
+from repro.core.round_program import make_round_program
+from repro.core.server import (aggregate_deltas_list, init_server_state,
+                               server_update)
+from repro.data.dirichlet import make_dirichlet_classification
+from repro.models.cnn import cnn_loss, init_cnn_params
+from repro.optim import get_optimizer
+
+CLIENTS = 16
+PLACEMENTS = ("parallel", "chunked")
+
+
+def _cohort_batches(fc, rounds, batch_size, steps, seed=0):
+    """(rounds, C, K, B, d) feature / (rounds, C, K, B) label arrays."""
+    rng = np.random.default_rng(seed)
+    d = fc.client_x[0].shape[1]
+    xs = np.empty((rounds, CLIENTS, steps, batch_size, d), np.float32)
+    ys = np.empty((rounds, CLIENTS, steps, batch_size), np.int32)
+    for r in range(rounds):
+        for c in range(CLIENTS):
+            n = fc.client_x[c].shape[0]
+            idx = rng.integers(0, n, size=(steps, batch_size))
+            xs[r, c] = fc.client_x[c][idx]
+            ys[r, c] = fc.client_y[c][idx]
+    return xs, ys
+
+
+def _bench_one(cfg, fed, rounds, batch_size, seed=0):
+    side = cfg.image_size
+    fc = make_dirichlet_classification(
+        CLIENTS, cfg.num_classes, side * side, n_per_client=64, alpha=0.1,
+        proto_scale=1.5, noise=1.5, seed=seed)
+    reshape = lambda x: x.reshape(-1, side, side, 1)
+
+    def grad_fn(params, batch):
+        b = {"x": reshape(batch["x"]), "y": batch["y"]}
+        return jax.value_and_grad(lambda p: cnn_loss(p, b, cfg))(params)
+
+    xs, ys = _cohort_batches(fc, rounds + 1, batch_size, fed.local_steps,
+                             seed)
+    client_opt = get_optimizer(fed.client_opt, fed.client_lr,
+                               fed.client_momentum)
+    server_opt = get_optimizer(fed.server_opt, fed.server_lr,
+                               fed.server_momentum)
+    params = init_cnn_params(jax.random.PRNGKey(seed), cfg)
+    state0 = init_server_state(params, server_opt)
+
+    # --- legacy: the pre-engine FedSim.round, verbatim ---------------------
+    update = jax.jit(make_client_update(grad_fn, fed, client_opt))
+
+    def legacy_round(state, r):
+        deltas, losses = [], []
+        for c in range(CLIENTS):
+            delta, m = update(state.params,
+                              {"x": xs[r, c], "y": ys[r, c]})
+            deltas.append(delta)
+            losses.append(float(m["loss_last"]))   # blocking per-client sync
+        mean_delta = aggregate_deltas_list(deltas)
+        return server_update(state, mean_delta, server_opt)
+
+    def timed(round_fn):
+        state = round_fn(state0, 0)                # warm-up / compile
+        jax.block_until_ready(state.params)
+        t0 = time.perf_counter()
+        for r in range(1, rounds + 1):
+            state = round_fn(state, r)
+        jax.block_until_ready(state.params)
+        return (time.perf_counter() - t0) / rounds * 1e3
+
+    out = {"legacy_ms": timed(legacy_round)}
+
+    # --- engine: one jitted program per round ------------------------------
+    for place in PLACEMENTS:
+        round_fn = jax.jit(make_round_program(
+            grad_fn, fed, placement=place, server_opt=server_opt))
+
+        def engine_round(state, r, round_fn=round_fn):
+            state, _ = round_fn(state, {"x": xs[r], "y": ys[r]})
+            return state
+
+        out[f"{place}_ms"] = timed(engine_round)
+        out[f"{place}_speedup"] = out["legacy_ms"] / out[f"{place}_ms"]
+    out["best_speedup"] = max(out[f"{p}_speedup"] for p in PLACEMENTS)
+    return out
+
+
+def run(quick: bool = True):
+    """quick: smoke EMNIST CNN in the dispatch-bound cross-device regime;
+    full: the 28x28 model with a compute-heavier local run."""
+    if quick:
+        cfg, rounds = cnn_smoke(), 10
+        grid = [("fedavg", 2, 2, {}),
+                ("fedpa", 4, 2,
+                 dict(burn_in_steps=2, steps_per_sample=1,
+                      shrinkage_rho=0.01))]
+    else:
+        cfg, rounds = cnn_full(), 5
+        grid = [("fedavg", 8, 16, {}),
+                ("fedpa", 8, 16,
+                 dict(burn_in_steps=4, steps_per_sample=2,
+                      shrinkage_rho=0.01))]
+
+    rows, report = [], {"config": cfg.name, "clients_per_round": CLIENTS}
+    for alg, steps, batch, kw in grid:
+        fed = FedConfig(algorithm=alg, clients_per_round=CLIENTS,
+                        local_steps=steps, server_opt="sgdm", server_lr=0.3,
+                        client_opt="sgdm", client_lr=0.01, **kw)
+        res = _bench_one(cfg, fed, rounds, batch)
+        report[alg] = res
+        derived = (f"legacy={res['legacy_ms']:.1f}ms," +
+                   ",".join(f"{p}={res[f'{p}_ms']:.1f}ms"
+                            f"({res[f'{p}_speedup']:.2f}x)"
+                            for p in PLACEMENTS))
+        rows.append({"name": f"round_engine/{alg}_{cfg.name}",
+                     "us_per_call": res["legacy_ms"] * 1e3,
+                     "derived": derived})
+    with open("BENCH_round_engine.json", "w") as f:
+        json.dump(report, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    for row in run(quick="--full" not in sys.argv):
+        print(row)

@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.diagnostics import ess_from_losses
 from repro.core.iasg import iasg_sample

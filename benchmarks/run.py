@@ -10,9 +10,9 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_roofline, fig1_quadratic, fig3_bias_variance,
-                        fig4_ess, table1_client_cost, table3_benchmark_sim,
-                        table3_lr_sim)
+from benchmarks import (bench_round_engine, bench_roofline, fig1_quadratic,
+                        fig3_bias_variance, fig4_ess, table1_client_cost,
+                        table3_benchmark_sim, table3_lr_sim)
 
 BENCHES = {
     "table1": table1_client_cost,
@@ -22,6 +22,7 @@ BENCHES = {
     "table3": table3_benchmark_sim,
     "table3lr": table3_lr_sim,
     "roofline": bench_roofline,
+    "round_engine": bench_round_engine,
 }
 
 

@@ -4,11 +4,12 @@ non-IID federated classification task with the paper's own CNN architecture
 network-gated in this container; see DESIGN.md §9).
 
 Metrics mirror the paper: best eval accuracy within the round budget and
-rounds-to-threshold.
+rounds-to-threshold. Rounds run on the compiled round engine
+(core/round_program.py) via FedSim — one XLA dispatch per round; the
+FedPA leg uses the chunked placement to bound peak memory at larger
+cohort sizes without leaving the single-program regime.
 """
 from __future__ import annotations
-
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -51,7 +52,8 @@ def _run(algorithm, epochs, rounds, seed=0, alpha=0.1, num_clients=32):
     if algorithm == "fedpa":
         kw = dict(burn_in_steps=local_steps // 2,
                   steps_per_sample=max(steps_per_epoch // 2, 1),
-                  shrinkage_rho=0.01, burn_in_rounds=rounds // 4)
+                  shrinkage_rho=0.01, burn_in_rounds=rounds // 4,
+                  round_placement="chunked", round_chunk_size=4)
     fed = FedConfig(algorithm=algorithm, clients_per_round=8,
                     local_steps=local_steps, server_opt="sgdm",
                     server_lr=0.3, client_opt="sgdm", client_lr=0.01,

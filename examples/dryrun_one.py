@@ -4,7 +4,6 @@ multi-pod dry-run.
 
   PYTHONPATH=src python examples/dryrun_one.py gemma3-27b train_4k [--multi-pod]
 """
-import json
 import os
 import subprocess
 import sys

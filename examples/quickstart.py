@@ -5,6 +5,12 @@ FedPA through the exact same generalized federated optimization loop
 (Algorithm 1 — only the client update differs), and prints the distance to
 the true global optimum, which is known in closed form (Eq. 3).
 
+Each round is ONE compiled XLA program (core/round_program.py): FedSim
+stacks the cohort's batches and the clients run vmapped inside the jit —
+set ``placement="sequential"``/``"chunked"`` on FedSim (or
+``round_placement`` on FedConfig) to trade memory for parallelism without
+changing the math.
+
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax
@@ -41,9 +47,13 @@ common = dict(clients_per_round=4, local_steps=300, client_opt="sgd",
 configs = {
     "fedavg": FedConfig(algorithm="fedavg", server_opt="sgdm",
                         server_lr=1.0, **common),
+    # chunked placement: 2 clients vmapped per chunk, chunks scanned —
+    # same round math as parallel, bounded peak memory
     "fedpa": FedConfig(algorithm="fedpa", burn_in_steps=100,
                        steps_per_sample=20, shrinkage_rho=1.0,
-                       server_opt="sgd", server_lr=0.03, **common),
+                       server_opt="sgd", server_lr=0.03,
+                       round_placement="chunked", round_chunk_size=2,
+                       **common),
 }
 
 for name, fed in configs.items():

@@ -212,10 +212,23 @@ class FedConfig:
     # MIME (Karimireddy et al. 2020): scale of the frozen server-momentum
     # term mixed into local client steps.
     mime_beta: float = 0.9
+    # --- round engine (core/round_program.py) ---
+    # How the cohort is laid out inside the one-jit-per-round program:
+    # "parallel" (vmap over clients), "sequential" (scan, memory-bound
+    # configs), "chunked" (scan-of-vmap; chunk size below).
+    round_placement: str = "parallel"
+    # Clients vmapped per chunk in the "chunked" placement; 0 = auto
+    # (largest power of two <= min(8, clients_per_round)).
+    round_chunk_size: int = 0
 
     def __post_init__(self):
         if self.algorithm not in ("fedavg", "fedpa", "mime"):
             raise ValueError(f"unknown algorithm {self.algorithm!r}")
+        if self.round_placement not in ("parallel", "sequential", "chunked"):
+            raise ValueError(
+                f"unknown round_placement {self.round_placement!r}")
+        if self.round_chunk_size < 0:
+            raise ValueError("round_chunk_size must be >= 0")
         if self.algorithm == "fedpa":
             if self.num_samples < 1:
                 raise ValueError(

@@ -2,7 +2,8 @@
 
 Layers (bottom-up): tree_math -> shrinkage/dp_delta/posterior/iasg
 (the posterior machinery) -> client/server (Algorithms 1-3) ->
-round (simulation) / sharded_round (multi-pod SPMD).
+round_program (the one-jit-per-round engine) -> round (simulation) /
+sharded_round (multi-pod SPMD), both thin frontends over the engine.
 """
 from repro.core.client import make_client_update  # noqa: F401
 from repro.core.diagnostics import (  # noqa: F401
@@ -27,6 +28,10 @@ from repro.core.posterior import (  # noqa: F401
     global_quadratic,
 )
 from repro.core.round import FedSim  # noqa: F401
+from repro.core.round_program import (  # noqa: F401
+    PLACEMENTS,
+    make_round_program,
+)
 from repro.core.server import (  # noqa: F401
     ServerState,
     aggregate_deltas,

@@ -45,7 +45,8 @@ def make_client_update(grad_fn: Callable, fed: FedConfig,
         return update
 
     if fed.algorithm == "mime":
-        return make_mime_client_update(grad_fn, fed, client_opt)
+        return make_mime_client_update(grad_fn, fed, client_opt,
+                                       delta_dtype=delta_dtype)
 
     if fed.streaming_dp:
         return _make_streaming_fedpa_update(grad_fn, fed, client_opt,
@@ -129,7 +130,8 @@ def _make_streaming_fedpa_update(grad_fn, fed: FedConfig,
 
 
 def make_mime_client_update(grad_fn, fed: FedConfig,
-                            client_opt: Optimizer):
+                            client_opt: Optimizer,
+                            delta_dtype=jnp.float32):
     """MIME-lite (Karimireddy et al. 2020) — the paper's strongest stateless
     baseline: clients mix a FROZEN server momentum estimate into every local
     step (theta <- theta - lr[(1-beta) g + beta m_server]) plus the SVRG-style
@@ -163,7 +165,7 @@ def make_mime_client_update(grad_fn, fed: FedConfig,
             return p, loss
 
         p, losses = jax.lax.scan(step, params, batches)
-        delta = fedavg_delta(params, p)
+        delta = tm.tcast(fedavg_delta(params, p), delta_dtype)
         return delta, {"loss_first": losses[0], "loss_last": losses[-1]}
 
     return update

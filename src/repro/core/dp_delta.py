@@ -19,10 +19,12 @@ u_t = x_t - xbar_{t-1}, gamma_t = (t-1) rho / t, v_t = Sigma_tilde_{t-1}^{-1} u_
                b_t = u_t . Delta~_{t-1}
     Delta^_t = Delta~_t / rho_t
 
-Two implementations share the math:
-  * ``dp_delta``      — samples known up front (stacked trees), Python loop
-                        over the static sample count; used inside the jitted
-                        federated round.
+One implementation of the recurrence (``online_dp_update``, vectorized
+history dots + masked rank-1 combine) serves both entry points:
+  * ``dp_delta``      — samples known up front (stacked trees): a
+                        ``lax.scan`` of the online update, so trace size and
+                        HLO stay O(l) even for large sample counts; used
+                        inside the jitted federated round.
   * ``OnlineDP``      — streaming any-time state (init/update), used by the
                         serving-style example and mirrored by the Pallas
                         kernel in ``repro.kernels.fedpa_dp``.
@@ -35,7 +37,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import tree_math as tm
-from repro.core.shrinkage import gamma_t, rho_l
 
 
 def fedavg_delta(x0, x_final):
@@ -60,29 +61,18 @@ def dp_delta(x0, samples, rho, return_mean=False):
     Returns Delta_hat_l as a pytree shaped like x0 (and optionally xbar_l).
     """
     ell = jax.tree_util.tree_leaves(samples)[0].shape[0]
-    x1 = tm.tindex(samples, 0)
-    xbar = x1
-    delta = tm.tsub(x0, x1)            # Delta~_1 (Sigma_tilde_1 = I)
-    vs, cs = [], []
-    for t in range(2, ell + 1):
-        x_t = tm.tindex(samples, t - 1)
-        u = tm.tsub(x_t, xbar)
-        # v_t = Sigma_tilde_{t-1}^{-1} u_t via the accumulated rank-1 history
-        v = u
-        for v_k, c_k in zip(vs, cs):
-            coef = c_k * tm.tvdot(v_k, u)
-            v = tm.taxpy(-coef, v_k, v)
-        g = gamma_t(t, rho)
-        a = tm.tvdot(u, v)
-        b = tm.tvdot(u, delta)
-        scale = (1.0 + g * (t * b - a) / (1.0 + g * a)) / t
-        delta = tm.taxpy(-scale, v, delta)
-        vs.append(v)
-        cs.append(g / (1.0 + g * a))
-        xbar = tm.taxpy(1.0 / t, u, xbar)
-    delta = tm.tscale(1.0 / rho_l(ell, rho), delta)
+    # DP in >= fp32 (bf16 deltas are re-cast by the caller, see client.py)
+    dtype = jnp.promote_types(
+        jax.tree_util.tree_leaves(samples)[0].dtype, jnp.float32)
+    state0 = online_dp_init(x0, ell, dtype=dtype)
+
+    def body(state, x_t):
+        return online_dp_update(state, x_t, rho), None
+
+    state, _ = jax.lax.scan(body, state0, tm.tcast(samples, dtype))
+    delta = online_dp_delta(state, rho)
     if return_mean:
-        return delta, xbar
+        return delta, state.xbar
     return delta
 
 

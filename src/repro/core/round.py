@@ -1,8 +1,11 @@
 """Single-process federated simulation (the paper's experimental regime).
 
-Drives Algorithm 1 with a Python loop over rounds and jitted client updates;
-used by the convergence tests, the Fig. 1 / Table 3 benchmarks, and the
-small examples. The production multi-pod path is ``sharded_round.py``.
+Drives Algorithm 1 on top of the unified compiled round engine
+(``round_program.make_round_program``): the host loop only samples client
+ids and stacks their batches — the whole round (cohort of client updates,
+weighted aggregation, server step) is ONE jitted XLA program per round
+configuration, not one dispatch per client. The production multi-pod path
+(``sharded_round.py``) builds on the same engine.
 """
 from __future__ import annotations
 
@@ -13,9 +16,9 @@ import jax
 import numpy as np
 
 from repro.configs.base import FedConfig
-from repro.core.client import make_client_update
-from repro.core.server import (ServerState, aggregate_deltas_list,
-                               init_server_state, server_update)
+from repro.core.round_program import make_round_program
+from repro.core.server import ServerState, init_server_state
+from repro.core.tree_math import tstack
 from repro.data.sampling import ClientSampler
 from repro.optim import get_optimizer
 
@@ -26,6 +29,10 @@ class FedSim:
 
     batch_fn(client_id, round_idx, num_steps) -> batches pytree with leading
     step axis; grad_fn(params, batch) -> (loss, grads).
+
+    ``placement`` overrides ``fed.round_placement`` ("parallel" |
+    "sequential" | "chunked") — the round math is identical across all
+    three (tests/test_round_engine.py); only the compiled layout differs.
     """
 
     fed: FedConfig
@@ -34,6 +41,7 @@ class FedSim:
     num_clients: int
     client_weights: Optional[np.ndarray] = None
     seed: int = 0
+    placement: Optional[str] = None
 
     def __post_init__(self):
         self.sampler = ClientSampler(self.num_clients,
@@ -41,48 +49,40 @@ class FedSim:
         self.server_opt = get_optimizer(self.fed.server_opt,
                                         self.fed.server_lr,
                                         self.fed.server_momentum)
-        client_opt = get_optimizer(self.fed.client_opt, self.fed.client_lr,
-                                   self.fed.client_momentum)
-        self._update = jax.jit(
-            make_client_update(self.grad_fn, self.fed, client_opt)
-        )
+
+        def build(use_sampling: bool):
+            return jax.jit(make_round_program(
+                self.grad_fn, self.fed, placement=self.placement,
+                server_opt=self.server_opt, use_sampling=use_sampling,
+            ))
+
+        self._round = build(use_sampling=True)
         # burn-in rounds run the FedAvg-regime update (Section 5.2)
         if self.fed.algorithm == "fedpa" and self.fed.burn_in_rounds > 0:
-            avg = dataclasses.replace(self.fed, algorithm="fedavg")
-            self._burn_update = jax.jit(
-                make_client_update(self.grad_fn, avg, client_opt)
-            )
+            self._burn_round = build(use_sampling=False)
         else:
-            self._burn_update = self._update
+            self._burn_round = self._round
 
     def init(self, params) -> ServerState:
         return init_server_state(params, self.server_opt)
 
-    def _server_momentum(self, state: ServerState):
-        """Frozen server statistics shipped to MIME clients."""
-        opt = state.opt_state
-        if isinstance(opt, dict) and "m" in opt:
-            return opt["m"]
-        import repro.tree_math as tm
-        return tm.tzeros_like(state.params)
+    def stack_cohort(self, client_ids, round_idx: int):
+        """Materialize the cohort's batches with a leading client axis."""
+        return tstack([
+            self.batch_fn(int(cid), round_idx, self.fed.local_steps)
+            for cid in client_ids
+        ])
 
     def round(self, state: ServerState, round_idx: int):
         client_ids = self.sampler.sample(round_idx)
-        update = (self._burn_update if round_idx < self.fed.burn_in_rounds
-                  else self._update)
-        extra = ((self._server_momentum(state),)
-                 if self.fed.algorithm == "mime" else ())
-        deltas, losses = [], []
-        for cid in client_ids:
-            batches = self.batch_fn(int(cid), round_idx, self.fed.local_steps)
-            delta, m = update(state.params, batches, *extra)
-            deltas.append(delta)
-            losses.append(float(m["loss_last"]))
+        round_fn = (self._burn_round if round_idx < self.fed.burn_in_rounds
+                    else self._round)
+        batches = self.stack_cohort(client_ids, round_idx)
         weights = (None if self.client_weights is None
-                   else [self.client_weights[int(c)] for c in client_ids])
-        mean_delta = aggregate_deltas_list(deltas, weights)
-        state = server_update(state, mean_delta, self.server_opt)
-        return state, {"client_loss": float(np.mean(losses))}
+                   else np.asarray([self.client_weights[int(c)]
+                                    for c in client_ids], np.float32))
+        state, metrics = round_fn(state, batches, weights)
+        return state, {"client_loss": float(metrics["loss_last"])}
 
     def run(self, params, num_rounds: int,
             eval_fn: Optional[Callable] = None, eval_every: int = 1):

@@ -1,0 +1,223 @@
+"""The unified compiled round engine: one XLA program per federated round.
+
+An entire generalized federated round (Algorithm 1) — cohort of clients
+running their local updates, weighted delta aggregation, server optimizer
+step — is staged as a single jittable function, so the simulation path
+(``round.FedSim``) and the multi-pod SPMD path (``sharded_round``) pay one
+dispatch per round instead of one per client. Three client placements:
+
+  * ``parallel``  — ``vmap`` over the client axis; on a mesh, pass
+    ``spmd_axes`` so per-client state shards one-client-per-data-slice
+    (the paper's O(d)-communication pattern made structural).
+  * ``sequential`` — ``lax.scan`` over clients, each using the full mesh;
+    for memory-bound configs (>=10B archs with FSDP-sharded client state).
+  * ``chunked``   — scan-of-vmap: chunks of ``chunk_size`` clients run
+    vmapped, chunks run sequentially, so ``clients_per_round`` larger than
+    memory allows still compiles (and dispatches) once. Cohorts that don't
+    divide evenly are padded with zero-weight duplicate clients.
+
+All placements share one copy of the client math (``make_client_update`` —
+FedAvg / FedPA / streaming-FedPA / MIME) and of the weighted aggregation,
+and they produce the same round math up to floating-point reduction order
+(tests/test_round_engine.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedConfig
+from repro.core import tree_math as tm
+from repro.core.client import make_client_update
+from repro.core.server import ServerState, server_update
+from repro.optim import Optimizer, get_optimizer
+
+#: Client placements understood by the engine.
+PLACEMENTS = ("parallel", "sequential", "chunked")
+
+
+def resolve_placement(fed: FedConfig, placement: Optional[str] = None) -> str:
+    """Explicit argument wins; otherwise the ``FedConfig`` knob."""
+    p = placement or fed.round_placement
+    if p not in PLACEMENTS:
+        raise ValueError(f"unknown placement {p!r}; known: {PLACEMENTS}")
+    return p
+
+
+def _resolve_chunk(fed: FedConfig, chunk_size: Optional[int],
+                   num_clients: int) -> int:
+    c = chunk_size if chunk_size is not None else fed.round_chunk_size
+    if c <= 0:
+        # auto: biggest power-of-two chunk <= 8 that isn't larger than the
+        # cohort — small enough to bound peak memory, big enough to amortize.
+        c = 1
+        while c * 2 <= min(8, num_clients):
+            c *= 2
+    return min(c, num_clients)
+
+
+def _normalized_weights(client_weights, num_clients: int) -> jnp.ndarray:
+    if client_weights is None:
+        return jnp.full((num_clients,), 1.0 / num_clients, jnp.float32)
+    w = jnp.asarray(client_weights, jnp.float32)
+    return w / jnp.sum(w)
+
+
+def _weighted_sum(stacked_deltas, weights):
+    """sum_i w_i * delta_i over the leading client axis, in the delta dtype."""
+    return tm.tmap(
+        lambda d: jnp.tensordot(weights.astype(d.dtype), d, axes=1),
+        stacked_deltas,
+    )
+
+
+def make_round_program(
+    grad_fn: Callable,
+    fed: FedConfig,
+    *,
+    placement: Optional[str] = None,
+    chunk_size: Optional[int] = None,
+    spmd_axes: Optional[Tuple[str, ...]] = None,
+    use_sampling: bool = True,
+    client_opt: Optional[Optimizer] = None,
+    server_opt: Optional[Optimizer] = None,
+    wrap_client: Optional[Callable] = None,
+    prepare_params: Optional[Callable] = None,
+    finalize_params: Optional[Callable] = None,
+    constrain_accum: Optional[Callable] = None,
+) -> Callable:
+    """Build ``round_fn(state, client_batches[, client_weights])``.
+
+    ``client_batches``: pytree whose leaves carry a leading client axis C and
+    a second per-client step axis K (``fed.local_steps``). ``client_weights``
+    (optional, shape (C,)) are normalized inside the program; None means
+    uniform. Returns ``(new_state, {"loss_first", "loss_last"})`` with the
+    losses averaged (unweighted) over the cohort.
+
+    ``use_sampling=False`` builds the burn-in-round variant of a FedPA
+    config (the FedAvg regime of Section 5.2) with identical signature.
+
+    Sharding hooks (all optional, identity by default) let the multi-pod
+    path reuse this exact program structure:
+
+    * ``wrap_client(update) -> update'`` — wrap the per-client update, e.g.
+      to all-gather FSDP-sharded params at the compute boundary.
+    * ``prepare_params(params)`` — applied once per round to the server
+      params before they are handed to clients / the server optimizer.
+    * ``finalize_params(params)`` — applied to the post-update params.
+    * ``constrain_accum(zeros, like_params)`` — sharding constraint for the
+      sequential/chunked delta accumulator.
+
+    The returned function is pure and jit-compatible; callers own the
+    ``jax.jit`` (``FedSim`` jits it, the dry-run lowers it un-jitted).
+    """
+    eff = fed
+    if not use_sampling and fed.algorithm == "fedpa":
+        eff = dataclasses.replace(fed, algorithm="fedavg")
+    client_opt = client_opt or get_optimizer(eff.client_opt, eff.client_lr,
+                                             eff.client_momentum)
+    server_opt = server_opt or get_optimizer(eff.server_opt, eff.server_lr,
+                                             eff.server_momentum)
+    client_update = make_client_update(grad_fn, eff, client_opt)
+    if wrap_client is not None:
+        client_update = wrap_client(client_update)
+    place = resolve_placement(fed, placement)
+    needs_server_stats = eff.algorithm == "mime"
+    delta_dtype = jnp.dtype(eff.delta_dtype)
+
+    def _server_stats(state: ServerState):
+        """Frozen server momentum shipped to MIME clients (Section 6)."""
+        opt = state.opt_state
+        if isinstance(opt, dict) and "m" in opt:
+            return opt["m"]
+        return tm.tzeros_like(state.params)
+
+    def _client_axes(n_extra: int):
+        return (None, 0) + (None,) * n_extra
+
+    def _run_parallel(params, client_batches, weights, extras):
+        vm = jax.vmap(client_update, in_axes=_client_axes(len(extras)),
+                      spmd_axis_name=spmd_axes)
+        deltas, metrics = vm(params, client_batches, *extras)
+        return _weighted_sum(deltas, weights), metrics
+
+    def _zero_accum(params):
+        acc = tm.tzeros_like(params, delta_dtype)
+        if constrain_accum is not None:
+            acc = constrain_accum(acc, params)
+        return acc
+
+    def _run_sequential(params, client_batches, weights, extras):
+        def body(acc, xs):
+            batches, w = xs
+            delta, metrics = client_update(params, batches, *extras)
+            acc = tm.tmap(lambda a, d: a + (w * d).astype(a.dtype), acc, delta)
+            return acc, metrics
+
+        return jax.lax.scan(body, _zero_accum(params),
+                            (client_batches, weights))
+
+    def _run_chunked(params, client_batches, weights, extras, chunk):
+        C = weights.shape[0]
+        n_chunks = -(-C // chunk)
+        pad = n_chunks * chunk - C
+        if pad:
+            # zero-weight duplicates of client 0 square off the last chunk
+            client_batches = tm.tmap(
+                lambda x: jnp.concatenate(
+                    [x, jnp.repeat(x[:1], pad, axis=0)], axis=0),
+                client_batches,
+            )
+            weights = jnp.concatenate([weights, jnp.zeros((pad,), weights.dtype)])
+        chunked = tm.tmap(
+            lambda x: x.reshape((n_chunks, chunk) + x.shape[1:]), client_batches
+        )
+        w_chunks = weights.reshape(n_chunks, chunk)
+
+        def body(acc, xs):
+            batches, w = xs
+            vm = jax.vmap(client_update, in_axes=_client_axes(len(extras)),
+                          spmd_axis_name=spmd_axes)
+            deltas, metrics = vm(params, batches, *extras)
+            acc = tm.tmap(lambda a, c: a + c.astype(a.dtype),
+                          acc, _weighted_sum(deltas, w))
+            return acc, metrics
+
+        mean_delta, metrics = jax.lax.scan(body, _zero_accum(params),
+                                           (chunked, w_chunks))
+        # (n_chunks, chunk) -> (C,) with the padding sliced off
+        metrics = tm.tmap(lambda x: x.reshape((n_chunks * chunk,))[:C], metrics)
+        return mean_delta, metrics
+
+    def round_fn(state: ServerState, client_batches, client_weights=None):
+        C = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
+        params = (state.params if prepare_params is None
+                  else prepare_params(state.params))
+        extras = (_server_stats(state),) if needs_server_stats else ()
+        weights = _normalized_weights(client_weights, C)
+
+        if place == "parallel":
+            mean_delta, metrics = _run_parallel(params, client_batches,
+                                                weights, extras)
+        elif place == "sequential":
+            mean_delta, metrics = _run_sequential(params, client_batches,
+                                                  weights, extras)
+        else:
+            chunk = _resolve_chunk(fed, chunk_size, C)
+            mean_delta, metrics = _run_chunked(params, client_batches,
+                                               weights, extras, chunk)
+
+        new_state = server_update(state._replace(params=params), mean_delta,
+                                  server_opt)
+        if finalize_params is not None:
+            new_state = new_state._replace(
+                params=finalize_params(new_state.params))
+        return new_state, {
+            "loss_first": jnp.mean(metrics["loss_first"]),
+            "loss_last": jnp.mean(metrics["loss_last"]),
+        }
+
+    return round_fn

@@ -20,23 +20,24 @@ per client, one O(d) delta aggregation — maps onto the TPU mesh as
     boundary (``tp_constrain``). This trades one weight all-gather per local
     step for fitting O(l d) FedPA state in HBM.
 
-Both placements share the same client math (``make_client_update``); the
-server update runs once per round on the aggregated delta.
+  * ``chunked`` placement: scan-of-vmap middle ground — ``chunk`` clients
+    vmapped at a time, chunks scanned, for cohorts too large to vmap whole.
+
+Both the program structure (placement loops, weighted aggregation, server
+update) and the client math live in ``round_program.make_round_program`` —
+this module only contributes the LM grad_fn and the FSDP/TP sharding hooks,
+so the simulation path (``round.FedSim``) and this path can never diverge.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FedConfig, ModelConfig
 from repro.core import tree_math as tm
-from repro.core.client import make_client_update
-from repro.core.server import ServerState, aggregate_deltas, server_update
+from repro.core.round_program import make_round_program
 from repro.models.steps import lm_grad_fn
-from repro.optim import get_optimizer
 from repro.sharding import fsdp_constrain, tp_constrain
 
 
@@ -50,6 +51,7 @@ def make_fed_round(
     q_chunk: int = 1024,
     remat: str = "full",
     use_sampling: bool = True,
+    chunk_size: Optional[int] = None,
 ) -> Callable:
     """Build ``round_fn(server_state, client_batches) -> (state, metrics)``.
 
@@ -58,67 +60,36 @@ def make_fed_round(
     ``use_sampling=False`` gives the burn-in-round variant (FedAvg regime)
     of the same FedPA config — used for the first ``burn_in_rounds`` rounds.
     """
-    eff_fed = fed
-    if not use_sampling and fed.algorithm == "fedpa":
-        eff_fed = dataclasses.replace(fed, algorithm="fedavg")
-
     grad_fn = lm_grad_fn(cfg, compute_dtype=compute_dtype, q_chunk=q_chunk,
                          remat=remat)
-    client_opt = get_optimizer(eff_fed.client_opt, eff_fed.client_lr,
-                               eff_fed.client_momentum)
-    server_opt = get_optimizer(eff_fed.server_opt, eff_fed.server_lr,
-                               eff_fed.server_momentum)
-    client_update = make_client_update(grad_fn, eff_fed, client_opt)
 
-    if placement == "parallel":
-
-        def round_fn(state: ServerState, client_batches):
-            vm = jax.vmap(client_update, in_axes=(None, 0),
-                          spmd_axis_name=spmd_axes)
-            deltas, metrics = vm(state.params, client_batches)
-            mean_delta = aggregate_deltas(deltas)
-            new_state = server_update(state, mean_delta, server_opt)
-            return new_state, {
-                "loss_first": jnp.mean(metrics["loss_first"]),
-                "loss_last": jnp.mean(metrics["loss_last"]),
-            }
-
-        return round_fn
+    if placement in ("parallel", "chunked"):
+        return make_round_program(
+            grad_fn, fed, placement=placement, chunk_size=chunk_size,
+            spmd_axes=spmd_axes, use_sampling=use_sampling,
+        )
 
     if placement != "sequential":
         raise ValueError(f"unknown placement {placement!r}")
 
-    def fsdp_client_update(master_params, batches):
-        """One client with FSDP-sharded state; compute on gathered bf16."""
-        # the all-gather boundary: compute params are tensor-parallel only
-        gathered = tp_constrain(tm.tcast(master_params, compute_dtype))
-        delta, metrics = client_update(gathered, batches)
-        return fsdp_constrain(delta, like_params=master_params), metrics
+    def wrap_client(client_update):
+        def fsdp_client_update(master_params, batches, *extra):
+            """One client with FSDP-sharded state; compute on gathered bf16."""
+            # the all-gather boundary: compute params are tensor-parallel only
+            gathered = tp_constrain(tm.tcast(master_params, compute_dtype))
+            delta, metrics = client_update(gathered, batches, *extra)
+            return fsdp_constrain(delta, like_params=master_params), metrics
 
-    def round_fn(state: ServerState, client_batches):
-        master = fsdp_constrain(state.params)
+        return fsdp_client_update
 
-        def body(acc, batches):
-            delta, metrics = fsdp_client_update(master, batches)
-            acc = tm.tadd(acc, delta)
-            return acc, metrics
-
-        C = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
-        zero = fsdp_constrain(
-            tm.tzeros_like(state.params, jnp.dtype(eff_fed.delta_dtype)),
-            like_params=state.params,
-        )
-        acc, metrics = jax.lax.scan(body, zero, client_batches)
-        mean_delta = tm.tscale(1.0 / C, acc)
-        new_state = server_update(state._replace(params=master), mean_delta,
-                                  server_opt)
-        new_state = new_state._replace(params=fsdp_constrain(new_state.params))
-        return new_state, {
-            "loss_first": jnp.mean(metrics["loss_first"]),
-            "loss_last": jnp.mean(metrics["loss_last"]),
-        }
-
-    return round_fn
+    return make_round_program(
+        grad_fn, fed, placement="sequential", use_sampling=use_sampling,
+        wrap_client=wrap_client,
+        prepare_params=fsdp_constrain,
+        finalize_params=fsdp_constrain,
+        constrain_accum=lambda zeros, master: fsdp_constrain(
+            zeros, like_params=master),
+    )
 
 
 def default_placement(cfg: ModelConfig, threshold: int = 10_000_000_000) -> str:

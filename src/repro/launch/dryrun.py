@@ -34,7 +34,8 @@ from repro.launch.mesh import make_production_mesh            # noqa: E402
 from repro.launch.specs import client_axes, input_specs       # noqa: E402
 from repro.models.steps import prefill_step, serve_step       # noqa: E402
 from repro.sharding import axis_rules                         # noqa: E402
-from repro.sharding.hlo_cost import analyze as hlo_analyze    # noqa: E402
+from repro.sharding.hlo_cost import (analyze as hlo_analyze,  # noqa: E402
+                                     xla_cost_analysis)
 from repro.sharding.roofline import derive, format_table      # noqa: E402
 
 
@@ -159,7 +160,7 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     # XLA's cost_analysis counts loop bodies once (no trip scaling) — see
     # EXPERIMENTS.md §Roofline/Methodology. Use the trip-count-aware HLO
     # walker for the real per-device numbers; keep XLA's raw view on record.
-    raw_cost = compiled.cost_analysis()
+    raw_cost = xla_cost_analysis(compiled)
     rec["cost_xla_raw"] = {k: raw_cost[k] for k in ("flops", "bytes accessed")
                            if k in raw_cost}
     hlo_text = compiled.as_text()

@@ -6,9 +6,9 @@ touches jax device state — the dry-run sets XLA_FLAGS before first jax use.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
 
 from repro.configs.base import MULTI_POD, SINGLE_POD, MeshConfig
+from repro.sharding import make_mesh_compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -30,13 +30,11 @@ def make_production_mesh(*, multi_pod: bool = False):
             "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
             "any jax import (launch/dryrun.py does this)"
         )
-    return jax.make_mesh(shape, axes, devices=devices,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes, devices=devices)
 
 
 def mesh_from_config(mc: MeshConfig):
-    return jax.make_mesh(mc.shape, mc.axes,
-                         axis_types=(AxisType.Auto,) * len(mc.axes))
+    return make_mesh_compat(mc.shape, mc.axes)
 
 
 def mesh_config(multi_pod: bool = False) -> MeshConfig:
@@ -46,4 +44,4 @@ def mesh_config(multi_pod: bool = False) -> MeshConfig:
 def make_host_mesh():
     """Whatever devices exist, as a 1D ("data",) mesh — CPU simulation."""
     n = jax.device_count()
-    return jax.make_mesh((n,), ("data",), axis_types=(AxisType.Auto,))
+    return make_mesh_compat((n,), ("data",))

@@ -21,7 +21,7 @@ import numpy as np
 from repro import configs
 from repro.checkpoint import restore_checkpoint, save_checkpoint
 from repro.configs.base import FedConfig
-from repro.core.server import ServerState, init_server_state
+from repro.core.server import init_server_state
 from repro.core.sharded_round import make_fed_round
 from repro.data import SyntheticLMData
 from repro.data.sampling import ClientSampler

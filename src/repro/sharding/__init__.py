@@ -5,6 +5,7 @@ from repro.sharding.rules import (  # noqa: F401
     fsdp_constrain,
     fsdp_shardings,
     logical_spec,
+    make_mesh_compat,
     param_shardings,
     tp_constrain,
 )

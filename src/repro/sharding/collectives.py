@@ -15,7 +15,6 @@ recoverable from the HLO (the common case for lax.scan).
 from __future__ import annotations
 
 import re
-from collections import defaultdict
 from typing import Dict
 
 COLLECTIVE_KINDS = (

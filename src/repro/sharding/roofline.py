@@ -22,7 +22,7 @@ factor on a dense arch.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict
 
 from repro.configs.base import ModelConfig, ShapeConfig
 

@@ -31,6 +31,25 @@ DEFAULT_RULES = {
 _STATE = threading.local()
 
 
+def make_mesh_compat(axis_shapes, axis_names, *, devices=None,
+                     explicit=False) -> Mesh:
+    """``jax.make_mesh`` across jax versions.
+
+    jax >= 0.5 grew an ``axis_types`` kwarg (``jax.sharding.AxisType``);
+    0.4.x has neither the kwarg nor the enum. Tests and launch scripts call
+    this instead of ``jax.make_mesh`` so both lines work. ``explicit=True``
+    requests AxisType.Explicit axes where supported (Auto otherwise).
+    """
+    kw = {} if devices is None else {"devices": devices}
+    try:
+        from jax.sharding import AxisType  # noqa: PLC0415
+    except ImportError:  # jax 0.4.x: auto axes are the only behavior
+        return jax.make_mesh(axis_shapes, axis_names, **kw)
+    kind = AxisType.Explicit if explicit else AxisType.Auto
+    return jax.make_mesh(axis_shapes, axis_names,
+                         axis_types=tuple(kind for _ in axis_names), **kw)
+
+
 def current_mesh() -> Optional[Mesh]:
     return getattr(_STATE, "mesh", None)
 

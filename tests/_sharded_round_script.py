@@ -9,7 +9,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
 from repro.configs.base import FedConfig
@@ -17,11 +17,11 @@ from repro.core.server import init_server_state
 from repro.core.sharded_round import make_fed_round
 from repro.models import init_params
 from repro.optim import get_optimizer
-from repro.sharding import axis_rules, fsdp_shardings, param_shardings
+from repro.sharding import (axis_rules, fsdp_shardings, make_mesh_compat,
+                            param_shardings)
 
 assert jax.device_count() == 8, jax.device_count()
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = make_mesh_compat((4, 2), ("data", "model"))
 
 cfg = configs.get_smoke("fedlm-100m")
 fed = FedConfig(algorithm="fedpa", clients_per_round=4, local_steps=4,

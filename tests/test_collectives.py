@@ -1,5 +1,4 @@
 """HLO collective parser + roofline derivation units."""
-import jax.numpy as jnp
 
 from repro.configs import SHAPES, get_config
 from repro.sharding.collectives import _shape_bytes, parse_collectives

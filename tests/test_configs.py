@@ -1,6 +1,4 @@
 """Config registry + invariants the dry-run relies on."""
-import dataclasses
-
 import pytest
 
 from repro import configs

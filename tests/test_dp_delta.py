@@ -3,7 +3,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, strategies as st
 
 import sys
 import repro.core.dp_delta  # noqa: F401  (module import before package alias)

@@ -6,8 +6,6 @@
 3. The full IASG-based FedPA pipeline (Algorithm 1+3+4) beats the FedAvg
    fixed point on a heterogeneous federated least-squares problem.
 """
-import dataclasses
-
 import numpy as np
 import jax
 import jax.numpy as jnp

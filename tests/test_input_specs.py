@@ -3,17 +3,18 @@ the dry-run lowers against (no device allocation; single-device mesh)."""
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import AxisType
 
 from repro import configs
 from repro.configs.base import SHAPES
 from repro.launch.dryrun import default_fed_config
 from repro.launch.specs import input_specs
+from repro.sharding import make_mesh_compat
 
 
 @pytest.fixture(scope="module")
 def mesh():
-    return jax.make_mesh((1,), ("data",), axis_types=(AxisType.Auto,))
+    # version-guarded: jax 0.4.x has no AxisType / axis_types kwarg
+    return make_mesh_compat((1,), ("data",))
 
 
 @pytest.mark.parametrize("arch", configs.ASSIGNED_ARCHS)
