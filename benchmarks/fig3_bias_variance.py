@@ -21,8 +21,8 @@ import numpy as np
 
 from repro.core.diagnostics import bias_variance
 from repro.core.dp_delta import dp_delta
-from repro.core.shrinkage import dense_delta
 from repro.core.iasg import iasg_sample, sgd_steps
+from repro.core.shrinkage import dense_delta
 from repro.data import make_federated_lsq
 from repro.data.synthetic_lsq import lsq_batches
 from repro.optim import sgd

@@ -10,7 +10,8 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_round_engine, bench_roofline, fig1_quadratic,
+from benchmarks import (bench_async_engine, bench_roofline,
+                        bench_round_engine, fig1_quadratic,
                         fig3_bias_variance, fig4_ess, table1_client_cost,
                         table3_benchmark_sim, table3_lr_sim)
 
@@ -23,6 +24,7 @@ BENCHES = {
     "table3lr": table3_lr_sim,
     "roofline": bench_roofline,
     "round_engine": bench_round_engine,
+    "async_engine": bench_async_engine,
 }
 
 

@@ -16,8 +16,8 @@ import numpy as np
 
 from repro.configs.base import FedConfig
 from repro.core.client import make_client_update
-from repro.core.shrinkage import dense_delta
 from repro.core.iasg import iasg_sample
+from repro.core.shrinkage import dense_delta
 from repro.data import make_federated_lsq
 from repro.data.synthetic_lsq import lsq_batches
 from repro.optim import sgd

@@ -10,9 +10,9 @@ little precision for better macro-F1 (rare-tag recall).
 """
 from __future__ import annotations
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import FedConfig
 from repro.core.round import FedSim

@@ -10,9 +10,9 @@ rounds.
   PYTHONPATH=src python examples/train_lm_federated.py --full \
       --rounds 300 --clients 8 --batch 8 --seq-len 512            # real
 """
+import os
 import subprocess
 import sys
-import os
 
 
 def main():

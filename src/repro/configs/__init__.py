@@ -10,20 +10,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List
 
-from repro.configs.base import (  # noqa: F401 (public re-exports)
-    FedConfig,
-    INPUT_SHAPES,
-    LayerSpec,
-    MeshConfig,
-    ModelConfig,
-    MoEConfig,
-    MULTI_POD,
-    SHAPES,
-    ShapeConfig,
-    SINGLE_POD,
-    replace,
-)
-
 from repro.configs import (
     fedlm_100m,
     gemma3_27b,
@@ -36,6 +22,19 @@ from repro.configs import (
     qwen3_moe_30b_a3b,
     recurrentgemma_9b,
     xlstm_125m,
+)
+from repro.configs.base import (  # noqa: F401 (public re-exports)
+    INPUT_SHAPES,
+    MULTI_POD,
+    SHAPES,
+    SINGLE_POD,
+    FedConfig,
+    LayerSpec,
+    MeshConfig,
+    ModelConfig,
+    MoEConfig,
+    ShapeConfig,
+    replace,
 )
 
 #: The ten assigned architectures (public-pool ids) + the framework's own LM.

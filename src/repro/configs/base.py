@@ -220,6 +220,19 @@ class FedConfig:
     # Clients vmapped per chunk in the "chunked" placement; 0 = auto
     # (largest power of two <= min(8, clients_per_round)).
     round_chunk_size: int = 0
+    # --- async engine (core/async_engine.py) ---
+    # Overlap cohort t+1's client compute with round t's server update.
+    async_rounds: bool = False
+    # Cohorts allowed in flight beyond the one being applied; a delta
+    # computed at params version v is applied at version v+s with s <= this.
+    # 0 reproduces the synchronous round engine numerically.
+    max_staleness: int = 1
+    # A staleness-s delta is scaled by staleness_discount**s before the
+    # server optimizer sees it (1.0 = no down-weighting).
+    staleness_discount: float = 1.0
+    # Cohort batch trees stacked ahead of the round loop by a background
+    # host thread (data/prefetch.py); 0 = stack inline as before.
+    prefetch_rounds: int = 0
 
     def __post_init__(self):
         if self.algorithm not in ("fedavg", "fedpa", "mime"):
@@ -229,11 +242,27 @@ class FedConfig:
                 f"unknown round_placement {self.round_placement!r}")
         if self.round_chunk_size < 0:
             raise ValueError("round_chunk_size must be >= 0")
+        if self.max_staleness < 0:
+            raise ValueError("max_staleness must be >= 0")
+        if not 0.0 <= self.staleness_discount <= 1.0:
+            raise ValueError("staleness_discount must be in [0, 1]")
+        if self.prefetch_rounds < 0:
+            raise ValueError("prefetch_rounds must be >= 0")
         if self.algorithm == "fedpa":
             if self.num_samples < 1:
                 raise ValueError(
                     "fedpa needs local_steps > burn_in_steps + steps_per_sample"
                 )
+            sampling_steps = self.local_steps - self.burn_in_steps
+            if sampling_steps % self.steps_per_sample != 0:
+                raise ValueError(
+                    f"fedpa sampling steps must divide into whole IASG "
+                    f"windows: local_steps - burn_in_steps = "
+                    f"{self.local_steps} - {self.burn_in_steps} = "
+                    f"{sampling_steps} is not a multiple of "
+                    f"steps_per_sample = {self.steps_per_sample} "
+                    f"({sampling_steps % self.steps_per_sample} leftover "
+                    f"batches)")
 
     @property
     def num_samples(self) -> int:

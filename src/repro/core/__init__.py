@@ -5,6 +5,7 @@ Layers (bottom-up): tree_math -> shrinkage/dp_delta/posterior/iasg
 round_program (the one-jit-per-round engine) -> round (simulation) /
 sharded_round (multi-pod SPMD), both thin frontends over the engine.
 """
+from repro.core.async_engine import AsyncRoundEngine  # noqa: F401
 from repro.core.client import make_client_update  # noqa: F401
 from repro.core.diagnostics import (  # noqa: F401
     bias_variance,
@@ -30,14 +31,23 @@ from repro.core.posterior import (  # noqa: F401
 from repro.core.round import FedSim  # noqa: F401
 from repro.core.round_program import (  # noqa: F401
     PLACEMENTS,
+    make_cohort_program,
     make_round_program,
+    make_server_program,
 )
 from repro.core.server import (  # noqa: F401
     ServerState,
     aggregate_deltas,
     aggregate_deltas_list,
+    check_weight_total,
     init_server_state,
+    normalized_weights,
     server_update,
+    weighted_sum,
 )
-from repro.core.sharded_round import default_placement, make_fed_round  # noqa: F401
+from repro.core.sharded_round import (  # noqa: F401
+    default_placement,
+    make_fed_round,
+    make_fed_round_split,
+)
 from repro.core.shrinkage import dense_delta, shrinkage_cov  # noqa: F401

@@ -11,9 +11,8 @@ from __future__ import annotations
 
 from typing import Callable
 
-import jax.numpy as jnp
-
 import jax
+import jax.numpy as jnp
 
 from repro.configs.base import FedConfig
 from repro.core import tree_math as tm

@@ -1,11 +1,22 @@
 """Single-process federated simulation (the paper's experimental regime).
 
 Drives Algorithm 1 on top of the unified compiled round engine
-(``round_program.make_round_program``): the host loop only samples client
-ids and stacks their batches — the whole round (cohort of client updates,
-weighted aggregation, server step) is ONE jitted XLA program per round
-configuration, not one dispatch per client. The production multi-pod path
-(``sharded_round.py``) builds on the same engine.
+(``round_program``): the host loop only samples client ids and stacks their
+batches — the whole round (cohort of client updates, weighted aggregation,
+server step) is ONE jitted XLA program per round configuration, not one
+dispatch per client. Two execution modes:
+
+  * synchronous (default): the fused ``make_round_program`` round, with the
+    cohort optionally stacked one round ahead on a background thread
+    (``fed.prefetch_rounds > 0``);
+  * async (``fed.async_rounds=True``): the double-buffered
+    ``core.async_engine`` pipeline — cohort t+1's client compute overlaps
+    round t's server update, deltas down-weighted by
+    ``staleness_discount**staleness``; ``max_staleness=0`` reproduces the
+    sync path numerically.
+
+The production multi-pod path (``sharded_round.py``) builds on the same
+engine.
 """
 from __future__ import annotations
 
@@ -16,9 +27,13 @@ import jax
 import numpy as np
 
 from repro.configs.base import FedConfig
-from repro.core.round_program import make_round_program
-from repro.core.server import ServerState, init_server_state
-from repro.core.tree_math import tstack
+from repro.core.async_engine import AsyncRoundEngine
+from repro.core.round_program import (make_cohort_program,
+                                      make_round_program,
+                                      make_server_program)
+from repro.core.server import (ServerState, check_weight_total,
+                               init_server_state)
+from repro.data.prefetch import Cohort, CohortPrefetcher, stack_host
 from repro.data.sampling import ClientSampler
 from repro.optim import get_optimizer
 
@@ -58,41 +73,103 @@ class FedSim:
 
         self._round = build(use_sampling=True)
         # burn-in rounds run the FedAvg-regime update (Section 5.2)
-        if self.fed.algorithm == "fedpa" and self.fed.burn_in_rounds > 0:
+        self._has_burn_regime = (self.fed.algorithm == "fedpa"
+                                 and self.fed.burn_in_rounds > 0)
+        if self._has_burn_regime:
             self._burn_round = build(use_sampling=False)
         else:
             self._burn_round = self._round
+        self._engine: Optional[AsyncRoundEngine] = None
 
     def init(self, params) -> ServerState:
         return init_server_state(params, self.server_opt)
 
     def stack_cohort(self, client_ids, round_idx: int):
-        """Materialize the cohort's batches with a leading client axis."""
-        return tstack([
+        """Materialize the cohort's batches with a leading client axis.
+
+        Stacks on the host (numpy) so the work can run on the prefetch
+        thread without contending for the device dispatch stream; the
+        stacked cohort transfers once, when the round program consumes it.
+        """
+        return stack_host([
             self.batch_fn(int(cid), round_idx, self.fed.local_steps)
             for cid in client_ids
         ])
 
-    def round(self, state: ServerState, round_idx: int):
+    def cohort(self, round_idx: int) -> Cohort:
+        """Sample and materialize one round's inputs (the host-side work the
+        prefetcher runs ahead of the round loop)."""
         client_ids = self.sampler.sample(round_idx)
+        batches = self.stack_cohort(client_ids, round_idx)
+        if self.client_weights is None:
+            weights = None
+        else:
+            weights = np.asarray([self.client_weights[int(c)]
+                                  for c in client_ids], np.float32)
+            check_weight_total(float(weights.sum()), weights.shape,
+                               context=f"round {round_idx}: ")
+        return Cohort(round_idx, client_ids, batches, weights)
+
+    def round(self, state: ServerState, round_idx: int,
+              cohort: Optional[Cohort] = None):
+        cohort = cohort if cohort is not None else self.cohort(round_idx)
         round_fn = (self._burn_round if round_idx < self.fed.burn_in_rounds
                     else self._round)
-        batches = self.stack_cohort(client_ids, round_idx)
-        weights = (None if self.client_weights is None
-                   else np.asarray([self.client_weights[int(c)]
-                                    for c in client_ids], np.float32))
-        state, metrics = round_fn(state, batches, weights)
-        return state, {"client_loss": float(metrics["loss_last"])}
+        state, metrics = round_fn(state, cohort.batches, cohort.weights)
+        loss_first = float(metrics["loss_first"])
+        loss_last = float(metrics["loss_last"])
+        return state, {"client_loss": loss_last, "loss_first": loss_first,
+                       "loss_last": loss_last}
 
     def run(self, params, num_rounds: int,
             eval_fn: Optional[Callable] = None, eval_every: int = 1):
         state = self.init(params)
+        if self.fed.async_rounds:
+            return self._run_async(state, num_rounds, eval_fn, eval_every)
+
+        prefetch = (CohortPrefetcher(self.cohort, 0, num_rounds,
+                                     depth=self.fed.prefetch_rounds)
+                    if self.fed.prefetch_rounds > 0 else None)
         history: List[dict] = []
-        for r in range(num_rounds):
-            state, metrics = self.round(state, r)
-            if eval_fn is not None and (r % eval_every == 0
-                                        or r == num_rounds - 1):
-                metrics = {**metrics, **eval_fn(state.params)}
-            metrics["round"] = r
-            history.append(metrics)
+        try:
+            for r in range(num_rounds):
+                cohort = prefetch.get(r) if prefetch is not None else None
+                state, metrics = self.round(state, r, cohort)
+                if eval_fn is not None and (r % eval_every == 0
+                                            or r == num_rounds - 1):
+                    metrics = {**metrics, **eval_fn(state.params)}
+                metrics["round"] = r
+                history.append(metrics)
+        finally:
+            if prefetch is not None:
+                prefetch.close()
         return state, history
+
+    def _run_async(self, state: ServerState, num_rounds: int,
+                   eval_fn: Optional[Callable], eval_every: int):
+        engine = self._async_engine
+        return engine.run(state, self.cohort, num_rounds,
+                          eval_fn=eval_fn, eval_every=eval_every)
+
+    @property
+    def _async_engine(self) -> AsyncRoundEngine:
+        """Built once so the engine's jit caches survive repeated run()s."""
+        if self._engine is None:
+            self._engine = self._build_async_engine()
+        return self._engine
+
+    def _build_async_engine(self) -> AsyncRoundEngine:
+        return AsyncRoundEngine(
+            cohort_fn=make_cohort_program(
+                self.grad_fn, self.fed, placement=self.placement,
+                use_sampling=True),
+            server_fn=make_server_program(self.fed,
+                                          server_opt=self.server_opt),
+            burn_cohort_fn=(make_cohort_program(
+                self.grad_fn, self.fed, placement=self.placement,
+                use_sampling=False) if self._has_burn_regime else None),
+            burn_in_rounds=self.fed.burn_in_rounds,
+            max_staleness=self.fed.max_staleness,
+            staleness_discount=self.fed.staleness_discount,
+            prefetch_rounds=self.fed.prefetch_rounds,
+        )

@@ -4,7 +4,16 @@ An entire generalized federated round (Algorithm 1) — cohort of clients
 running their local updates, weighted delta aggregation, server optimizer
 step — is staged as a single jittable function, so the simulation path
 (``round.FedSim``) and the multi-pod SPMD path (``sharded_round``) pay one
-dispatch per round instead of one per client. Three client placements:
+dispatch per round instead of one per client. The round factors into two
+separately jittable stages:
+
+  * ``make_cohort_program`` — clients -> weighted mean delta (+ losses);
+  * ``make_server_program`` — server optimizer step, with an optional
+    staleness discount on the delta (``core/async_engine.py`` overlaps
+    cohort t+1 with server round t using exactly these two stages);
+
+and ``make_round_program`` fuses them back into the single-dispatch
+``round_fn`` the synchronous paths jit. Three client placements:
 
   * ``parallel``  — ``vmap`` over the client axis; on a mesh, pass
     ``spmd_axes`` so per-client state shards one-client-per-data-slice
@@ -32,7 +41,8 @@ import jax.numpy as jnp
 from repro.configs.base import FedConfig
 from repro.core import tree_math as tm
 from repro.core.client import make_client_update
-from repro.core.server import ServerState, server_update
+from repro.core.server import (ServerState, normalized_weights,
+                               server_update, weighted_sum)
 from repro.optim import Optimizer, get_optimizer
 
 #: Client placements understood by the engine.
@@ -59,22 +69,7 @@ def _resolve_chunk(fed: FedConfig, chunk_size: Optional[int],
     return min(c, num_clients)
 
 
-def _normalized_weights(client_weights, num_clients: int) -> jnp.ndarray:
-    if client_weights is None:
-        return jnp.full((num_clients,), 1.0 / num_clients, jnp.float32)
-    w = jnp.asarray(client_weights, jnp.float32)
-    return w / jnp.sum(w)
-
-
-def _weighted_sum(stacked_deltas, weights):
-    """sum_i w_i * delta_i over the leading client axis, in the delta dtype."""
-    return tm.tmap(
-        lambda d: jnp.tensordot(weights.astype(d.dtype), d, axes=1),
-        stacked_deltas,
-    )
-
-
-def make_round_program(
+def make_cohort_program(
     grad_fn: Callable,
     fed: FedConfig,
     *,
@@ -83,44 +78,29 @@ def make_round_program(
     spmd_axes: Optional[Tuple[str, ...]] = None,
     use_sampling: bool = True,
     client_opt: Optional[Optimizer] = None,
-    server_opt: Optional[Optimizer] = None,
     wrap_client: Optional[Callable] = None,
     prepare_params: Optional[Callable] = None,
-    finalize_params: Optional[Callable] = None,
     constrain_accum: Optional[Callable] = None,
 ) -> Callable:
-    """Build ``round_fn(state, client_batches[, client_weights])``.
+    """Build ``cohort_fn(state, client_batches[, client_weights])``.
 
-    ``client_batches``: pytree whose leaves carry a leading client axis C and
-    a second per-client step axis K (``fed.local_steps``). ``client_weights``
-    (optional, shape (C,)) are normalized inside the program; None means
-    uniform. Returns ``(new_state, {"loss_first", "loss_last"})`` with the
-    losses averaged (unweighted) over the cohort.
+    The client half of a round: cohort of local updates -> weighted mean
+    delta. ``client_batches``: pytree whose leaves carry a leading client
+    axis C and a second per-client step axis K (``fed.local_steps``).
+    ``client_weights`` (optional, shape (C,)) are normalized inside the
+    program; None means uniform. Returns ``(mean_delta, {"loss_first",
+    "loss_last"})`` with the losses averaged (unweighted) over the cohort.
 
-    ``use_sampling=False`` builds the burn-in-round variant of a FedPA
-    config (the FedAvg regime of Section 5.2) with identical signature.
-
-    Sharding hooks (all optional, identity by default) let the multi-pod
-    path reuse this exact program structure:
-
-    * ``wrap_client(update) -> update'`` — wrap the per-client update, e.g.
-      to all-gather FSDP-sharded params at the compute boundary.
-    * ``prepare_params(params)`` — applied once per round to the server
-      params before they are handed to clients / the server optimizer.
-    * ``finalize_params(params)`` — applied to the post-update params.
-    * ``constrain_accum(zeros, like_params)`` — sharding constraint for the
-      sequential/chunked delta accumulator.
-
-    The returned function is pure and jit-compatible; callers own the
-    ``jax.jit`` (``FedSim`` jits it, the dry-run lowers it un-jitted).
+    Takes the full ``ServerState`` (not just params) because MIME clients
+    read the frozen server momentum out of the optimizer state; only
+    ``state.params`` (+ opt stats) are consumed, so the async engine may
+    pass a state that is ``s`` versions stale.
     """
     eff = fed
     if not use_sampling and fed.algorithm == "fedpa":
         eff = dataclasses.replace(fed, algorithm="fedavg")
     client_opt = client_opt or get_optimizer(eff.client_opt, eff.client_lr,
                                              eff.client_momentum)
-    server_opt = server_opt or get_optimizer(eff.server_opt, eff.server_lr,
-                                             eff.server_momentum)
     client_update = make_client_update(grad_fn, eff, client_opt)
     if wrap_client is not None:
         client_update = wrap_client(client_update)
@@ -142,7 +122,7 @@ def make_round_program(
         vm = jax.vmap(client_update, in_axes=_client_axes(len(extras)),
                       spmd_axis_name=spmd_axes)
         deltas, metrics = vm(params, client_batches, *extras)
-        return _weighted_sum(deltas, weights), metrics
+        return weighted_sum(deltas, weights), metrics
 
     def _zero_accum(params):
         acc = tm.tzeros_like(params, delta_dtype)
@@ -183,7 +163,7 @@ def make_round_program(
                           spmd_axis_name=spmd_axes)
             deltas, metrics = vm(params, batches, *extras)
             acc = tm.tmap(lambda a, c: a + c.astype(a.dtype),
-                          acc, _weighted_sum(deltas, w))
+                          acc, weighted_sum(deltas, w))
             return acc, metrics
 
         mean_delta, metrics = jax.lax.scan(body, _zero_accum(params),
@@ -192,12 +172,12 @@ def make_round_program(
         metrics = tm.tmap(lambda x: x.reshape((n_chunks * chunk,))[:C], metrics)
         return mean_delta, metrics
 
-    def round_fn(state: ServerState, client_batches, client_weights=None):
+    def cohort_fn(state: ServerState, client_batches, client_weights=None):
         C = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
         params = (state.params if prepare_params is None
                   else prepare_params(state.params))
         extras = (_server_stats(state),) if needs_server_stats else ()
-        weights = _normalized_weights(client_weights, C)
+        weights = normalized_weights(client_weights, C)
 
         if place == "parallel":
             mean_delta, metrics = _run_parallel(params, client_batches,
@@ -210,14 +190,107 @@ def make_round_program(
             mean_delta, metrics = _run_chunked(params, client_batches,
                                                weights, extras, chunk)
 
+        return mean_delta, {
+            "loss_first": jnp.mean(metrics["loss_first"]),
+            "loss_last": jnp.mean(metrics["loss_last"]),
+        }
+
+    return cohort_fn
+
+
+def make_server_program(
+    fed: FedConfig,
+    *,
+    server_opt: Optional[Optimizer] = None,
+    prepare_params: Optional[Callable] = None,
+    finalize_params: Optional[Callable] = None,
+) -> Callable:
+    """Build ``server_fn(state, mean_delta, discount=None) -> new_state``.
+
+    The server half of a round: one server-optimizer step on the aggregated
+    pseudo-gradient. ``discount`` (optional traced scalar) scales the delta
+    before the optimizer sees it — the async engine passes
+    ``staleness_discount ** s`` for a delta computed at params version ``v``
+    and applied at version ``v + s``; ``discount=None`` (or 1.0) is the
+    synchronous update. The scaling runs in fp32 and casts back to the
+    delta dtype, so a discount of exactly 1.0 is a bitwise no-op and the
+    ``staleness=0`` async path matches the fused sync program.
+    """
+    server_opt = server_opt or get_optimizer(fed.server_opt, fed.server_lr,
+                                             fed.server_momentum)
+
+    def server_fn(state: ServerState, mean_delta, discount=None):
+        params = (state.params if prepare_params is None
+                  else prepare_params(state.params))
+        if discount is not None:
+            d = jnp.asarray(discount, jnp.float32)
+            mean_delta = tm.tmap(
+                lambda x: (d * x.astype(jnp.float32)).astype(x.dtype),
+                mean_delta)
         new_state = server_update(state._replace(params=params), mean_delta,
                                   server_opt)
         if finalize_params is not None:
             new_state = new_state._replace(
                 params=finalize_params(new_state.params))
-        return new_state, {
-            "loss_first": jnp.mean(metrics["loss_first"]),
-            "loss_last": jnp.mean(metrics["loss_last"]),
-        }
+        return new_state
+
+    return server_fn
+
+
+def make_round_program(
+    grad_fn: Callable,
+    fed: FedConfig,
+    *,
+    placement: Optional[str] = None,
+    chunk_size: Optional[int] = None,
+    spmd_axes: Optional[Tuple[str, ...]] = None,
+    use_sampling: bool = True,
+    client_opt: Optional[Optimizer] = None,
+    server_opt: Optional[Optimizer] = None,
+    wrap_client: Optional[Callable] = None,
+    prepare_params: Optional[Callable] = None,
+    finalize_params: Optional[Callable] = None,
+    constrain_accum: Optional[Callable] = None,
+) -> Callable:
+    """Build the fused ``round_fn(state, client_batches[, client_weights])``.
+
+    Composes ``make_cohort_program`` and ``make_server_program`` into the
+    single-dispatch synchronous round: cohort of client updates -> weighted
+    aggregation -> server step. Returns ``(new_state, {"loss_first",
+    "loss_last"})``.
+
+    ``use_sampling=False`` builds the burn-in-round variant of a FedPA
+    config (the FedAvg regime of Section 5.2) with identical signature.
+
+    Sharding hooks (all optional, identity by default) let the multi-pod
+    path reuse this exact program structure:
+
+    * ``wrap_client(update) -> update'`` — wrap the per-client update, e.g.
+      to all-gather FSDP-sharded params at the compute boundary.
+    * ``prepare_params(params)`` — applied to the server params before they
+      are handed to clients / the server optimizer. Must be idempotent
+      (sharding constraints are): the cohort and server stages each apply
+      it, so the fused round runs it twice per round.
+    * ``finalize_params(params)`` — applied to the post-update params.
+    * ``constrain_accum(zeros, like_params)`` — sharding constraint for the
+      sequential/chunked delta accumulator.
+
+    The returned function is pure and jit-compatible; callers own the
+    ``jax.jit`` (``FedSim`` jits it, the dry-run lowers it un-jitted).
+    """
+    cohort_fn = make_cohort_program(
+        grad_fn, fed, placement=placement, chunk_size=chunk_size,
+        spmd_axes=spmd_axes, use_sampling=use_sampling, client_opt=client_opt,
+        wrap_client=wrap_client, prepare_params=prepare_params,
+        constrain_accum=constrain_accum,
+    )
+    server_fn = make_server_program(
+        fed, server_opt=server_opt, prepare_params=prepare_params,
+        finalize_params=finalize_params,
+    )
+
+    def round_fn(state: ServerState, client_batches, client_weights=None):
+        mean_delta, metrics = cohort_fn(state, client_batches, client_weights)
+        return server_fn(state, mean_delta), metrics
 
     return round_fn

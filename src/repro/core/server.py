@@ -9,6 +9,7 @@ from __future__ import annotations
 
 from typing import NamedTuple, Optional, Sequence
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import tree_math as tm
@@ -26,14 +27,59 @@ def init_server_state(params, server_opt: Optimizer) -> ServerState:
                        jnp.zeros((), jnp.int32))
 
 
-def aggregate_deltas(deltas, weights: Optional[jnp.ndarray] = None):
-    """Weighted mean over the leading client axis of stacked deltas."""
-    if weights is None:
-        return tm.tmap(lambda d: jnp.mean(d, axis=0), deltas)
-    w = weights / jnp.sum(weights)
+def check_weight_total(total: float, shape=None, context: str = "") -> None:
+    """Shared host-side guard: raise on a non-positive cohort weight sum —
+    loudly, before the NaN it would produce can poison the server state and
+    only surface rounds later."""
+    if not total > 0.0:
+        raise ValueError(
+            f"{context}cohort weights must sum to a positive total, got "
+            f"sum={total}"
+            + (f" for weights of shape {shape}" if shape is not None else ""))
+
+
+def normalized_weights(client_weights, num_clients: int) -> jnp.ndarray:
+    """Cohort weights -> fp32 simplex weights (None = uniform).
+
+    Eager weights with a non-positive sum raise (``check_weight_total``).
+    Traced weights (inside jit) degrade to an all-zero vector (a no-op
+    round) instead of dividing by zero.
+    """
+    if client_weights is None:
+        return jnp.full((num_clients,), 1.0 / num_clients, jnp.float32)
+    w = jnp.asarray(client_weights, jnp.float32)
+    total = jnp.sum(w)
+    if not isinstance(total, jax.core.Tracer):
+        check_weight_total(float(total), w.shape)
+    return jnp.where(total > 0, w / jnp.where(total > 0, total, 1.0),
+                     jnp.zeros_like(w))
+
+
+def weighted_sum(stacked_deltas, weights):
+    """sum_i w_i * delta_i over the leading client axis.
+
+    The reduction runs in fp32 regardless of the delta dtype and the result
+    is cast once at the end — casting the normalized weights down to e.g.
+    bf16 first would round realistic example-count weights to ~2 decimal
+    digits and bias the aggregate.
+    """
     return tm.tmap(
-        lambda d: jnp.tensordot(w.astype(d.dtype), d, axes=1), deltas
+        lambda d: jnp.tensordot(
+            weights, d.astype(jnp.float32), axes=1).astype(d.dtype),
+        stacked_deltas,
     )
+
+
+def aggregate_deltas(deltas, weights: Optional[jnp.ndarray] = None):
+    """Weighted mean over the leading client axis of stacked deltas.
+
+    Both paths reduce in fp32 and cast once to the delta dtype."""
+    if weights is None:
+        return tm.tmap(
+            lambda d: jnp.mean(d.astype(jnp.float32), axis=0).astype(d.dtype),
+            deltas)
+    num = jax.tree_util.tree_leaves(deltas)[0].shape[0]
+    return weighted_sum(deltas, normalized_weights(weights, num))
 
 
 def aggregate_deltas_list(deltas: Sequence, weights=None):
@@ -43,6 +89,7 @@ def aggregate_deltas_list(deltas: Sequence, weights=None):
         weights = [1.0 / n] * n
     else:
         tot = sum(weights)
+        check_weight_total(float(tot))
         weights = [w / tot for w in weights]
     acc = tm.tscale(weights[0], deltas[0])
     for w, d in zip(weights[1:], deltas[1:]):

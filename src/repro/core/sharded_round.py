@@ -36,9 +36,57 @@ import jax.numpy as jnp
 
 from repro.configs.base import FedConfig, ModelConfig
 from repro.core import tree_math as tm
-from repro.core.round_program import make_round_program
+from repro.core.round_program import (make_cohort_program,
+                                      make_round_program,
+                                      make_server_program)
 from repro.models.steps import lm_grad_fn
 from repro.sharding import fsdp_constrain, tp_constrain
+
+
+def _program_pieces(
+    cfg: ModelConfig,
+    fed: FedConfig,
+    placement: str,
+    spmd_axes: Optional[Tuple[str, ...]],
+    compute_dtype,
+    q_chunk: int,
+    remat: str,
+    use_sampling: bool,
+    chunk_size: Optional[int],
+):
+    """Shared wiring: (grad_fn, cohort_kwargs, server_kwargs) for a given
+    placement — one source of truth for the fused and split builders."""
+    grad_fn = lm_grad_fn(cfg, compute_dtype=compute_dtype, q_chunk=q_chunk,
+                         remat=remat)
+
+    if placement in ("parallel", "chunked"):
+        cohort_kw = dict(placement=placement, chunk_size=chunk_size,
+                         spmd_axes=spmd_axes, use_sampling=use_sampling)
+        return grad_fn, cohort_kw, {}
+
+    if placement != "sequential":
+        raise ValueError(f"unknown placement {placement!r}")
+
+    def wrap_client(client_update):
+        def fsdp_client_update(master_params, batches, *extra):
+            """One client with FSDP-sharded state; compute on gathered bf16."""
+            # the all-gather boundary: compute params are tensor-parallel only
+            gathered = tp_constrain(tm.tcast(master_params, compute_dtype))
+            delta, metrics = client_update(gathered, batches, *extra)
+            return fsdp_constrain(delta, like_params=master_params), metrics
+
+        return fsdp_client_update
+
+    cohort_kw = dict(
+        placement="sequential", use_sampling=use_sampling,
+        wrap_client=wrap_client,
+        prepare_params=fsdp_constrain,
+        constrain_accum=lambda zeros, master: fsdp_constrain(
+            zeros, like_params=master),
+    )
+    server_kw = dict(prepare_params=fsdp_constrain,
+                     finalize_params=fsdp_constrain)
+    return grad_fn, cohort_kw, server_kw
 
 
 def make_fed_round(
@@ -60,36 +108,32 @@ def make_fed_round(
     ``use_sampling=False`` gives the burn-in-round variant (FedAvg regime)
     of the same FedPA config — used for the first ``burn_in_rounds`` rounds.
     """
-    grad_fn = lm_grad_fn(cfg, compute_dtype=compute_dtype, q_chunk=q_chunk,
-                         remat=remat)
+    grad_fn, cohort_kw, server_kw = _program_pieces(
+        cfg, fed, placement, spmd_axes, compute_dtype, q_chunk, remat,
+        use_sampling, chunk_size)
+    # both stages share prepare_params; merge instead of passing it twice
+    return make_round_program(grad_fn, fed, **{**cohort_kw, **server_kw})
 
-    if placement in ("parallel", "chunked"):
-        return make_round_program(
-            grad_fn, fed, placement=placement, chunk_size=chunk_size,
-            spmd_axes=spmd_axes, use_sampling=use_sampling,
-        )
 
-    if placement != "sequential":
-        raise ValueError(f"unknown placement {placement!r}")
-
-    def wrap_client(client_update):
-        def fsdp_client_update(master_params, batches, *extra):
-            """One client with FSDP-sharded state; compute on gathered bf16."""
-            # the all-gather boundary: compute params are tensor-parallel only
-            gathered = tp_constrain(tm.tcast(master_params, compute_dtype))
-            delta, metrics = client_update(gathered, batches, *extra)
-            return fsdp_constrain(delta, like_params=master_params), metrics
-
-        return fsdp_client_update
-
-    return make_round_program(
-        grad_fn, fed, placement="sequential", use_sampling=use_sampling,
-        wrap_client=wrap_client,
-        prepare_params=fsdp_constrain,
-        finalize_params=fsdp_constrain,
-        constrain_accum=lambda zeros, master: fsdp_constrain(
-            zeros, like_params=master),
-    )
+def make_fed_round_split(
+    cfg: ModelConfig,
+    fed: FedConfig,
+    *,
+    placement: str = "parallel",
+    spmd_axes: Optional[Tuple[str, ...]] = None,
+    compute_dtype=jnp.bfloat16,
+    q_chunk: int = 1024,
+    remat: str = "full",
+    use_sampling: bool = True,
+    chunk_size: Optional[int] = None,
+) -> Tuple[Callable, Callable]:
+    """Same wiring as ``make_fed_round`` but split into the two async-engine
+    stages: ``(cohort_fn, server_fn)`` (see ``core.async_engine``)."""
+    grad_fn, cohort_kw, server_kw = _program_pieces(
+        cfg, fed, placement, spmd_axes, compute_dtype, q_chunk, remat,
+        use_sampling, chunk_size)
+    return (make_cohort_program(grad_fn, fed, **cohort_kw),
+            make_server_program(fed, **server_kw))
 
 
 def default_placement(cfg: ModelConfig, threshold: int = 10_000_000_000) -> str:

@@ -1,8 +1,13 @@
+from repro.data.dirichlet import make_dirichlet_classification  # noqa: F401
+from repro.data.lm_synthetic import SyntheticLMData  # noqa: F401
+from repro.data.prefetch import (  # noqa: F401
+    Cohort,
+    CohortPrefetcher,
+    stack_host,
+)
+from repro.data.sampling import ClientSampler  # noqa: F401
 from repro.data.synthetic_lsq import (  # noqa: F401
     make_federated_lsq,
     make_quadratic_clients,
     make_regression,
 )
-from repro.data.dirichlet import make_dirichlet_classification  # noqa: F401
-from repro.data.lm_synthetic import SyntheticLMData  # noqa: F401
-from repro.data.sampling import ClientSampler  # noqa: F401

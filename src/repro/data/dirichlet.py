@@ -12,8 +12,8 @@ from __future__ import annotations
 
 from typing import NamedTuple
 
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 
 
 class FederatedClassification(NamedTuple):

@@ -13,8 +13,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 
 
 def _client_rng(seed: int, client_id: int, salt: int = 0) -> np.random.Generator:

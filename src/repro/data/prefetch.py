@@ -1,0 +1,127 @@
+"""Host-side cohort prefetcher.
+
+``FedSim.stack_cohort`` stacks per-client batch trees in Python each round
+(~10ms at 16 clients on the EMNIST CNN config) — serialized with device
+compute when done inline in the round loop. ``CohortPrefetcher`` moves that
+work to a background thread that samples client ids and stacks/pads cohort
+batch trees up to ``depth`` rounds ahead, so round t's host-side input
+pipeline overlaps round t-1's device compute. The thread only *builds*
+cohorts; ordering, staleness, and server updates stay with the consumer
+(``FedSim`` / ``core.async_engine``).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def stack_host(trees):
+    """Stack a list of identically-structured batch trees along a new
+    leading (client) axis, keeping host arrays on the host.
+
+    Numpy leaves are stacked with ``np.stack`` — no device ops enqueued, so
+    a background prefetch thread assembling cohorts cannot contend with the
+    round program for the accelerator dispatch stream, and the arrays
+    transfer once, when the jitted round consumes them. Leaves that are
+    already device arrays (a ``batch_fn`` that computes with jax) are
+    stacked with ``jnp.stack`` instead: pulling them back to the host would
+    add a blocking device-to-host copy per client per round.
+    """
+    def stack(*xs):
+        if isinstance(xs[0], np.ndarray):
+            return np.stack(xs)
+        return jnp.stack(xs)
+
+    return jax.tree_util.tree_map(stack, *trees)
+
+
+class Cohort(NamedTuple):
+    """One round's materialized inputs: ids are informational, ``batches``
+    carries the (C, K, ...) stacked trees, ``weights`` is None for uniform."""
+
+    round_idx: int
+    client_ids: object
+    batches: object
+    weights: Optional[object] = None
+
+
+#: build_fn(round_idx) -> Cohort
+BuildFn = Callable[[int], Cohort]
+
+
+class CohortPrefetcher:
+    """Iterates ``build_fn(start_round) .. build_fn(stop_round - 1)`` on a
+    daemon thread, keeping at most ``depth`` finished cohorts queued.
+
+    ``get(round_idx)`` returns cohorts strictly in round order (the round
+    loop's dispatch order); a builder exception is re-raised at the next
+    ``get`` so failures surface in the consumer, not silently in a thread.
+    """
+
+    _DONE = object()
+
+    def __init__(self, build_fn: BuildFn, start_round: int, stop_round: int,
+                 depth: int = 2):
+        if depth < 1:
+            raise ValueError(f"prefetch depth must be >= 1, got {depth}")
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._error: Optional[BaseException] = None
+        self._stop = threading.Event()
+
+        def put(item) -> bool:
+            """Blocking put that gives up once close() is requested."""
+            while not self._stop.is_set():
+                try:
+                    self._q.put(item, timeout=0.1)
+                    return True
+                except queue.Full:
+                    continue
+            return False
+
+        def worker():
+            try:
+                for r in range(start_round, stop_round):
+                    if self._stop.is_set() or not put(build_fn(r)):
+                        return
+            except BaseException as e:  # noqa: BLE001 — re-raised in get()
+                self._error = e
+            put(self._DONE)
+
+        self._thread = threading.Thread(target=worker, daemon=True,
+                                        name="cohort-prefetch")
+        self._thread.start()
+
+    def get(self, round_idx: int) -> Cohort:
+        item = self._q.get()
+        if item is self._DONE:
+            if self._error is not None:
+                err, self._error = self._error, None
+                raise err
+            raise RuntimeError(f"prefetcher exhausted before round {round_idx}")
+        if item.round_idx != round_idx:
+            raise RuntimeError(
+                f"prefetcher out of order: expected round {round_idx}, "
+                f"got {item.round_idx}")
+        return item
+
+    def close(self):
+        """Stop the worker and drop queued cohorts (idempotent)."""
+        self._stop.set()
+        while True:
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        self._thread.join(timeout=5.0)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

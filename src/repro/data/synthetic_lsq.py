@@ -10,8 +10,8 @@ from __future__ import annotations
 
 from typing import List, Sequence, Tuple
 
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.posterior import QuadraticClient, client_from_data
 

@@ -27,7 +27,7 @@ import jax           # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 from repro import configs                                     # noqa: E402
-from repro.configs.base import FedConfig, SHAPES              # noqa: E402
+from repro.configs.base import SHAPES, FedConfig              # noqa: E402
 from repro.core.sharded_round import (default_placement,      # noqa: E402
                                       make_fed_round)
 from repro.launch.mesh import make_production_mesh            # noqa: E402

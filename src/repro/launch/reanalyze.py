@@ -13,8 +13,8 @@ import os
 
 from repro import configs
 from repro.configs.base import SHAPES
-from repro.launch.dryrun import default_fed_config
 from repro.core.sharded_round import default_placement
+from repro.launch.dryrun import default_fed_config
 from repro.sharding.hlo_cost import analyze
 from repro.sharding.roofline import derive, format_table
 

@@ -21,9 +21,11 @@ import numpy as np
 from repro import configs
 from repro.checkpoint import restore_checkpoint, save_checkpoint
 from repro.configs.base import FedConfig
+from repro.core.async_engine import AsyncRoundEngine
 from repro.core.server import init_server_state
-from repro.core.sharded_round import make_fed_round
+from repro.core.sharded_round import make_fed_round, make_fed_round_split
 from repro.data import SyntheticLMData
+from repro.data.prefetch import Cohort
 from repro.data.sampling import ClientSampler
 from repro.models import init_params, lm_loss
 from repro.optim import get_optimizer
@@ -40,6 +42,10 @@ def build_fed(args) -> FedConfig:
         server_opt=args.server_opt, server_lr=args.server_lr,
         client_opt="sgdm", client_lr=args.client_lr,
         burn_in_rounds=args.burn_in_rounds,
+        async_rounds=args.async_rounds,
+        max_staleness=args.max_staleness,
+        staleness_discount=args.staleness_discount,
+        prefetch_rounds=args.prefetch_rounds,
     )
 
 
@@ -65,6 +71,18 @@ def main():
     ap.add_argument("--client-lr", type=float, default=0.05)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--async-rounds", action="store_true",
+                    help="double-buffered rounds: overlap cohort t+1's "
+                         "client compute with round t's server update "
+                         "(core/async_engine.py)")
+    ap.add_argument("--max-staleness", type=int, default=1,
+                    help="cohorts in flight beyond the one being applied; "
+                         "0 matches the sync path numerically")
+    ap.add_argument("--staleness-discount", type=float, default=0.9,
+                    help="a staleness-s delta is scaled by discount**s")
+    ap.add_argument("--prefetch-rounds", type=int, default=2,
+                    help="cohort batches stacked ahead by a host thread "
+                         "(0 = inline)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)
@@ -131,23 +149,80 @@ def main():
                                         q_chunk=q_chunk)[0])
 
     logf = open(args.log, "a") if args.log else None
-    for r in range(start_round, args.rounds):
-        t0 = time.time()
-        fn = round_burn if r < fed.burn_in_rounds else round_sample
-        state, metrics = fn(state, round_batches(r))
-        ev = float(eval_fn(state.params))
-        rec = {"round": r, "eval_loss": ev,
-               "client_loss_last": float(metrics["loss_last"]),
-               "phase": "burn-in" if r < fed.burn_in_rounds else fed.algorithm,
-               "sec": round(time.time() - t0, 2)}
+
+    def emit(rec):
         print(json.dumps(rec), flush=True)
         if logf:
             logf.write(json.dumps(rec) + "\n")
             logf.flush()
+
+    def maybe_checkpoint(round_state, r):
         if args.ckpt_dir and ((r + 1) % args.ckpt_every == 0
                               or r == args.rounds - 1):
-            save_checkpoint(args.ckpt_dir, state, r + 1,
+            save_checkpoint(args.ckpt_dir, round_state, r + 1,
                             {"arch": cfg.name, "algorithm": fed.algorithm})
+
+    if fed.async_rounds:
+        # double-buffered rounds: cohort t+1 is dispatched before round t's
+        # server update lands; deltas discounted by staleness_discount**s
+        cohort_fn, server_fn = make_fed_round_split(
+            cfg, fed, placement="parallel", q_chunk=q_chunk)
+        burn_cohort_fn = (make_fed_round_split(
+            cfg, fed, placement="parallel", q_chunk=q_chunk,
+            use_sampling=False)[0]
+            if fed.algorithm == "fedpa" and fed.burn_in_rounds else None)
+        engine = AsyncRoundEngine(
+            cohort_fn=cohort_fn,
+            server_fn=server_fn,
+            burn_cohort_fn=burn_cohort_fn,
+            burn_in_rounds=max(0, fed.burn_in_rounds - start_round),
+            max_staleness=fed.max_staleness,
+            staleness_discount=fed.staleness_discount,
+            prefetch_rounds=fed.prefetch_rounds,
+        )
+
+        def build_cohort(i):
+            r = start_round + i
+            return Cohort(i, None, round_batches(r), None)
+
+        last_t = time.time()
+
+        def on_round(rec, round_state):
+            # live per-round logging + periodic checkpoints, as in the sync
+            # loop; forcing the metrics here costs one sync per round, but
+            # the next cohorts are already dispatched on device
+            nonlocal last_t
+            r = start_round + rec["round"]
+            emit({"round": r,
+                  "eval_loss": (float(rec["eval"]["eval_loss"])
+                                if "eval" in rec else None),
+                  "client_loss_last": float(rec["metrics"]["loss_last"]),
+                  "client_loss_first": float(rec["metrics"]["loss_first"]),
+                  "staleness": rec["staleness"],
+                  "phase": ("burn-in" if r < fed.burn_in_rounds
+                            else fed.algorithm),
+                  "sec": round(time.time() - last_t, 2)})
+            last_t = time.time()
+            maybe_checkpoint(round_state, r)
+
+        state, _ = engine.run(
+            state, build_cohort, args.rounds - start_round,
+            eval_fn=lambda p: {"eval_loss": float(eval_fn(p))},
+            on_round=on_round)
+    else:
+        for r in range(start_round, args.rounds):
+            t0 = time.time()
+            fn = round_burn if r < fed.burn_in_rounds else round_sample
+            state, metrics = fn(state, round_batches(r))
+            ev = float(eval_fn(state.params))
+            rec = {"round": r, "eval_loss": ev,
+                   "client_loss_last": float(metrics["loss_last"]),
+                   "client_loss_first": float(metrics["loss_first"]),
+                   "phase": ("burn-in" if r < fed.burn_in_rounds
+                             else fed.algorithm),
+                   "sec": round(time.time() - t0, 2)}
+            emit(rec)
+            maybe_checkpoint(state, r)
     if logf:
         logf.close()
 

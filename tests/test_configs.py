@@ -2,8 +2,8 @@
 import pytest
 
 from repro import configs
-from repro.configs.base import (FedConfig, INPUT_SHAPES, LayerSpec,
-                                MULTI_POD, SINGLE_POD)
+from repro.configs.base import (INPUT_SHAPES, MULTI_POD, SINGLE_POD,
+                                FedConfig, LayerSpec)
 
 
 def test_registry_complete():

@@ -1,12 +1,14 @@
 """Theorem 3: the O(l^2 d) DP computes Sigma_hat^{-1}(x0 - xbar) exactly."""
-import numpy as np
+import sys
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
+
+import repro.core.dp_delta  # noqa: F401  (module import before package alias)
 from repro.testing import given, settings, strategies as st
 
-import sys
-import repro.core.dp_delta  # noqa: F401  (module import before package alias)
 dp = sys.modules['repro.core.dp_delta']
 from repro.core import tree_math as tm
 from repro.core.shrinkage import dense_delta

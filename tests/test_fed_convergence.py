@@ -6,9 +6,9 @@
 3. The full IASG-based FedPA pipeline (Algorithm 1+3+4) beats the FedAvg
    fixed point on a heterogeneous federated least-squares problem.
 """
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.configs.base import FedConfig

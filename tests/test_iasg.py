@@ -1,7 +1,7 @@
 """IASG sampler (Algorithm 4) + ESS diagnostics (Appendix A.2)."""
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.core.diagnostics import (effective_sample_size, ess_from_losses,

@@ -10,8 +10,8 @@ from repro import configs
 from repro.models import (init_decode_state, init_params, lm_loss,
                           serve_step)
 from repro.models.model import count_params
-from repro.optim import sgd
 from repro.models.steps import centralized_train_step
+from repro.optim import sgd
 
 
 def _batch(cfg, B=2, S=64, seed=1):

@@ -1,6 +1,6 @@
 """Optimizer math vs closed forms; schedules."""
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro import optim

@@ -1,7 +1,7 @@
 """Propositions 1 & 2 and the federated-quadratics analysis (Section 3)."""
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import posterior as po
 from repro.data import make_federated_lsq, make_quadratic_clients

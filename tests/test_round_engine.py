@@ -4,16 +4,17 @@ losses, same server params — for fedavg, fedpa, and mime, including
 weighted aggregation and chunk padding."""
 import dataclasses
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.configs.base import FedConfig
 from repro.core import FedSim, make_round_program
 from repro.core.client import make_client_update
-from repro.core.server import (aggregate_deltas_list, init_server_state,
-                               server_update)
+from repro.core.server import (aggregate_deltas, aggregate_deltas_list,
+                               init_server_state, server_update,
+                               weighted_sum)
 from repro.data import make_federated_lsq
 from repro.data.synthetic_lsq import lsq_batches
 from repro.optim import get_optimizer
@@ -32,6 +33,13 @@ FEDS = {
     "mime": FedConfig(algorithm="mime", clients_per_round=C,
                       local_steps=STEPS, server_opt="sgdm", server_lr=0.5,
                       client_opt="sgd", client_lr=0.01, mime_beta=0.5),
+    # streaming (any-time) DP client: same posterior math, no sample buffer
+    "fedpa_stream": FedConfig(algorithm="fedpa", streaming_dp=True,
+                              clients_per_round=C, local_steps=STEPS,
+                              burn_in_steps=4, steps_per_sample=2,
+                              shrinkage_rho=0.5, server_opt="sgd",
+                              server_lr=0.1, client_opt="sgd",
+                              client_lr=0.01),
 }
 
 
@@ -171,3 +179,92 @@ def test_fedconfig_round_knobs_validated():
         FedConfig(round_placement="warp")
     with pytest.raises(ValueError):
         FedConfig(round_chunk_size=-1)
+
+
+def test_fedconfig_rejects_ragged_iasg_windows():
+    """(local_steps - burn_in_steps) % steps_per_sample != 0 used to surface
+    as an opaque 'need N batches, got M' ValueError at trace time inside the
+    jitted round; FedConfig now rejects it eagerly, naming the knobs."""
+    with pytest.raises(ValueError,
+                       match="local_steps.*steps_per_sample"):
+        FedConfig(algorithm="fedpa", local_steps=9, burn_in_steps=4,
+                  steps_per_sample=2)
+    # whole windows are fine, and non-fedpa algorithms don't care
+    assert FedConfig(algorithm="fedpa", local_steps=10, burn_in_steps=4,
+                     steps_per_sample=2).num_samples == 3
+    FedConfig(algorithm="fedavg", local_steps=9, burn_in_steps=4,
+              steps_per_sample=2)
+
+
+def test_fedsim_history_surfaces_first_and_last_losses(problem):
+    """loss_first vs loss_last is the only signal separating burn-in-round
+    progress from sampling-round progress; FedSim must surface both."""
+    grad_fn, batch_fn = problem
+    sim = FedSim(fed=FEDS["fedavg"], grad_fn=grad_fn, batch_fn=batch_fn,
+                 num_clients=C)
+    _, hist = sim.run(jnp.zeros(D), 2)
+    for h in hist:
+        assert {"loss_first", "loss_last", "client_loss"} <= set(h)
+        assert h["client_loss"] == h["loss_last"]
+        # local SGD makes progress within a round on this problem
+        assert h["loss_last"] < h["loss_first"]
+
+
+def test_zero_weight_cohort_fails_loudly(problem):
+    """An all-zero (or negative-sum) weight vector used to silently divide
+    by zero and poison the server params with NaN rounds later."""
+    grad_fn, batch_fn = problem
+    fed = FEDS["fedavg"]
+    server_opt = get_optimizer(fed.server_opt, fed.server_lr,
+                               fed.server_momentum)
+    state0 = init_server_state(jnp.zeros(D), server_opt)
+    batches = _stack(batch_fn, 0, fed.local_steps)
+    round_fn = make_round_program(grad_fn, fed, server_opt=server_opt)
+
+    # host-side (eager weights): raise before any NaN can be produced
+    for bad in (np.zeros((C,), np.float32),
+                np.asarray([1.0, -1.0, 0.0, 0.0], np.float32)):
+        with pytest.raises(ValueError, match="positive total"):
+            round_fn(state0, batches, bad)
+        with pytest.raises(ValueError, match="positive total"):
+            aggregate_deltas_list([jnp.ones(D)] * C, list(bad))
+
+    # FedSim path: per-client weights gathered for the cohort
+    sim = FedSim(fed=fed, grad_fn=grad_fn, batch_fn=batch_fn, num_clients=C,
+                 client_weights=np.zeros((C,), np.float32))
+    with pytest.raises(ValueError, match="positive total"):
+        sim.run(jnp.zeros(D), 1)
+
+    # traced weights (inside jit): degrade to a zero delta, never NaN
+    jitted = jax.jit(round_fn)
+    got, _ = jitted(state0, batches, jnp.zeros((C,), jnp.float32))
+    assert np.all(np.isfinite(np.asarray(got.params)))
+    np.testing.assert_allclose(np.asarray(got.params),
+                               np.asarray(state0.params))
+
+
+def test_bf16_weighted_aggregation_parity_with_fp32_reference():
+    """Normalized weights must stay fp32 through the reduction: casting
+    them to bf16 first (the old behavior) loses ~2 decimal digits of
+    realistic example-count weights. With cancellation (701/1000 * 1 +
+    299/1000 * -2 = 0.103) the old path lands ~3 bf16 ulps off; the fixed
+    path is the correctly-rounded fp32 result."""
+    counts = np.asarray([701.0, 299.0], np.float32)
+    w = jnp.asarray(counts / counts.sum(), jnp.float32)
+    deltas = {"w": jnp.stack([jnp.full((9,), 1.0),
+                              jnp.full((9,), -2.0)]).astype(jnp.bfloat16)}
+
+    got = weighted_sum(deltas, w)
+    assert got["w"].dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got["w"], np.float32), 0.103,
+                               rtol=2**-8)  # half a bf16 ulp
+
+    agg = aggregate_deltas(deltas, jnp.asarray(counts))
+    assert agg["w"].dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(agg["w"], np.float32), 0.103,
+                               rtol=2**-8)
+
+    # and fp32 aggregation is untouched by the fix
+    d32 = {"w": jnp.asarray(np.asarray(deltas["w"], np.float32))}
+    np.testing.assert_allclose(np.asarray(weighted_sum(d32, w)["w"]), 0.103,
+                               rtol=1e-6)

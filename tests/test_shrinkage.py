@@ -1,11 +1,11 @@
 """Shrinkage estimator: closed forms and the rank-1 recursion (Appendix C.1)."""
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
-from repro.testing import given, settings, strategies as st
 
 from repro.core import shrinkage as sh
+from repro.testing import given, settings, strategies as st
 
 jax.config.update("jax_enable_x64", True)
 
