@@ -1,0 +1,22 @@
+"""Pluggable federated-algorithm strategy API (see ``base.py``).
+
+Importing this package registers the built-in algorithms — fedavg, fedpa
+(incl. the streaming DP), mime, fedprox, and fedpa_precision. Downstream
+code adds algorithms by subclassing :class:`FedAlgorithm` and decorating
+with :func:`register_algorithm`; no repro-internal edits required.
+"""
+from repro.algorithms.base import (  # noqa: F401  (import order matters:
+    ClientResult,                    # base must bind the registry before the
+    FedAlgorithm,                    # implementation modules populate it)
+    algorithm_names,
+    get_algorithm,
+    get_algorithm_class,
+    phase_name,
+    register_algorithm,
+    resolve_algorithm,
+)
+from repro.algorithms.fedavg import FedAvg  # noqa: F401
+from repro.algorithms.fedpa import FedPA  # noqa: F401
+from repro.algorithms.fedpa_precision import FedPAPrecision  # noqa: F401
+from repro.algorithms.fedprox import FedProx  # noqa: F401
+from repro.algorithms.mime import Mime  # noqa: F401

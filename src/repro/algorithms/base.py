@@ -1,0 +1,276 @@
+"""The ``FedAlgorithm`` strategy API: one class per federated algorithm.
+
+The paper's central claim is that FedAvg and FedPA are instances of one
+posterior-inference template (Algorithm 1): local inference on each client,
+an O(d) communicated statistic, and a server-side refinement of the global
+iterate. This module makes that template a first-class API instead of
+``if fed.algorithm == ...`` branches: every algorithm subclasses
+:class:`FedAlgorithm` and registers under a name with
+:func:`register_algorithm`; ``FedConfig`` validation, the compiled round
+engine (``core/round_program.py``), the async engine, and the launch entry
+points all resolve algorithms through :func:`get_algorithm`.
+
+The hook contract (one federated round, in engine order):
+
+* ``validate()``              — eager config checks (run from
+  ``FedConfig.__post_init__``).
+* ``broadcast(state, server_opt) -> extras`` — server statistics shipped to
+  every client alongside the params (MIME's frozen momentum; ``()`` for
+  most algorithms).
+* ``make_client_update(grad_fn, client_opt) -> update`` where
+  ``update(params, batches, *extras) -> ClientResult(payload, metrics)``.
+  The payload is a typed pytree — a bare delta for FedAvg/FedPA, a
+  ``{"delta", "prec"}`` natural-parameter pair for precision-weighted
+  FedPA — not necessarily a single delta tree.
+* ``aggregate(stacked_payloads, weights) -> pseudo_grad`` — fp32-accumulated
+  weighted aggregation. Internally this factors through a *linear
+  accumulator space* (``payload_accum`` / ``accumulate`` /
+  ``reduce_stacked`` + ``finalize``) so the engine's sequential and chunked
+  placements can fold clients into the accumulator without ever
+  materializing the stacked cohort, and so non-mean aggregations
+  (precision-weighted averaging) stay expressible.
+* ``server_update(state, agg, server_opt, discount) -> state`` — finalize
+  the accumulator into a pseudo-gradient, apply the (optionally
+  per-parameter) staleness discount, and take one server-optimizer step.
+
+Algorithms whose sampling machinery needs a warm start expose a *burn-in
+regime* (``has_burn_regime`` / ``burn_algorithm()``): the algorithm run for
+the first ``fed.burn_in_rounds`` rounds (FedPA runs FedAvg, Section 5.2).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import server as server_lib
+from repro.core import tree_math as tm
+from repro.optim import Optimizer
+
+
+class ClientResult(NamedTuple):
+    """What one client sends back to the server.
+
+    ``payload`` is the algorithm's typed communicated statistic (a pytree;
+    a bare delta tree for FedAvg/FedPA). ``metrics`` is a dict of scalar
+    diagnostics and must contain ``loss_first`` and ``loss_last``.
+    Being a 2-tuple, it unpacks like the legacy ``(delta, metrics)`` pair.
+    """
+
+    payload: Any
+    metrics: Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Type["FedAlgorithm"]] = {}
+
+
+def register_algorithm(name: str, *,
+                       override: bool = False) -> Callable[[type], type]:
+    """Class decorator: register a :class:`FedAlgorithm` under ``name``.
+
+    The name becomes a valid ``FedConfig.algorithm`` value everywhere —
+    config validation, the round engine, ``FedSim``, and the
+    ``--algorithm`` launch flags all resolve through the registry, so
+    downstream code can add algorithms without touching this package.
+    Re-registering an existing name raises (a collision would silently
+    swap the round math of every config using it) unless ``override=True``
+    is passed explicitly.
+    """
+
+    def deco(cls: type) -> type:
+        if not (isinstance(cls, type) and issubclass(cls, FedAlgorithm)):
+            raise TypeError(f"{cls!r} must subclass FedAlgorithm")
+        if not override and name in _REGISTRY and _REGISTRY[name] is not cls:
+            raise ValueError(
+                f"algorithm {name!r} is already registered to "
+                f"{_REGISTRY[name]!r}; pass override=True to replace it")
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def algorithm_names() -> Tuple[str, ...]:
+    """Sorted names of every registered algorithm."""
+    return tuple(sorted(_REGISTRY))
+
+
+def get_algorithm_class(name: str) -> Type["FedAlgorithm"]:
+    """Look up a registered algorithm class by name (ValueError if absent)."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown algorithm {name!r}; registered: {algorithm_names()}"
+        ) from None
+
+
+def get_algorithm(fed) -> "FedAlgorithm":
+    """Instantiate the registered algorithm for ``fed.algorithm``."""
+    return get_algorithm_class(fed.algorithm)(fed)
+
+
+def resolve_algorithm(fed, use_sampling: bool = True) -> "FedAlgorithm":
+    """Algorithm for a round: the registered one, or its burn-in regime.
+
+    ``use_sampling=False`` is the round engine's burn-in-round knob: FedPA
+    configs run their FedAvg regime (Section 5.2); algorithms without a
+    burn regime are returned unchanged.
+    """
+    alg = get_algorithm(fed)
+    return alg if use_sampling else alg.burn_algorithm()
+
+
+def phase_name(fed, round_idx: int) -> str:
+    """Display name for round ``round_idx`` of a run.
+
+    During the first ``fed.burn_in_rounds`` rounds of an algorithm with a
+    burn-in regime this reads e.g. ``"fedavg (burn-in)"``; otherwise it is
+    the algorithm name. Shared by ``launch/train.py`` and
+    ``launch/dryrun.py`` so the log/record strings cannot drift.
+    """
+    alg = get_algorithm(fed)
+    if round_idx < fed.burn_in_rounds and alg.has_burn_regime:
+        return f"{alg.burn_algorithm().name} (burn-in)"
+    return alg.name
+
+
+# ---------------------------------------------------------------------------
+# The strategy base class
+# ---------------------------------------------------------------------------
+
+class FedAlgorithm:
+    """Base class for federated algorithms (see module docstring).
+
+    Subclasses must implement :meth:`make_client_update`; everything else
+    has defaults implementing the paper's weighted-mean-delta template.
+    The default aggregation reduces in fp32 and casts once
+    (``core.server.weighted_sum``), exactly matching the pre-API engine.
+    """
+
+    #: Registry name, set by :func:`register_algorithm`.
+    name: str = "?"
+    #: Whether the online/any-time DP (``fed.streaming_dp``) applies.
+    supports_streaming_dp: bool = False
+    #: Whether the algorithm runs a different regime during burn-in rounds.
+    has_burn_regime: bool = False
+
+    def __init__(self, fed):
+        """Bind the algorithm to a ``FedConfig`` (stored as ``self.fed``)."""
+        self.fed = fed
+        self.delta_dtype = jnp.dtype(fed.delta_dtype)
+
+    # -- config ------------------------------------------------------------
+    def validate(self) -> None:
+        """Eager config checks; called from ``FedConfig.__post_init__``.
+
+        Raise ``ValueError`` on bad knob combinations so they surface at
+        construction, not as opaque trace-time errors. Subclasses extending
+        this should call ``super().validate()``.
+        """
+        if self.fed.streaming_dp and not self.supports_streaming_dp:
+            raise ValueError(
+                f"streaming_dp=True requires algorithm='fedpa' (the online "
+                f"DP of Appendix C); {self.fed.algorithm!r} has no streaming "
+                f"client — it would be silently ignored")
+
+    @property
+    def num_samples(self) -> int:
+        """Posterior samples per client per round (0 for non-sampling)."""
+        return 0
+
+    def burn_algorithm(self) -> "FedAlgorithm":
+        """Algorithm run during the first ``fed.burn_in_rounds`` rounds."""
+        return self
+
+    # -- round template hooks ----------------------------------------------
+    def broadcast(self, state, server_opt: Optimizer) -> tuple:
+        """Server statistics shipped to clients alongside the params.
+
+        Returned extras become positional arguments of the client update
+        (broadcast, i.e. un-vmapped, across the cohort). Default: none.
+        """
+        del state, server_opt
+        return ()
+
+    def make_client_update(self, grad_fn: Callable,
+                           client_opt: Optimizer) -> Callable:
+        """Build ``update(params, batches, *extras) -> ClientResult``.
+
+        ``batches`` is a pytree with leading axis ``fed.local_steps``; the
+        update must be a pure function suitable for ``vmap``/``scan``
+        inside one jitted round.
+        """
+        raise NotImplementedError
+
+    # -- aggregation (accumulator space) ------------------------------------
+    def init_accum(self, params):
+        """Zero element of the linear accumulator space."""
+        return tm.tzeros_like(params, self.delta_dtype)
+
+    def payload_accum(self, payload):
+        """Map one client payload into the accumulator space (linear part).
+
+        The engine only ever combines accumulators linearly (weighted
+        sums); anything nonlinear belongs in :meth:`finalize`.
+        """
+        return payload
+
+    def accumulate(self, acc, payload, weight):
+        """Fold one client into the accumulator: ``acc + w * accum(p)``."""
+        return tm.tmap(lambda a, d: a + (weight * d).astype(a.dtype),
+                       acc, self.payload_accum(payload))
+
+    def reduce_stacked(self, stacked_payloads, weights):
+        """Weighted sum of a stacked cohort of payloads (fp32-accumulated).
+
+        ``stacked_payloads`` carry a leading client axis; ``weights`` is the
+        matching normalized fp32 vector. The reduction runs in fp32 and
+        casts once (see ``core.server.weighted_sum``).
+        """
+        return server_lib.weighted_sum(
+            jax.vmap(self.payload_accum)(stacked_payloads), weights)
+
+    def finalize(self, agg):
+        """Accumulator -> pseudo-gradient (identity for mean-delta algos)."""
+        return agg
+
+    def aggregate(self, stacked_payloads, weights):
+        """Stacked payloads + normalized weights -> pseudo-gradient.
+
+        Convenience composition of :meth:`reduce_stacked` and
+        :meth:`finalize`; the engine calls the two halves separately so the
+        server stage (which owns staleness discounting) runs ``finalize``.
+        """
+        return self.finalize(self.reduce_stacked(stacked_payloads, weights))
+
+    def map_components(self, fn: Callable, obj):
+        """Apply ``fn`` to each parameter-shaped component of a payload or
+        accumulator (used by the FSDP sharding hooks). Default: the object
+        is itself one parameter-shaped tree.
+        """
+        return fn(obj)
+
+    # -- server ------------------------------------------------------------
+    def server_update(self, state, agg, server_opt: Optimizer,
+                      discount=None):
+        """One server step on the aggregated statistic.
+
+        ``discount`` (optional traced scalar, the async engine's
+        ``staleness_discount ** s``) scales the pseudo-gradient in fp32 and
+        casts back, so ``discount == 1.0`` is a bitwise no-op and the
+        ``staleness=0`` async path matches the fused synchronous program.
+        """
+        pseudo_grad = self.finalize(agg)
+        if discount is not None:
+            d = jnp.asarray(discount, jnp.float32)
+            pseudo_grad = tm.tmap(
+                lambda x: (d * x.astype(jnp.float32)).astype(x.dtype),
+                pseudo_grad)
+        return server_lib.server_update(state, pseudo_grad, server_opt)

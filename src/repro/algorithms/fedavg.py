@@ -1,0 +1,36 @@
+"""FedAvg as a registered algorithm (Algorithm 2).
+
+K local SGD steps, delta = theta_0 - theta_K: federated posterior
+averaging with an identity covariance — the paper's biased special case
+(Section 4), and the burn-in regime of the FedPA family.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.algorithms.base import (ClientResult, FedAlgorithm,
+                                   register_algorithm)
+from repro.core import tree_math as tm
+from repro.core.dp_delta import fedavg_delta
+from repro.core.iasg import sgd_steps
+from repro.optim import Optimizer
+
+
+@register_algorithm("fedavg")
+class FedAvg(FedAlgorithm):
+    """Weighted-mean-delta FedAvg; the template's defaults unchanged."""
+
+    def make_client_update(self, grad_fn: Callable,
+                           client_opt: Optimizer) -> Callable:
+        """``update(params, batches) -> ClientResult`` — K local SGD steps."""
+        delta_dtype = self.delta_dtype
+
+        def update(params, batches):
+            opt_state = client_opt.init(params)
+            final, _, losses = sgd_steps(params, client_opt, opt_state,
+                                         grad_fn, batches)
+            delta = tm.tcast(fedavg_delta(params, final), delta_dtype)
+            return ClientResult(delta, {"loss_first": losses[0],
+                                        "loss_last": losses[-1]})
+
+        return update

@@ -1,0 +1,129 @@
+"""Precision-weighted FedPA (FedEP-flavored, Guo et al. 2023).
+
+Clients ship approximate *natural parameters* instead of a bare delta: the
+shrinkage-DP delta together with the diagonal of the shrinkage precision
+(1 / diag(Sigma_hat_l), Theorem 3's estimator restricted to the diagonal —
+the same O(d) communication cost). The server then aggregates by
+precision-weighted averaging, delta = sum_i w_i P_i delta_i / sum_i w_i P_i,
+i.e. expectation-propagation-style moment matching under a diagonal
+Gaussian family: clients whose posterior is sharp along a coordinate get
+more say about it.
+
+The precision also tells the async engine where staleness hurts (the
+ROADMAP's per-parameter-discount item): coordinates with above-average
+aggregated precision are sharply determined, so a stale delta there is
+discounted harder — ``discount ** s`` becomes per-parameter
+``discount ** (s * rel_prec)`` with ``rel_prec`` the clipped
+precision-to-mean ratio.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.algorithms.base import ClientResult, register_algorithm
+from repro.algorithms.fedpa import FedPA
+from repro.core import server as server_lib
+from repro.core import tree_math as tm
+from repro.core.shrinkage import rho_l
+from repro.optim import Optimizer
+
+#: Keeps the precision-weighted mean defined when a traced all-zero weight
+#: vector degrades the round to a no-op (see ``server.normalized_weights``).
+_EPS = 1e-8
+#: Per-parameter staleness exponents are clipped to this band so one
+#: extreme coordinate cannot zero (or un-discount) its stale update.
+_REL_PREC_MIN, _REL_PREC_MAX = 0.25, 4.0
+
+
+@register_algorithm("fedpa_precision")
+class FedPAPrecision(FedPA):
+    """FedPA with diagonal-precision payloads and EP-style aggregation."""
+
+    supports_streaming_dp = False
+
+    def make_client_update(self, grad_fn: Callable,
+                           client_opt: Optimizer) -> Callable:
+        """IASG + shrinkage-DP delta, plus the diagonal shrinkage precision.
+
+        Payload: ``{"delta": Delta_hat_l, "prec": 1 / diag(Sigma_hat_l)}``
+        with ``diag(Sigma_hat_l) = rho_l + (1 - rho_l) * diag(S_l)`` the
+        diagonal of the Theorem 3 estimator (per-coordinate sample variance
+        of the IASG samples). With a single sample ``rho_l = 1`` and the
+        precision is identically one — the plain FedPA delta.
+        """
+        delta_dtype = self.delta_dtype
+        num_samples = self.num_samples
+        r = float(rho_l(num_samples, self.fed.shrinkage_rho))
+        run = self._iasg_delta(grad_fn, client_opt)  # shared FedPA core
+
+        def diag_precision(samples):
+            def leaf(s):
+                s32 = s.astype(jnp.float32)
+                if num_samples > 1:
+                    var = jnp.var(s32, axis=0, ddof=1)
+                else:
+                    var = jnp.zeros_like(s32[0])
+                return (1.0 / (r + (1.0 - r) * var)).astype(delta_dtype)
+
+            return tm.tmap(leaf, samples)
+
+        def update(params, batches):
+            delta, res, metrics = run(params, batches)
+            payload = {"delta": delta, "prec": diag_precision(res.samples)}
+            return ClientResult(payload, metrics)
+
+        return update
+
+    # -- aggregation: precision-weighted averaging ---------------------------
+    def init_accum(self, params):
+        """Accumulator: precision-weighted delta sum + precision sum."""
+        return {"num": tm.tzeros_like(params, self.delta_dtype),
+                "den": tm.tzeros_like(params, self.delta_dtype)}
+
+    def payload_accum(self, payload):
+        """Natural-parameter form: ``{num: P * delta, den: P}`` (linear)."""
+        return {"num": tm.tmap(jnp.multiply, payload["prec"],
+                               payload["delta"]),
+                "den": payload["prec"]}
+
+    def finalize(self, agg):
+        """Precision-weighted mean ``num / den`` (fp32, cast back once)."""
+        return tm.tmap(
+            lambda n, d: (n.astype(jnp.float32)
+                          / (d.astype(jnp.float32) + _EPS)).astype(n.dtype),
+            agg["num"], agg["den"])
+
+    def map_components(self, fn: Callable, obj):
+        """Payloads/accumulators are dicts of parameter-shaped trees."""
+        return {k: fn(v) for k, v in obj.items()}
+
+    # -- server: per-parameter staleness discount ----------------------------
+    def server_update(self, state, agg, server_opt: Optimizer,
+                      discount=None):
+        """Finalize, then discount stale updates per parameter.
+
+        The scalar ``discount`` (``staleness_discount ** s``) is raised to
+        the clipped precision-to-mean ratio of each coordinate, so sharply
+        determined coordinates forget stale information faster. With
+        ``discount`` exactly 1.0 (or ``None``) this is a bitwise no-op, so
+        the staleness=0 async path still matches the fused sync program.
+        """
+        pseudo_grad = self.finalize(agg)
+        if discount is not None:
+            den = agg["den"]
+            leaves = [d.astype(jnp.float32) for d in
+                      jax.tree_util.tree_leaves(den)]
+            total = sum(jnp.sum(d) for d in leaves)
+            count = sum(d.size for d in leaves)
+            mean_prec = jnp.maximum(total / count, _EPS)
+            d = jnp.asarray(discount, jnp.float32)
+            pseudo_grad = tm.tmap(
+                lambda x, p: (jnp.power(
+                    d, jnp.clip(p.astype(jnp.float32) / mean_prec,
+                                _REL_PREC_MIN, _REL_PREC_MAX))
+                    * x.astype(jnp.float32)).astype(x.dtype),
+                pseudo_grad, den)
+        return server_lib.server_update(state, pseudo_grad, server_opt)

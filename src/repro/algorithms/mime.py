@@ -1,0 +1,70 @@
+"""MIME-lite as a registered algorithm (Karimireddy et al. 2020).
+
+The paper's strongest stateless baseline: clients mix a FROZEN server
+momentum estimate into every local step plus an SVRG-style control variate.
+The defining feature is its broadcast hook — the server ships its momentum
+buffer to the cohort alongside the params, read through the explicit
+``Optimizer.momentum`` accessor (zeros for momentum-free server optimizers).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+
+from repro.algorithms.base import (ClientResult, FedAlgorithm,
+                                   register_algorithm)
+from repro.core import tree_math as tm
+from repro.core.dp_delta import fedavg_delta
+from repro.optim import Optimizer
+
+
+@register_algorithm("mime")
+class Mime(FedAlgorithm):
+    """MIME-lite: frozen server momentum + SVRG control variate."""
+
+    def broadcast(self, state, server_opt: Optimizer) -> tuple:
+        """Frozen server momentum shipped to MIME clients (Section 6)."""
+        return (server_opt.momentum(state.opt_state, state.params),)
+
+    def make_client_update(self, grad_fn: Callable,
+                           client_opt: Optimizer) -> Callable:
+        """``update(params, batches, server_m) -> ClientResult``.
+
+        theta <- theta - lr[(1-beta) g + beta m_server] with the SVRG-style
+        control variate g(theta_k) - g(theta_0) + g_full(theta_0), where the
+        full-batch gradient at theta_0 is estimated from the round's batches.
+        Note the extra server-statistics argument (MIME's defining feature);
+        ``client_opt`` is unused — MIME prescribes its own local step.
+        """
+        del client_opt
+        beta = self.fed.mime_beta
+        lr = self.fed.client_lr
+        delta_dtype = self.delta_dtype
+
+        def update(params, batches, server_m):
+            # control-variate anchor: mean gradient at theta_0 over the round
+            def accum(carry, batch):
+                _, g = grad_fn(params, batch)
+                return tm.tadd(carry, g), None
+
+            K = jax.tree_util.tree_leaves(batches)[0].shape[0]
+            gsum, _ = jax.lax.scan(accum, tm.tzeros_like(params), batches)
+            g_anchor = tm.tscale(1.0 / K, gsum)
+
+            def step(carry, batch):
+                p = carry
+                loss, g = grad_fn(p, batch)
+                _, g0 = grad_fn(params, batch)   # same minibatch at theta_0
+                g_corr = tm.tmap(lambda a, b, c: a - b + c, g, g0, g_anchor)
+                d = tm.tmap(lambda gi, mi: (1.0 - beta) * gi + beta * mi,
+                            g_corr, server_m)
+                p = tm.tmap(lambda pi, di: pi - lr * di.astype(pi.dtype), p, d)
+                return p, loss
+
+            p, losses = jax.lax.scan(step, params, batches)
+            delta = tm.tcast(fedavg_delta(params, p), delta_dtype)
+            return ClientResult(delta, {"loss_first": losses[0],
+                                        "loss_last": losses[-1]})
+
+        return update

@@ -188,7 +188,9 @@ SHAPES = {s.name: s for s in INPUT_SHAPES}
 class FedConfig:
     """One federated round = ``clients_per_round`` clients x ``local_steps``."""
 
-    algorithm: str = "fedpa"       # fedavg | fedpa
+    # Any name registered with @register_algorithm (repro.algorithms):
+    # fedavg | fedpa | mime | fedprox | fedpa_precision | ...
+    algorithm: str = "fedpa"
     clients_per_round: int = 16
     local_steps: int = 8           # K: SGD steps per client per round
     # --- FedPA/IASG (Algorithm 4) ---
@@ -212,6 +214,9 @@ class FedConfig:
     # MIME (Karimireddy et al. 2020): scale of the frozen server-momentum
     # term mixed into local client steps.
     mime_beta: float = 0.9
+    # FedProx (Li et al. 2020): proximal strength mu of the client anchor
+    # term (mu/2)||theta - theta_0||^2; 0 reduces to FedAvg.
+    fedprox_mu: float = 0.1
     # --- round engine (core/round_program.py) ---
     # How the cohort is laid out inside the one-jit-per-round program:
     # "parallel" (vmap over clients), "sequential" (scan, memory-bound
@@ -235,8 +240,6 @@ class FedConfig:
     prefetch_rounds: int = 0
 
     def __post_init__(self):
-        if self.algorithm not in ("fedavg", "fedpa", "mime"):
-            raise ValueError(f"unknown algorithm {self.algorithm!r}")
         if self.round_placement not in ("parallel", "sequential", "chunked"):
             raise ValueError(
                 f"unknown round_placement {self.round_placement!r}")
@@ -248,28 +251,18 @@ class FedConfig:
             raise ValueError("staleness_discount must be in [0, 1]")
         if self.prefetch_rounds < 0:
             raise ValueError("prefetch_rounds must be >= 0")
-        if self.algorithm == "fedpa":
-            if self.num_samples < 1:
-                raise ValueError(
-                    "fedpa needs local_steps > burn_in_steps + steps_per_sample"
-                )
-            sampling_steps = self.local_steps - self.burn_in_steps
-            if sampling_steps % self.steps_per_sample != 0:
-                raise ValueError(
-                    f"fedpa sampling steps must divide into whole IASG "
-                    f"windows: local_steps - burn_in_steps = "
-                    f"{self.local_steps} - {self.burn_in_steps} = "
-                    f"{sampling_steps} is not a multiple of "
-                    f"steps_per_sample = {self.steps_per_sample} "
-                    f"({sampling_steps % self.steps_per_sample} leftover "
-                    f"batches)")
+        # algorithm-specific checks (and the unknown-algorithm error) live on
+        # the registered FedAlgorithm; late import avoids a configs<->core
+        # cycle, as does ModelConfig.param_count above
+        from repro.algorithms import get_algorithm  # noqa: PLC0415
+        get_algorithm(self).validate()
 
     @property
     def num_samples(self) -> int:
-        """l: posterior samples per client per round (one per IASG window)."""
-        if self.algorithm != "fedpa":
-            return 0
-        return (self.local_steps - self.burn_in_steps) // self.steps_per_sample
+        """l: posterior samples per client per round (one per IASG window);
+        0 for algorithms without a sampling phase."""
+        from repro.algorithms import get_algorithm  # noqa: PLC0415
+        return get_algorithm(self).num_samples
 
 
 # ---------------------------------------------------------------------------

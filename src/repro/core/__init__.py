@@ -1,9 +1,11 @@
 """The paper's primary contribution: federated posterior averaging.
 
 Layers (bottom-up): tree_math -> shrinkage/dp_delta/posterior/iasg
-(the posterior machinery) -> client/server (Algorithms 1-3) ->
+(the posterior machinery) -> repro.algorithms (the registered FedAlgorithm
+strategies: client updates, payload aggregation, server steps) ->
 round_program (the one-jit-per-round engine) -> round (simulation) /
 sharded_round (multi-pod SPMD), both thin frontends over the engine.
+``client``/``server`` keep the historical per-piece entry points.
 """
 from repro.core.async_engine import AsyncRoundEngine  # noqa: F401
 from repro.core.client import make_client_update  # noqa: F401

@@ -47,11 +47,14 @@ BuildCohort = Callable[[int], Cohort]
 class AsyncRoundEngine:
     """Drives ``num_rounds`` staleness-aware rounds over split programs.
 
-    ``cohort_fn(state, batches, weights) -> (mean_delta, metrics)`` and
-    ``server_fn(state, mean_delta, discount) -> state`` are jitted here
-    (pass the raw builders, not pre-jitted functions). ``burn_cohort_fn``
-    (optional) is used for the first ``burn_in_rounds`` rounds — the FedAvg
-    regime of a FedPA config (Section 5.2).
+    ``cohort_fn(state, batches, weights) -> (agg, metrics)`` and
+    ``server_fn(state, agg, discount) -> state`` are jitted here
+    (pass the raw builders, not pre-jitted functions). ``burn_cohort_fn`` /
+    ``burn_server_fn`` (optional) are used for the first ``burn_in_rounds``
+    rounds — the burn regime of the config's algorithm (e.g. the FedAvg
+    regime of a FedPA config, Section 5.2); the burn server stage exists
+    because a burn regime may aggregate in a different payload space than
+    the sampling regime (``fedpa_precision`` burns in as fedavg).
     """
 
     cohort_fn: Callable
@@ -59,6 +62,7 @@ class AsyncRoundEngine:
     max_staleness: int = 1
     staleness_discount: float = 1.0
     burn_cohort_fn: Optional[Callable] = None
+    burn_server_fn: Optional[Callable] = None
     burn_in_rounds: int = 0
     prefetch_rounds: int = 0
 
@@ -71,6 +75,9 @@ class AsyncRoundEngine:
         self._burn = (jax.jit(self.burn_cohort_fn)
                       if self.burn_cohort_fn is not None else self._cohort)
         self._server = jax.jit(self.server_fn)
+        self._burn_server = (jax.jit(self.burn_server_fn)
+                             if self.burn_server_fn is not None
+                             else self._server)
 
     def run(
         self,
@@ -95,7 +102,7 @@ class AsyncRoundEngine:
                                    depth=self.prefetch_rounds)
                   if self.prefetch_rounds > 0 else None)
         get = source.get if source is not None else build_cohort
-        pending: deque = deque()   # (mean_delta, metrics, version, round)
+        pending: deque = deque()  # (agg, metrics, version, round, is_burn)
         raw: List[dict] = []
         version = 0                # server updates applied so far
         t_next = 0                 # next round to dispatch
@@ -106,17 +113,18 @@ class AsyncRoundEngine:
                 while (t_next < num_rounds
                        and len(pending) <= self.max_staleness):
                     cohort = get(t_next)
-                    fn = (self._burn if t_next < self.burn_in_rounds
-                          else self._cohort)
-                    delta, metrics = fn(state, cohort.batches, cohort.weights)
-                    pending.append((delta, metrics, version, t_next))
+                    is_burn = t_next < self.burn_in_rounds
+                    fn = self._burn if is_burn else self._cohort
+                    agg, metrics = fn(state, cohort.batches, cohort.weights)
+                    pending.append((agg, metrics, version, t_next, is_burn))
                     t_next += 1
 
-                delta, metrics, v, t = pending.popleft()
+                agg, metrics, v, t, is_burn = pending.popleft()
                 assert t == t_apply, (t, t_apply)
                 staleness = version - v
-                state = self._server(state, delta,
-                                     self.staleness_discount ** staleness)
+                server = self._burn_server if is_burn else self._server
+                state = server(state, agg,
+                               self.staleness_discount ** staleness)
                 version += 1
 
                 rec = {"round": t_apply, "staleness": staleness,

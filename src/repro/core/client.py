@@ -1,9 +1,11 @@
-"""Client updates (Algorithms 2 and 3).
+"""Client updates (Algorithms 2 and 3) — back-compat frontend.
 
-FedAvg: K local SGD steps, delta = theta_0 - theta_K (identity covariance —
-the biased special case). FedPA: IASG posterior sampling + shrinkage-DP
-delta. Both return (delta, diagnostics) and are pure functions suitable for
-``vmap`` (parallel clients) or ``scan`` (sequential clients) inside one
+The client math now lives in the ``repro.algorithms`` strategy API (one
+registered ``FedAlgorithm`` per algorithm, including the streaming-DP FedPA
+variant and MIME); this module keeps the historical
+``make_client_update(grad_fn, fed, client_opt)`` entry point that tests and
+benchmarks drive directly. The returned update is a pure function suitable
+for ``vmap`` (parallel clients) or ``scan`` (sequential clients) inside one
 jitted federated round — clients are stateless across rounds, as the
 cross-device setting requires.
 """
@@ -11,160 +13,21 @@ from __future__ import annotations
 
 from typing import Callable
 
-import jax
-import jax.numpy as jnp
-
 from repro.configs.base import FedConfig
-from repro.core import tree_math as tm
-from repro.core.dp_delta import (dp_delta, fedavg_delta, online_dp_delta,
-                                 online_dp_init, online_dp_update)
-from repro.core.iasg import iasg_sample, sgd_steps
 from repro.optim import Optimizer
 
 
 def make_client_update(grad_fn: Callable, fed: FedConfig,
                        client_opt: Optimizer) -> Callable:
-    """Returns ``update(params, batches) -> (delta, metrics)``.
+    """Returns ``update(params, batches, *extras) -> ClientResult``.
 
-    ``batches``: pytree with leading axis ``fed.local_steps``.
-    The delta is a *pseudo-gradient*: the server optimizer treats it exactly
-    like a stochastic gradient of the global objective (Proposition 2).
+    ``batches``: pytree with leading axis ``fed.local_steps``. The result
+    is a ``(payload, metrics)`` NamedTuple; for the mean-delta algorithms
+    the payload is the delta pytree, so legacy ``delta, metrics = update(...)``
+    unpacking keeps working. The delta is a *pseudo-gradient*: the server
+    optimizer treats it exactly like a stochastic gradient of the global
+    objective (Proposition 2).
     """
-    delta_dtype = jnp.dtype(fed.delta_dtype)
+    from repro.algorithms import get_algorithm  # noqa: PLC0415 — cycle
 
-    if fed.algorithm == "fedavg":
-
-        def update(params, batches):
-            opt_state = client_opt.init(params)
-            final, _, losses = sgd_steps(params, client_opt, opt_state,
-                                         grad_fn, batches)
-            delta = tm.tcast(fedavg_delta(params, final), delta_dtype)
-            return delta, {"loss_first": losses[0], "loss_last": losses[-1]}
-
-        return update
-
-    if fed.algorithm == "mime":
-        return make_mime_client_update(grad_fn, fed, client_opt,
-                                       delta_dtype=delta_dtype)
-
-    if fed.streaming_dp:
-        return _make_streaming_fedpa_update(grad_fn, fed, client_opt,
-                                            delta_dtype)
-
-    def update(params, batches):
-        opt_state = client_opt.init(params)
-        res = iasg_sample(
-            params, client_opt, opt_state, grad_fn, batches,
-            burn_in_steps=fed.burn_in_steps,
-            steps_per_sample=fed.steps_per_sample,
-            num_samples=fed.num_samples,
-            sample_dtype=delta_dtype,
-        )
-        # dp_delta's fp32 scalar coefficients promote bf16 leaves to fp32
-        # (jnp weak-typing); pin the configured dtype so scan carries match
-        delta = tm.tcast(
-            dp_delta(tm.tcast(params, delta_dtype), res.samples,
-                     fed.shrinkage_rho),
-            delta_dtype,
-        )
-        first = res.burn_in_losses[0] if fed.burn_in_steps else \
-            res.sample_losses[0, 0]
-        return delta, {"loss_first": first,
-                       "loss_last": res.sample_losses[-1, -1]}
-
-    return update
-
-
-def _make_streaming_fedpa_update(grad_fn, fed: FedConfig,
-                                 client_opt: Optimizer, delta_dtype):
-    """FedPA with the online/any-time DP (Appendix C): each IASG sample is
-    absorbed into the Sherman-Morrison state as soon as its window closes —
-    the l x d stacked-sample buffer never exists. Numerically identical to
-    the batch DP (tests/test_streaming_client.py)."""
-    ell = fed.num_samples
-    rho = fed.shrinkage_rho
-    K_s = fed.steps_per_sample
-
-    def update(params, batches):
-        opt_state = client_opt.init(params)
-        split = lambda tree, a, b: tm.tmap(lambda x: x[a:b], tree)
-        p, s = params, opt_state
-        loss_first = None
-        if fed.burn_in_steps:
-            p, s, burn = sgd_steps(p, client_opt, s, grad_fn,
-                                   split(batches, 0, fed.burn_in_steps))
-            loss_first = burn[0]
-        windows = tm.tmap(
-            lambda x: x[fed.burn_in_steps:].reshape(
-                (ell, K_s) + x.shape[1:]),
-            batches,
-        )
-        dp0 = online_dp_init(tm.tcast(params, delta_dtype), ell,
-                             dtype=delta_dtype)
-
-        def window(carry, wb):
-            p, s, dp = carry
-
-            def step(inner, batch):
-                p, s, acc = inner
-                loss, grads = grad_fn(p, batch)
-                upd, s = client_opt.update(grads, s, p)
-                p = tm.tmap(lambda pi, u: pi + u.astype(pi.dtype), p, upd)
-                acc = tm.tmap(lambda a, pi: a + pi.astype(delta_dtype),
-                              acc, p)
-                return (p, s, acc), loss
-
-            acc0 = tm.tzeros_like(p, delta_dtype)
-            (p, s, acc), losses = jax.lax.scan(step, (p, s, acc0), wb)
-            sample = tm.tscale(1.0 / K_s, acc)
-            dp = online_dp_update(dp, sample, rho)
-            return (p, s, dp), losses
-
-        (p, s, dp), losses = jax.lax.scan(window, (p, s, dp0), windows)
-        delta = tm.tcast(online_dp_delta(dp, rho), delta_dtype)
-        first = loss_first if loss_first is not None else losses[0, 0]
-        return delta, {"loss_first": first, "loss_last": losses[-1, -1]}
-
-    return update
-
-
-def make_mime_client_update(grad_fn, fed: FedConfig,
-                            client_opt: Optimizer,
-                            delta_dtype=jnp.float32):
-    """MIME-lite (Karimireddy et al. 2020) — the paper's strongest stateless
-    baseline: clients mix a FROZEN server momentum estimate into every local
-    step (theta <- theta - lr[(1-beta) g + beta m_server]) plus the SVRG-style
-    control variate g(theta_k) - g(theta_0) + g_full(theta_0), where the
-    full-batch gradient at theta_0 is estimated from the round's batches.
-
-    Returns ``update(params, batches, server_m) -> (delta, metrics)`` —
-    note the extra server-statistics argument (MIME's defining feature).
-    """
-    beta = fed.mime_beta
-    lr = fed.client_lr
-
-    def update(params, batches, server_m):
-        # control-variate anchor: mean gradient at theta_0 over the round
-        def accum(carry, batch):
-            _, g = grad_fn(params, batch)
-            return tm.tadd(carry, g), None
-
-        K = jax.tree_util.tree_leaves(batches)[0].shape[0]
-        gsum, _ = jax.lax.scan(accum, tm.tzeros_like(params), batches)
-        g_anchor = tm.tscale(1.0 / K, gsum)
-
-        def step(carry, batch):
-            p = carry
-            loss, g = grad_fn(p, batch)
-            _, g0 = grad_fn(params, batch)   # same minibatch at theta_0
-            g_corr = tm.tmap(lambda a, b, c: a - b + c, g, g0, g_anchor)
-            d = tm.tmap(lambda gi, mi: (1.0 - beta) * gi + beta * mi,
-                        g_corr, server_m)
-            p = tm.tmap(lambda pi, di: pi - lr * di.astype(pi.dtype), p, d)
-            return p, loss
-
-        p, losses = jax.lax.scan(step, params, batches)
-        delta = tm.tcast(fedavg_delta(params, p), delta_dtype)
-        return delta, {"loss_first": losses[0], "loss_last": losses[-1]}
-
-    return update
+    return get_algorithm(fed).make_client_update(grad_fn, client_opt)

@@ -71,9 +71,12 @@ class FedSim:
                 server_opt=self.server_opt, use_sampling=use_sampling,
             ))
 
+        from repro.algorithms import get_algorithm  # noqa: PLC0415 — cycle
+
         self._round = build(use_sampling=True)
-        # burn-in rounds run the FedAvg-regime update (Section 5.2)
-        self._has_burn_regime = (self.fed.algorithm == "fedpa"
+        # burn-in rounds run the algorithm's burn regime, e.g. FedPA's
+        # FedAvg regime (Section 5.2)
+        self._has_burn_regime = (get_algorithm(self.fed).has_burn_regime
                                  and self.fed.burn_in_rounds > 0)
         if self._has_burn_regime:
             self._burn_round = build(use_sampling=False)
@@ -162,12 +165,19 @@ class FedSim:
         return AsyncRoundEngine(
             cohort_fn=make_cohort_program(
                 self.grad_fn, self.fed, placement=self.placement,
-                use_sampling=True),
+                server_opt=self.server_opt, use_sampling=True),
             server_fn=make_server_program(self.fed,
                                           server_opt=self.server_opt),
             burn_cohort_fn=(make_cohort_program(
                 self.grad_fn, self.fed, placement=self.placement,
-                use_sampling=False) if self._has_burn_regime else None),
+                server_opt=self.server_opt, use_sampling=False)
+                if self._has_burn_regime else None),
+            # the burn regime may aggregate in a different payload space
+            # (fedpa_precision burns in as fedavg), so it gets its own
+            # server stage too
+            burn_server_fn=(make_server_program(
+                self.fed, server_opt=self.server_opt, use_sampling=False)
+                if self._has_burn_regime else None),
             burn_in_rounds=self.fed.burn_in_rounds,
             max_staleness=self.fed.max_staleness,
             staleness_discount=self.fed.staleness_discount,

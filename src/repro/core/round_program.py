@@ -1,15 +1,15 @@
 """The unified compiled round engine: one XLA program per federated round.
 
 An entire generalized federated round (Algorithm 1) — cohort of clients
-running their local updates, weighted delta aggregation, server optimizer
+running their local updates, weighted payload aggregation, server optimizer
 step — is staged as a single jittable function, so the simulation path
 (``round.FedSim``) and the multi-pod SPMD path (``sharded_round``) pay one
 dispatch per round instead of one per client. The round factors into two
 separately jittable stages:
 
-  * ``make_cohort_program`` — clients -> weighted mean delta (+ losses);
+  * ``make_cohort_program`` — clients -> aggregated payload (+ losses);
   * ``make_server_program`` — server optimizer step, with an optional
-    staleness discount on the delta (``core/async_engine.py`` overlaps
+    staleness discount on the aggregate (``core/async_engine.py`` overlaps
     cohort t+1 with server round t using exactly these two stages);
 
 and ``make_round_program`` fuses them back into the single-dispatch
@@ -25,14 +25,15 @@ and ``make_round_program`` fuses them back into the single-dispatch
     memory allows still compiles (and dispatches) once. Cohorts that don't
     divide evenly are padded with zero-weight duplicate clients.
 
-All placements share one copy of the client math (``make_client_update`` —
-FedAvg / FedPA / streaming-FedPA / MIME) and of the weighted aggregation,
-and they produce the same round math up to floating-point reduction order
-(tests/test_round_engine.py).
+All round math is resolved through the ``repro.algorithms`` strategy API
+(``FedConfig.algorithm`` -> a registered ``FedAlgorithm``): the algorithm
+owns the client update, the broadcast extras, the linear payload
+accumulator the placements fold into, and the server step. The placements
+only decide how the cohort is laid out; they produce the same round math up
+to floating-point reduction order (tests/test_round_engine.py).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable, Optional, Tuple
 
 import jax
@@ -40,9 +41,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import FedConfig
 from repro.core import tree_math as tm
-from repro.core.client import make_client_update
-from repro.core.server import (ServerState, normalized_weights,
-                               server_update, weighted_sum)
+from repro.core.server import ServerState, normalized_weights
 from repro.optim import Optimizer, get_optimizer
 
 #: Client placements understood by the engine.
@@ -78,42 +77,42 @@ def make_cohort_program(
     spmd_axes: Optional[Tuple[str, ...]] = None,
     use_sampling: bool = True,
     client_opt: Optional[Optimizer] = None,
+    server_opt: Optional[Optimizer] = None,
     wrap_client: Optional[Callable] = None,
     prepare_params: Optional[Callable] = None,
     constrain_accum: Optional[Callable] = None,
 ) -> Callable:
     """Build ``cohort_fn(state, client_batches[, client_weights])``.
 
-    The client half of a round: cohort of local updates -> weighted mean
-    delta. ``client_batches``: pytree whose leaves carry a leading client
-    axis C and a second per-client step axis K (``fed.local_steps``).
-    ``client_weights`` (optional, shape (C,)) are normalized inside the
-    program; None means uniform. Returns ``(mean_delta, {"loss_first",
-    "loss_last"})`` with the losses averaged (unweighted) over the cohort.
+    The client half of a round: cohort of local updates -> aggregated
+    payload (the algorithm's linear accumulator; for mean-delta algorithms
+    this IS the weighted mean delta). ``client_batches``: pytree whose
+    leaves carry a leading client axis C and a second per-client step axis
+    K (``fed.local_steps``). ``client_weights`` (optional, shape (C,)) are
+    normalized inside the program; None means uniform. Returns
+    ``(agg, {"loss_first", "loss_last"})`` with the losses averaged
+    (unweighted) over the cohort; ``agg`` feeds ``make_server_program``'s
+    server stage, which finalizes it into the pseudo-gradient.
 
-    Takes the full ``ServerState`` (not just params) because MIME clients
-    read the frozen server momentum out of the optimizer state; only
-    ``state.params`` (+ opt stats) are consumed, so the async engine may
-    pass a state that is ``s`` versions stale.
+    Takes the full ``ServerState`` (not just params) because the
+    algorithm's broadcast hook may read server-optimizer statistics (MIME's
+    frozen momentum); only ``state.params`` (+ opt stats) are consumed, so
+    the async engine may pass a state that is ``s`` versions stale.
+    ``server_opt`` is only consulted by that hook and defaults to the
+    ``fed``-configured server optimizer.
     """
-    eff = fed
-    if not use_sampling and fed.algorithm == "fedpa":
-        eff = dataclasses.replace(fed, algorithm="fedavg")
+    from repro.algorithms import resolve_algorithm  # noqa: PLC0415 — cycle
+
+    alg = resolve_algorithm(fed, use_sampling)
+    eff = alg.fed
     client_opt = client_opt or get_optimizer(eff.client_opt, eff.client_lr,
                                              eff.client_momentum)
-    client_update = make_client_update(grad_fn, eff, client_opt)
+    server_opt = server_opt or get_optimizer(fed.server_opt, fed.server_lr,
+                                             fed.server_momentum)
+    client_update = alg.make_client_update(grad_fn, client_opt)
     if wrap_client is not None:
         client_update = wrap_client(client_update)
     place = resolve_placement(fed, placement)
-    needs_server_stats = eff.algorithm == "mime"
-    delta_dtype = jnp.dtype(eff.delta_dtype)
-
-    def _server_stats(state: ServerState):
-        """Frozen server momentum shipped to MIME clients (Section 6)."""
-        opt = state.opt_state
-        if isinstance(opt, dict) and "m" in opt:
-            return opt["m"]
-        return tm.tzeros_like(state.params)
 
     def _client_axes(n_extra: int):
         return (None, 0) + (None,) * n_extra
@@ -121,21 +120,21 @@ def make_cohort_program(
     def _run_parallel(params, client_batches, weights, extras):
         vm = jax.vmap(client_update, in_axes=_client_axes(len(extras)),
                       spmd_axis_name=spmd_axes)
-        deltas, metrics = vm(params, client_batches, *extras)
-        return weighted_sum(deltas, weights), metrics
+        res = vm(params, client_batches, *extras)
+        return alg.reduce_stacked(res.payload, weights), res.metrics
 
     def _zero_accum(params):
-        acc = tm.tzeros_like(params, delta_dtype)
+        acc = alg.init_accum(params)
         if constrain_accum is not None:
-            acc = constrain_accum(acc, params)
+            acc = alg.map_components(lambda z: constrain_accum(z, params),
+                                     acc)
         return acc
 
     def _run_sequential(params, client_batches, weights, extras):
         def body(acc, xs):
             batches, w = xs
-            delta, metrics = client_update(params, batches, *extras)
-            acc = tm.tmap(lambda a, d: a + (w * d).astype(a.dtype), acc, delta)
-            return acc, metrics
+            res = client_update(params, batches, *extras)
+            return alg.accumulate(acc, res.payload, w), res.metrics
 
         return jax.lax.scan(body, _zero_accum(params),
                             (client_batches, weights))
@@ -161,36 +160,36 @@ def make_cohort_program(
             batches, w = xs
             vm = jax.vmap(client_update, in_axes=_client_axes(len(extras)),
                           spmd_axis_name=spmd_axes)
-            deltas, metrics = vm(params, batches, *extras)
+            res = vm(params, batches, *extras)
             acc = tm.tmap(lambda a, c: a + c.astype(a.dtype),
-                          acc, weighted_sum(deltas, w))
-            return acc, metrics
+                          acc, alg.reduce_stacked(res.payload, w))
+            return acc, res.metrics
 
-        mean_delta, metrics = jax.lax.scan(body, _zero_accum(params),
-                                           (chunked, w_chunks))
+        agg, metrics = jax.lax.scan(body, _zero_accum(params),
+                                    (chunked, w_chunks))
         # (n_chunks, chunk) -> (C,) with the padding sliced off
         metrics = tm.tmap(lambda x: x.reshape((n_chunks * chunk,))[:C], metrics)
-        return mean_delta, metrics
+        return agg, metrics
 
     def cohort_fn(state: ServerState, client_batches, client_weights=None):
         C = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
         params = (state.params if prepare_params is None
                   else prepare_params(state.params))
-        extras = (_server_stats(state),) if needs_server_stats else ()
+        extras = alg.broadcast(state, server_opt)
         weights = normalized_weights(client_weights, C)
 
         if place == "parallel":
-            mean_delta, metrics = _run_parallel(params, client_batches,
-                                                weights, extras)
+            agg, metrics = _run_parallel(params, client_batches,
+                                         weights, extras)
         elif place == "sequential":
-            mean_delta, metrics = _run_sequential(params, client_batches,
-                                                  weights, extras)
+            agg, metrics = _run_sequential(params, client_batches,
+                                           weights, extras)
         else:
             chunk = _resolve_chunk(fed, chunk_size, C)
-            mean_delta, metrics = _run_chunked(params, client_batches,
-                                               weights, extras, chunk)
+            agg, metrics = _run_chunked(params, client_batches,
+                                        weights, extras, chunk)
 
-        return mean_delta, {
+        return agg, {
             "loss_first": jnp.mean(metrics["loss_first"]),
             "loss_last": jnp.mean(metrics["loss_last"]),
         }
@@ -202,33 +201,35 @@ def make_server_program(
     fed: FedConfig,
     *,
     server_opt: Optional[Optimizer] = None,
+    use_sampling: bool = True,
     prepare_params: Optional[Callable] = None,
     finalize_params: Optional[Callable] = None,
 ) -> Callable:
-    """Build ``server_fn(state, mean_delta, discount=None) -> new_state``.
+    """Build ``server_fn(state, agg, discount=None) -> new_state``.
 
-    The server half of a round: one server-optimizer step on the aggregated
-    pseudo-gradient. ``discount`` (optional traced scalar) scales the delta
-    before the optimizer sees it — the async engine passes
-    ``staleness_discount ** s`` for a delta computed at params version ``v``
-    and applied at version ``v + s``; ``discount=None`` (or 1.0) is the
-    synchronous update. The scaling runs in fp32 and casts back to the
-    delta dtype, so a discount of exactly 1.0 is a bitwise no-op and the
-    ``staleness=0`` async path matches the fused sync program.
+    The server half of a round: finalize the cohort aggregate into the
+    pseudo-gradient and take one server-optimizer step — both owned by the
+    algorithm's ``server_update`` hook. ``discount`` (optional traced
+    scalar) is the async engine's ``staleness_discount ** s`` for an
+    aggregate computed at params version ``v`` and applied at version
+    ``v + s``; ``discount=None`` (or 1.0) is the synchronous update. The
+    default hook scales the pseudo-gradient in fp32 and casts back, so a
+    discount of exactly 1.0 is a bitwise no-op and the ``staleness=0``
+    async path matches the fused sync program; algorithms may discount per
+    parameter (``fedpa_precision``). ``use_sampling=False`` builds the
+    stage for the burn-in regime's aggregate structure.
     """
+    from repro.algorithms import resolve_algorithm  # noqa: PLC0415 — cycle
+
+    alg = resolve_algorithm(fed, use_sampling)
     server_opt = server_opt or get_optimizer(fed.server_opt, fed.server_lr,
                                              fed.server_momentum)
 
-    def server_fn(state: ServerState, mean_delta, discount=None):
+    def server_fn(state: ServerState, agg, discount=None):
         params = (state.params if prepare_params is None
                   else prepare_params(state.params))
-        if discount is not None:
-            d = jnp.asarray(discount, jnp.float32)
-            mean_delta = tm.tmap(
-                lambda x: (d * x.astype(jnp.float32)).astype(x.dtype),
-                mean_delta)
-        new_state = server_update(state._replace(params=params), mean_delta,
-                                  server_opt)
+        new_state = alg.server_update(state._replace(params=params), agg,
+                                      server_opt, discount)
         if finalize_params is not None:
             new_state = new_state._replace(
                 params=finalize_params(new_state.params))
@@ -259,21 +260,23 @@ def make_round_program(
     aggregation -> server step. Returns ``(new_state, {"loss_first",
     "loss_last"})``.
 
-    ``use_sampling=False`` builds the burn-in-round variant of a FedPA
-    config (the FedAvg regime of Section 5.2) with identical signature.
+    ``use_sampling=False`` builds the burn-in-round variant of the config's
+    algorithm (e.g. the FedAvg regime of a FedPA config, Section 5.2) with
+    identical signature.
 
     Sharding hooks (all optional, identity by default) let the multi-pod
     path reuse this exact program structure:
 
-    * ``wrap_client(update) -> update'`` — wrap the per-client update, e.g.
-      to all-gather FSDP-sharded params at the compute boundary.
+    * ``wrap_client(update) -> update'`` — wrap the per-client update
+      (``update`` returns a ``ClientResult``), e.g. to all-gather
+      FSDP-sharded params at the compute boundary.
     * ``prepare_params(params)`` — applied to the server params before they
       are handed to clients / the server optimizer. Must be idempotent
       (sharding constraints are): the cohort and server stages each apply
       it, so the fused round runs it twice per round.
     * ``finalize_params(params)`` — applied to the post-update params.
     * ``constrain_accum(zeros, like_params)`` — sharding constraint for the
-      sequential/chunked delta accumulator.
+      sequential/chunked accumulator (applied per param-shaped component).
 
     The returned function is pure and jit-compatible; callers own the
     ``jax.jit`` (``FedSim`` jits it, the dry-run lowers it un-jitted).
@@ -281,16 +284,16 @@ def make_round_program(
     cohort_fn = make_cohort_program(
         grad_fn, fed, placement=placement, chunk_size=chunk_size,
         spmd_axes=spmd_axes, use_sampling=use_sampling, client_opt=client_opt,
-        wrap_client=wrap_client, prepare_params=prepare_params,
-        constrain_accum=constrain_accum,
+        server_opt=server_opt, wrap_client=wrap_client,
+        prepare_params=prepare_params, constrain_accum=constrain_accum,
     )
     server_fn = make_server_program(
-        fed, server_opt=server_opt, prepare_params=prepare_params,
-        finalize_params=finalize_params,
+        fed, server_opt=server_opt, use_sampling=use_sampling,
+        prepare_params=prepare_params, finalize_params=finalize_params,
     )
 
     def round_fn(state: ServerState, client_batches, client_weights=None):
-        mean_delta, metrics = cohort_fn(state, client_batches, client_weights)
-        return server_fn(state, mean_delta), metrics
+        agg, metrics = cohort_fn(state, client_batches, client_weights)
+        return server_fn(state, agg), metrics
 
     return round_fn

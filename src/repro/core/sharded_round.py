@@ -56,24 +56,31 @@ def _program_pieces(
 ):
     """Shared wiring: (grad_fn, cohort_kwargs, server_kwargs) for a given
     placement — one source of truth for the fused and split builders."""
+    from repro.algorithms import ClientResult, resolve_algorithm  # noqa: PLC0415
+
     grad_fn = lm_grad_fn(cfg, compute_dtype=compute_dtype, q_chunk=q_chunk,
                          remat=remat)
 
     if placement in ("parallel", "chunked"):
         cohort_kw = dict(placement=placement, chunk_size=chunk_size,
                          spmd_axes=spmd_axes, use_sampling=use_sampling)
-        return grad_fn, cohort_kw, {}
+        return grad_fn, cohort_kw, {"use_sampling": use_sampling}
 
     if placement != "sequential":
         raise ValueError(f"unknown placement {placement!r}")
+
+    alg = resolve_algorithm(fed, use_sampling)
 
     def wrap_client(client_update):
         def fsdp_client_update(master_params, batches, *extra):
             """One client with FSDP-sharded state; compute on gathered bf16."""
             # the all-gather boundary: compute params are tensor-parallel only
             gathered = tp_constrain(tm.tcast(master_params, compute_dtype))
-            delta, metrics = client_update(gathered, batches, *extra)
-            return fsdp_constrain(delta, like_params=master_params), metrics
+            res = client_update(gathered, batches, *extra)
+            payload = alg.map_components(
+                lambda t: fsdp_constrain(t, like_params=master_params),
+                res.payload)
+            return ClientResult(payload, res.metrics)
 
         return fsdp_client_update
 
@@ -84,7 +91,8 @@ def _program_pieces(
         constrain_accum=lambda zeros, master: fsdp_constrain(
             zeros, like_params=master),
     )
-    server_kw = dict(prepare_params=fsdp_constrain,
+    server_kw = dict(use_sampling=use_sampling,
+                     prepare_params=fsdp_constrain,
                      finalize_params=fsdp_constrain)
     return grad_fn, cohort_kw, server_kw
 

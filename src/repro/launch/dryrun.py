@@ -27,6 +27,7 @@ import jax           # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 from repro import configs                                     # noqa: E402
+from repro.algorithms import algorithm_names, phase_name      # noqa: E402
 from repro.configs.base import SHAPES, FedConfig              # noqa: E402
 from repro.core.sharded_round import (default_placement,      # noqa: E402
                                       make_fed_round)
@@ -77,6 +78,9 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
     chips = mesh.size
     fed = fed or default_fed_config(algorithm)
+    # same display-name helper as launch.train; the dry-run lowers the
+    # sampling-regime round, so label it with the first post-burn-in round
+    rec["algorithm"] = phase_name(fed, fed.burn_in_rounds)
     if delta_dtype != "float32":
         fed = dataclasses.replace(fed, delta_dtype=delta_dtype)
         rec["delta_dtype"] = delta_dtype
@@ -207,7 +211,9 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--algorithm", default="fedpa",
-                    choices=("fedpa", "fedavg"))
+                    choices=algorithm_names(),
+                    help="registered federated algorithm "
+                         f"(repro.algorithms): {', '.join(algorithm_names())}")
     ap.add_argument("--placement", default="auto",
                     choices=("auto", "parallel", "sequential"))
     ap.add_argument("--remat", default="full",

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.algorithms import algorithm_names, get_algorithm, phase_name
 from repro.checkpoint import restore_checkpoint, save_checkpoint
 from repro.configs.base import FedConfig
 from repro.core.async_engine import AsyncRoundEngine
@@ -56,7 +57,9 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced config (CPU-friendly)")
     ap.add_argument("--algorithm", default="fedpa",
-                    choices=("fedavg", "fedpa"))
+                    choices=algorithm_names(),
+                    help="registered federated algorithm "
+                         f"(repro.algorithms): {', '.join(algorithm_names())}")
     ap.add_argument("--rounds", type=int, default=50)
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--num-clients", type=int, default=64,
@@ -167,14 +170,16 @@ def main():
         # server update lands; deltas discounted by staleness_discount**s
         cohort_fn, server_fn = make_fed_round_split(
             cfg, fed, placement="parallel", q_chunk=q_chunk)
-        burn_cohort_fn = (make_fed_round_split(
-            cfg, fed, placement="parallel", q_chunk=q_chunk,
-            use_sampling=False)[0]
-            if fed.algorithm == "fedpa" and fed.burn_in_rounds else None)
+        burn_cohort_fn = burn_server_fn = None
+        if get_algorithm(fed).has_burn_regime and fed.burn_in_rounds:
+            burn_cohort_fn, burn_server_fn = make_fed_round_split(
+                cfg, fed, placement="parallel", q_chunk=q_chunk,
+                use_sampling=False)
         engine = AsyncRoundEngine(
             cohort_fn=cohort_fn,
             server_fn=server_fn,
             burn_cohort_fn=burn_cohort_fn,
+            burn_server_fn=burn_server_fn,
             burn_in_rounds=max(0, fed.burn_in_rounds - start_round),
             max_staleness=fed.max_staleness,
             staleness_discount=fed.staleness_discount,
@@ -199,8 +204,7 @@ def main():
                   "client_loss_last": float(rec["metrics"]["loss_last"]),
                   "client_loss_first": float(rec["metrics"]["loss_first"]),
                   "staleness": rec["staleness"],
-                  "phase": ("burn-in" if r < fed.burn_in_rounds
-                            else fed.algorithm),
+                  "phase": phase_name(fed, r),
                   "sec": round(time.time() - last_t, 2)})
             last_t = time.time()
             maybe_checkpoint(round_state, r)
@@ -218,8 +222,7 @@ def main():
             rec = {"round": r, "eval_loss": ev,
                    "client_loss_last": float(metrics["loss_last"]),
                    "client_loss_first": float(metrics["loss_first"]),
-                   "phase": ("burn-in" if r < fed.burn_in_rounds
-                             else fed.algorithm),
+                   "phase": phase_name(fed, r),
                    "sec": round(time.time() - t0, 2)}
             emit(rec)
             maybe_checkpoint(state, r)

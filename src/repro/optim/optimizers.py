@@ -18,9 +18,25 @@ from repro import tree_math as tm
 Schedule = Union[float, Callable[[jnp.ndarray], jnp.ndarray]]
 
 
+def _zero_momentum(state, params):
+    """Momentum accessor for momentum-free optimizers: a zeros tree."""
+    del state
+    return tm.tzeros_like(params)
+
+
+def _state_momentum(state, params):
+    """Momentum accessor for optimizers carrying an ``m`` buffer."""
+    del params
+    return state["m"]
+
+
 class Optimizer(NamedTuple):
     init: Callable[[Any], Any]
     update: Callable[[Any, Any, Any], tuple]   # (grads, state, params) -> (updates, state)
+    # momentum(opt_state, params) -> the first-moment buffer (zeros for
+    # momentum-free optimizers) — the explicit accessor MIME's broadcast
+    # hook reads instead of probing the state dict for an "m" key.
+    momentum: Callable[[Any, Any], Any] = _zero_momentum
 
 
 def _lr_at(lr: Schedule, step):
@@ -52,7 +68,7 @@ def sgdm(lr: Schedule, momentum: float = 0.9, nesterov: bool = False) -> Optimiz
         a = _lr_at(lr, state["step"])
         return tm.tscale(-a, d), {"step": state["step"] + 1, "m": m}
 
-    return Optimizer(init, update)
+    return Optimizer(init, update, momentum=_state_momentum)
 
 
 def adam(lr: Schedule, b1: float = 0.9, b2: float = 0.99,
@@ -77,7 +93,7 @@ def adam(lr: Schedule, b1: float = 0.9, b2: float = 0.99,
         upd = tm.tmap(lambda mi, vi: -a * mi / (jnp.sqrt(vi) + eps), mhat, vhat)
         return upd, {"step": t, "m": m, "v": v}
 
-    return Optimizer(init, update)
+    return Optimizer(init, update, momentum=_state_momentum)
 
 
 def adagrad(lr: Schedule, eps: float = 1e-5) -> Optimizer:
@@ -114,7 +130,7 @@ def yogi(lr: Schedule, b1: float = 0.9, b2: float = 0.99,
         upd = tm.tmap(lambda mi, vi: -a * mi / (jnp.sqrt(jnp.abs(vi)) + eps), m, v)
         return upd, {"step": t, "m": m, "v": v}
 
-    return Optimizer(init, update)
+    return Optimizer(init, update, momentum=_state_momentum)
 
 
 _REGISTRY = {"sgd": sgd, "sgdm": sgdm, "adam": adam, "adagrad": adagrad,

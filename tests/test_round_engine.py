@@ -1,7 +1,9 @@
 """Round-engine parity: the compiled one-jit round (parallel / sequential /
 chunked placements) reproduces the legacy per-client-loop round — same
 losses, same server params — for fedavg, fedpa, and mime, including
-weighted aggregation and chunk padding."""
+weighted aggregation and chunk padding; and, for every registered
+algorithm, an eager per-client reference built from the FedAlgorithm hooks
+plus the async ``max_staleness=0`` path."""
 import dataclasses
 
 import jax
@@ -9,12 +11,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.algorithms import get_algorithm
 from repro.configs.base import FedConfig
 from repro.core import FedSim, make_round_program
 from repro.core.client import make_client_update
 from repro.core.server import (aggregate_deltas, aggregate_deltas_list,
-                               init_server_state, server_update,
-                               weighted_sum)
+                               init_server_state, normalized_weights,
+                               server_update, weighted_sum)
 from repro.data import make_federated_lsq
 from repro.data.synthetic_lsq import lsq_batches
 from repro.optim import get_optimizer
@@ -40,6 +43,23 @@ FEDS = {
                               shrinkage_rho=0.5, server_opt="sgd",
                               server_lr=0.1, client_opt="sgd",
                               client_lr=0.01),
+    # delta-payload algorithm registered after the refactor
+    "fedprox": FedConfig(algorithm="fedprox", fedprox_mu=0.5,
+                         clients_per_round=C, local_steps=STEPS,
+                         server_opt="sgdm", server_lr=0.5,
+                         client_opt="sgd", client_lr=0.01),
+}
+
+# every registered algorithm, incl. the non-delta-payload one; FEDS stays
+# the delta-payload subset the pre-refactor legacy loop can reproduce
+ALL_FEDS = {
+    **FEDS,
+    "fedpa_precision": FedConfig(algorithm="fedpa_precision",
+                                 clients_per_round=C, local_steps=STEPS,
+                                 burn_in_steps=4, steps_per_sample=2,
+                                 shrinkage_rho=0.5, burn_in_rounds=2,
+                                 server_opt="sgd", server_lr=0.1,
+                                 client_opt="sgd", client_lr=0.01),
 }
 
 
@@ -172,6 +192,75 @@ def test_placements_agree_pairwise(problem):
         np.testing.assert_allclose(np.asarray(outs["parallel"]),
                                    np.asarray(outs[place]),
                                    rtol=1e-5, atol=1e-7)
+
+
+def _eager_round(fed, grad_fn, batch_fn, state, round_idx, weights=None):
+    """Eager per-client reference built from the FedAlgorithm hooks: one
+    jitted client dispatch per client, stacked payloads, eager aggregation
+    and server step — the strategy-API analogue of ``_legacy_round`` that
+    also covers non-delta payloads (fedpa_precision)."""
+    alg = get_algorithm(fed)
+    client_opt = get_optimizer(fed.client_opt, fed.client_lr,
+                               fed.client_momentum)
+    server_opt = get_optimizer(fed.server_opt, fed.server_lr,
+                               fed.server_momentum)
+    update = jax.jit(alg.make_client_update(grad_fn, client_opt))
+    extras = alg.broadcast(state, server_opt)
+    payloads, losses = [], []
+    for cid in range(C):
+        res = update(state.params, batch_fn(cid, round_idx, fed.local_steps),
+                     *extras)
+        payloads.append(res.payload)
+        losses.append(float(res.metrics["loss_last"]))
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *payloads)
+    w = normalized_weights(
+        None if weights is None else np.asarray(weights, np.float32), C)
+    agg = alg.reduce_stacked(stacked, w)
+    return alg.server_update(state, agg, server_opt), float(np.mean(losses))
+
+
+@pytest.mark.parametrize("alg_name", list(ALL_FEDS))
+@pytest.mark.parametrize("placement,chunk", [("parallel", None),
+                                             ("sequential", None),
+                                             ("chunked", 3)])  # 3 !| 4: pads
+def test_engine_matches_eager_hooks_all_registered(problem, alg_name,
+                                                   placement, chunk):
+    """Every registered algorithm x every placement == the eager per-client
+    reference assembled from the same FedAlgorithm hooks."""
+    grad_fn, batch_fn = problem
+    fed = ALL_FEDS[alg_name]
+    server_opt = get_optimizer(fed.server_opt, fed.server_lr,
+                               fed.server_momentum)
+    state0 = init_server_state(jnp.zeros(D), server_opt)
+    want, want_loss = _eager_round(fed, grad_fn, batch_fn, state0, 0)
+
+    round_fn = jax.jit(make_round_program(grad_fn, fed, placement=placement,
+                                          chunk_size=chunk,
+                                          server_opt=server_opt))
+    got, metrics = round_fn(state0, _stack(batch_fn, 0, fed.local_steps))
+    np.testing.assert_allclose(np.asarray(got.params),
+                               np.asarray(want.params), rtol=1e-5, atol=1e-6)
+    assert float(metrics["loss_last"]) == pytest.approx(want_loss, rel=1e-5)
+
+
+@pytest.mark.parametrize("alg_name", list(ALL_FEDS))
+def test_async_staleness_zero_matches_sync_all_registered(problem, alg_name):
+    """max_staleness=0 async == the fused synchronous engine for every
+    registered algorithm (incl. fedpa_precision's dict aggregate and its
+    fedavg burn-in rounds through the split burn server stage)."""
+    grad_fn, batch_fn = problem
+    fed = ALL_FEDS[alg_name]
+    sync = FedSim(fed=fed, grad_fn=grad_fn, batch_fn=batch_fn,
+                  num_clients=C)
+    want, _ = sync.run(jnp.zeros(D), 4)
+    fed_async = dataclasses.replace(fed, async_rounds=True, max_staleness=0,
+                                    prefetch_rounds=2)
+    sim = FedSim(fed=fed_async, grad_fn=grad_fn, batch_fn=batch_fn,
+                 num_clients=C)
+    got, hist = sim.run(jnp.zeros(D), 4)
+    np.testing.assert_allclose(np.asarray(got.params),
+                               np.asarray(want.params), rtol=1e-6, atol=1e-7)
+    assert [h["staleness"] for h in hist] == [0] * 4
 
 
 def test_fedconfig_round_knobs_validated():
