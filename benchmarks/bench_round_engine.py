@@ -83,10 +83,11 @@ def _bench_one(cfg, fed, rounds, batch_size, seed=0):
     def legacy_round(state, r):
         deltas, losses = [], []
         for c in range(CLIENTS):
-            delta, m = update(state.params,
-                              {"x": xs[r, c], "y": ys[r, c]})
-            deltas.append(delta)
-            losses.append(float(m["loss_last"]))   # blocking per-client sync
+            res = update(state.params,
+                         {"x": xs[r, c], "y": ys[r, c]})
+            deltas.append(res.payload)
+            # blocking per-client sync
+            losses.append(float(res.metrics["loss_last"]))
         mean_delta = aggregate_deltas_list(deltas)
         return server_update(state, mean_delta, server_opt)
 

@@ -1,9 +1,11 @@
 """Pluggable federated-algorithm strategy API (see ``base.py``).
 
 Importing this package registers the built-in algorithms — fedavg, fedpa
-(incl. the streaming DP), mime, fedprox, and fedpa_precision. Downstream
-code adds algorithms by subclassing :class:`FedAlgorithm` and decorating
-with :func:`register_algorithm`; no repro-internal edits required.
+(incl. the streaming DP), mime, fedprox, fedpa_precision, and the two
+stateful ones, scaffold and fedep (per-client persistent state via the
+engine's ``ClientStateStore``). Downstream code adds algorithms by
+subclassing :class:`FedAlgorithm` and decorating with
+:func:`register_algorithm`; no repro-internal edits required.
 """
 from repro.algorithms.base import (  # noqa: F401  (import order matters:
     ClientResult,                    # base must bind the registry before the
@@ -16,7 +18,9 @@ from repro.algorithms.base import (  # noqa: F401  (import order matters:
     resolve_algorithm,
 )
 from repro.algorithms.fedavg import FedAvg  # noqa: F401
+from repro.algorithms.fedep import FedEP  # noqa: F401
 from repro.algorithms.fedpa import FedPA  # noqa: F401
 from repro.algorithms.fedpa_precision import FedPAPrecision  # noqa: F401
 from repro.algorithms.fedprox import FedProx  # noqa: F401
 from repro.algorithms.mime import Mime  # noqa: F401
+from repro.algorithms.scaffold import Scaffold  # noqa: F401

@@ -21,17 +21,27 @@ The hook contract (one federated round, in engine order):
   ``update(params, batches, *extras) -> ClientResult(payload, metrics)``.
   The payload is a typed pytree — a bare delta for FedAvg/FedPA, a
   ``{"delta", "prec"}`` natural-parameter pair for precision-weighted
-  FedPA — not necessarily a single delta tree.
+  FedPA — not necessarily a single delta tree. *Stateful* algorithms
+  (``stateful = True``: SCAFFOLD control variates, FedEP sites) take one
+  extra leading argument and return one extra field:
+  ``update(params, batches, client_state, *extras) ->
+  ClientResult(payload, metrics, state_update)``; the engine gathers
+  ``client_state`` from (and scatters ``state_update`` back to) the
+  host-side per-client ``ClientStateStore``, inside the jitted round.
 * ``aggregate(stacked_payloads, weights) -> pseudo_grad`` — fp32-accumulated
   weighted aggregation. Internally this factors through a *linear
   accumulator space* (``payload_accum`` / ``accumulate`` /
   ``reduce_stacked`` + ``finalize``) so the engine's sequential and chunked
   placements can fold clients into the accumulator without ever
   materializing the stacked cohort, and so non-mean aggregations
-  (precision-weighted averaging) stay expressible.
+  (precision-weighted averaging) stay expressible. The accumulator is
+  ALWAYS fp32 regardless of ``fed.delta_dtype``; ``finalize`` casts once.
 * ``server_update(state, agg, server_opt, discount) -> state`` — finalize
   the accumulator into a pseudo-gradient, apply the (optionally
   per-parameter) staleness discount, and take one server-optimizer step.
+  Algorithms with persistent *server-side* statistics (SCAFFOLD's server
+  control variate) keep them in ``ServerState.algo_state``
+  (``init_algo_state``) and update them here.
 
 Algorithms whose sampling machinery needs a warm start expose a *burn-in
 regime* (``has_burn_regime`` / ``burn_algorithm()``): the algorithm run for
@@ -55,11 +65,16 @@ class ClientResult(NamedTuple):
     ``payload`` is the algorithm's typed communicated statistic (a pytree;
     a bare delta tree for FedAvg/FedPA). ``metrics`` is a dict of scalar
     diagnostics and must contain ``loss_first`` and ``loss_last``.
-    Being a 2-tuple, it unpacks like the legacy ``(delta, metrics)`` pair.
+    ``state_update`` is the client's new persistent per-client state
+    (``None`` for stateless algorithms): the round engine gathers the
+    cohort's state slices from the host-side ``ClientStateStore``, feeds
+    them to the client updates, and scatters these updates back — see
+    ``core/client_state.py``.
     """
 
     payload: Any
     metrics: Dict[str, Any]
+    state_update: Any = None
 
 
 # ---------------------------------------------------------------------------
@@ -160,6 +175,12 @@ class FedAlgorithm:
     supports_streaming_dp: bool = False
     #: Whether the algorithm runs a different regime during burn-in rounds.
     has_burn_regime: bool = False
+    #: Whether clients carry persistent per-round state (SCAFFOLD control
+    #: variates, FedEP sites). Stateful client updates take a
+    #: ``client_state`` argument and return ``ClientResult.state_update``;
+    #: the engines thread the cohort's state slices through the jitted
+    #: round via ``core.client_state.ClientStateStore``.
+    stateful: bool = False
 
     def __init__(self, fed):
         """Bind the algorithm to a ``FedConfig`` (stored as ``self.fed``)."""
@@ -189,6 +210,28 @@ class FedAlgorithm:
         """Algorithm run during the first ``fed.burn_in_rounds`` rounds."""
         return self
 
+    # -- persistent state ----------------------------------------------------
+    def init_client_state(self, params):
+        """Per-client persistent state template (one client's zero state).
+
+        Only consulted when ``stateful`` is True; the engines stack it into
+        the ``ClientStateStore``'s ``(num_clients, ...)`` buffers lazily,
+        the first time a template is available.
+        """
+        del params
+        return ()
+
+    def init_algo_state(self, params):
+        """Persistent server-side algorithm state (``ServerState.algo_state``).
+
+        Default: an empty pytree (no leaves), so stateless algorithms cost
+        nothing. SCAFFOLD keeps its server control variate here; the state
+        is checkpointed with the rest of ``ServerState`` and may be updated
+        by ``server_update``.
+        """
+        del params
+        return ()
+
     # -- round template hooks ----------------------------------------------
     def broadcast(self, state, server_opt: Optimizer) -> tuple:
         """Server statistics shipped to clients alongside the params.
@@ -211,8 +254,15 @@ class FedAlgorithm:
 
     # -- aggregation (accumulator space) ------------------------------------
     def init_accum(self, params):
-        """Zero element of the linear accumulator space."""
-        return tm.tzeros_like(params, self.delta_dtype)
+        """Zero element of the linear accumulator space.
+
+        The accumulator is fp32 REGARDLESS of ``fed.delta_dtype``: the
+        sequential and chunked placements fold one client (or chunk) at a
+        time into this buffer, and accumulating in bf16 would re-round on
+        every fold — violating the fp32-accumulation contract the stacked
+        ``reduce_stacked`` path keeps. :meth:`finalize` casts once.
+        """
+        return tm.tzeros_like(params, jnp.float32)
 
     def payload_accum(self, payload):
         """Map one client payload into the accumulator space (linear part).
@@ -223,23 +273,29 @@ class FedAlgorithm:
         return payload
 
     def accumulate(self, acc, payload, weight):
-        """Fold one client into the accumulator: ``acc + w * accum(p)``."""
-        return tm.tmap(lambda a, d: a + (weight * d).astype(a.dtype),
+        """Fold one client into the accumulator: ``acc + w * accum(p)``.
+
+        The product is formed in the accumulator's fp32 so low-precision
+        payloads lose nothing until the single ``finalize`` cast.
+        """
+        return tm.tmap(lambda a, d: a + (weight * d.astype(a.dtype)),
                        acc, self.payload_accum(payload))
 
     def reduce_stacked(self, stacked_payloads, weights):
-        """Weighted sum of a stacked cohort of payloads (fp32-accumulated).
+        """Weighted sum of a stacked cohort of payloads, in fp32.
 
         ``stacked_payloads`` carry a leading client axis; ``weights`` is the
-        matching normalized fp32 vector. The reduction runs in fp32 and
-        casts once (see ``core.server.weighted_sum``).
+        matching normalized fp32 vector. The result stays in the fp32
+        accumulator space — :meth:`finalize` owns the single cast back to
+        ``fed.delta_dtype``.
         """
         return server_lib.weighted_sum(
-            jax.vmap(self.payload_accum)(stacked_payloads), weights)
+            jax.vmap(self.payload_accum)(stacked_payloads), weights,
+            cast=False)
 
     def finalize(self, agg):
-        """Accumulator -> pseudo-gradient (identity for mean-delta algos)."""
-        return agg
+        """Accumulator -> pseudo-gradient: the single cast out of fp32."""
+        return tm.tcast(agg, self.delta_dtype)
 
     def aggregate(self, stacked_payloads, weights):
         """Stacked payloads + normalized weights -> pseudo-gradient.

@@ -1,0 +1,100 @@
+"""FedEP: stateful expectation propagation with damped site updates.
+
+Federated learning as variational inference (Guo et al. 2023): every
+client maintains a *site* — a diagonal-Gaussian approximation of its own
+likelihood factor in natural-parameter form — and the global posterior is
+the product of sites. ``fedpa_precision`` already ships the one-shot
+version of the statistic (shrinkage delta + diagonal precision, discarded
+after aggregation); FedEP makes the site *persistent per client* and
+updates it with damping:
+
+    site_new = (1 - alpha) * site_old + alpha * (P * delta, P)
+
+where ``P`` is the diagonal shrinkage precision of this round's IASG
+samples and ``delta`` the shrinkage-DP mean shift. The cohort payload IS
+the damped site (already natural parameters, so ``payload_accum`` is the
+identity), aggregated by the same precision-weighted mean ``num / den``
+as ``fedpa_precision`` — with ``alpha = 1`` and no participation history
+the two algorithms coincide, which is the parity anchor the tests pin.
+
+Damping is what the persistent state buys: a client whose one-round
+posterior estimate is noisy (few samples, bad minibatches) only moves its
+site part-way, so the aggregate forgets bad rounds geometrically instead
+of instantly trusting them — the standard stabilizer for EP in the
+low-participation federated regime.
+
+The site lives in the engine's ``ClientStateStore``; burn-in rounds run
+the FedAvg regime (inherited from FedPA) and leave sites untouched.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+from repro.algorithms.base import ClientResult, register_algorithm
+from repro.algorithms.fedpa_precision import FedPAPrecision
+from repro.core import tree_math as tm
+from repro.optim import Optimizer
+
+
+@register_algorithm("fedep")
+class FedEP(FedPAPrecision):
+    """Damped per-client natural-parameter sites (stateful fedpa_precision)."""
+
+    stateful = True
+
+    def validate(self) -> None:
+        """Damping must be a usable convex-combination weight."""
+        super().validate()
+        if not 0.0 < self.fed.fedep_damping <= 1.0:
+            raise ValueError(
+                f"fedep_damping must be in (0, 1], got "
+                f"{self.fed.fedep_damping}")
+
+    # -- persistent state ----------------------------------------------------
+    def init_client_state(self, params):
+        """Site natural parameters ``{num: P*delta, den: P}`` (zeros).
+
+        Kept in fp32 REGARDLESS of ``delta_dtype`` — like scaffold's
+        control variates: the damped EMA re-rounded to bf16 every
+        participation would lose corrections smaller than one ulp of the
+        site. Only the shipped payload is cast down to the wire dtype.
+        """
+        return {"num": tm.tzeros_like(params, jnp.float32),
+                "den": tm.tzeros_like(params, jnp.float32)}
+
+    # -- client --------------------------------------------------------------
+    def make_client_update(self, grad_fn: Callable,
+                           client_opt: Optimizer) -> Callable:
+        """``update(params, batches, site) -> ClientResult``.
+
+        One IASG pass -> this round's natural parameters; the shipped
+        payload and the state update are BOTH the damped site (the payload
+        is already in accumulator form, see ``payload_accum``).
+        """
+        alpha = self.fed.fedep_damping
+        delta_dtype = self.delta_dtype
+        run = self._iasg_delta(grad_fn, client_opt)   # shared FedPA core
+        diag_precision = self._diag_precision()
+
+        def update(params, batches, site):
+            delta, res, metrics = run(params, batches)
+            prec = diag_precision(res.samples)
+            new = {"num": tm.tmap(jnp.multiply, prec, delta), "den": prec}
+            # the persistent site stays fp32 (see init_client_state); the
+            # communicated copy is cast to the wire dtype once
+            damped = tm.tmap(
+                lambda old, fresh: (1.0 - alpha) * old
+                + alpha * fresh.astype(jnp.float32),
+                site, new)
+            return ClientResult(tm.tcast(damped, delta_dtype), metrics,
+                                state_update=damped)
+
+        return update
+
+    # -- aggregation ---------------------------------------------------------
+    def payload_accum(self, payload):
+        """Sites are already natural parameters: the identity, not the
+        ``{delta, prec} -> {num, den}`` map of ``fedpa_precision``."""
+        return payload

@@ -39,8 +39,10 @@ class FedPA(FedAlgorithm):
         """Reject configs whose local steps don't form whole IASG windows."""
         super().validate()
         if self.num_samples < 1:
+            # equality IS valid: local_steps == burn_in_steps +
+            # steps_per_sample gives exactly one IASG window (l = 1)
             raise ValueError(
-                "fedpa needs local_steps > burn_in_steps + steps_per_sample"
+                "fedpa needs local_steps >= burn_in_steps + steps_per_sample"
             )
         fed = self.fed
         sampling_steps = fed.local_steps - fed.burn_in_steps

@@ -44,20 +44,18 @@ class FedPAPrecision(FedPA):
 
     supports_streaming_dp = False
 
-    def make_client_update(self, grad_fn: Callable,
-                           client_opt: Optimizer) -> Callable:
-        """IASG + shrinkage-DP delta, plus the diagonal shrinkage precision.
+    def _diag_precision(self) -> Callable:
+        """Build ``diag_precision(samples) -> 1 / diag(Sigma_hat_l)``.
 
-        Payload: ``{"delta": Delta_hat_l, "prec": 1 / diag(Sigma_hat_l)}``
-        with ``diag(Sigma_hat_l) = rho_l + (1 - rho_l) * diag(S_l)`` the
+        ``diag(Sigma_hat_l) = rho_l + (1 - rho_l) * diag(S_l)`` is the
         diagonal of the Theorem 3 estimator (per-coordinate sample variance
         of the IASG samples). With a single sample ``rho_l = 1`` and the
-        precision is identically one — the plain FedPA delta.
+        precision is identically one — the plain FedPA delta. Shared with
+        the stateful ``fedep`` sites.
         """
         delta_dtype = self.delta_dtype
         num_samples = self.num_samples
         r = float(rho_l(num_samples, self.fed.shrinkage_rho))
-        run = self._iasg_delta(grad_fn, client_opt)  # shared FedPA core
 
         def diag_precision(samples):
             def leaf(s):
@@ -70,6 +68,18 @@ class FedPAPrecision(FedPA):
 
             return tm.tmap(leaf, samples)
 
+        return diag_precision
+
+    def make_client_update(self, grad_fn: Callable,
+                           client_opt: Optimizer) -> Callable:
+        """IASG + shrinkage-DP delta, plus the diagonal shrinkage precision.
+
+        Payload: ``{"delta": Delta_hat_l, "prec": 1 / diag(Sigma_hat_l)}``
+        (see :meth:`_diag_precision`).
+        """
+        run = self._iasg_delta(grad_fn, client_opt)  # shared FedPA core
+        diag_precision = self._diag_precision()
+
         def update(params, batches):
             delta, res, metrics = run(params, batches)
             payload = {"delta": delta, "prec": diag_precision(res.samples)}
@@ -79,9 +89,9 @@ class FedPAPrecision(FedPA):
 
     # -- aggregation: precision-weighted averaging ---------------------------
     def init_accum(self, params):
-        """Accumulator: precision-weighted delta sum + precision sum."""
-        return {"num": tm.tzeros_like(params, self.delta_dtype),
-                "den": tm.tzeros_like(params, self.delta_dtype)}
+        """Accumulator: precision-weighted delta sum + precision sum (fp32)."""
+        return {"num": tm.tzeros_like(params, jnp.float32),
+                "den": tm.tzeros_like(params, jnp.float32)}
 
     def payload_accum(self, payload):
         """Natural-parameter form: ``{num: P * delta, den: P}`` (linear)."""
@@ -93,7 +103,8 @@ class FedPAPrecision(FedPA):
         """Precision-weighted mean ``num / den`` (fp32, cast back once)."""
         return tm.tmap(
             lambda n, d: (n.astype(jnp.float32)
-                          / (d.astype(jnp.float32) + _EPS)).astype(n.dtype),
+                          / (d.astype(jnp.float32) + _EPS))
+            .astype(self.delta_dtype),
             agg["num"], agg["den"])
 
     def map_components(self, fn: Callable, obj):

@@ -217,6 +217,14 @@ class FedConfig:
     # FedProx (Li et al. 2020): proximal strength mu of the client anchor
     # term (mu/2)||theta - theta_0||^2; 0 reduces to FedAvg.
     fedprox_mu: float = 0.1
+    # SCAFFOLD (Karimireddy et al. 2020): scale of the server control-variate
+    # update c += scale * mean_i(dc_i). The exact rule uses |S|/N
+    # (cohort / population); 1.0 is exact under full participation.
+    scaffold_c_scale: float = 1.0
+    # FedEP (Guo et al. 2023): damping alpha of the per-client natural-
+    # parameter site update, site <- (1-alpha)*site + alpha*new. 1.0 makes
+    # every round a full site replacement (stateless fedpa_precision).
+    fedep_damping: float = 0.5
     # --- round engine (core/round_program.py) ---
     # How the cohort is laid out inside the one-jit-per-round program:
     # "parallel" (vmap over clients), "sequential" (scan, memory-bound

@@ -9,6 +9,7 @@ sharded_round (multi-pod SPMD), both thin frontends over the engine.
 """
 from repro.core.async_engine import AsyncRoundEngine  # noqa: F401
 from repro.core.client import make_client_update  # noqa: F401
+from repro.core.client_state import ClientStateStore  # noqa: F401
 from repro.core.diagnostics import (  # noqa: F401
     bias_variance,
     effective_sample_size,

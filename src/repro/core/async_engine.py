@@ -32,15 +32,47 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, List, NamedTuple, Optional, Tuple
 
 import jax
+import numpy as np
 
+from repro.core.client_state import ClientStateStore
 from repro.core.server import ServerState
-from repro.data.prefetch import Cohort, CohortPrefetcher
+from repro.data.prefetch import Cohort, CohortPrefetcher, close_prefetcher
 
 #: build_cohort(round_idx) -> Cohort (see data/prefetch.py)
 BuildCohort = Callable[[int], Cohort]
+
+
+class _InFlight(NamedTuple):
+    """One dispatched-but-unapplied cohort in the pipeline.
+
+    ``version`` is the params version the cohort saw when dispatched;
+    ``client_ids`` / ``new_states`` / ``stamps`` carry the per-client
+    state write-back (None for stateless regimes): the gather-time write
+    stamps let the store drop a stale write from a cohort that overlapped
+    an already-applied one on the same client.
+    """
+
+    agg: object
+    metrics: dict
+    version: int
+    round_idx: int
+    is_burn: bool
+    client_ids: object = None
+    new_states: object = None
+    stamps: object = None
+
+
+def _json_scalar(v):
+    """Device/NumPy metric -> plain Python (history must JSON-serialize).
+
+    Scalars become Python numbers, arrays become lists — by rank, not
+    size, so a length-1 vector metric keeps its list type.
+    """
+    a = np.asarray(v)
+    return a.item() if a.ndim == 0 else a.tolist()
 
 
 @dataclasses.dataclass
@@ -55,6 +87,17 @@ class AsyncRoundEngine:
     regime of a FedPA config, Section 5.2); the burn server stage exists
     because a burn regime may aggregate in a different payload space than
     the sampling regime (``fedpa_precision`` burns in as fedavg).
+
+    Stateful algorithms (``stateful=True`` + a ``client_store``): each
+    dispatched cohort gathers its clients' persistent state from the store
+    and its ``cohort_fn`` returns ``(agg, metrics, new_states)``; the
+    write-back happens at APPLY time, in round order, tagged with the
+    gather-time stamps — so when two in-flight cohorts overlap on a
+    client, the one applied second (which gathered before the first wrote)
+    is dropped for that client instead of clobbering the fresher state.
+    The write-back pulls ``new_states`` to the host, which syncs on that
+    cohort's compute — later cohorts are already dispatched, but stateful
+    rounds do pay one device sync per round that stateless ones avoid.
     """
 
     cohort_fn: Callable
@@ -65,12 +108,23 @@ class AsyncRoundEngine:
     burn_server_fn: Optional[Callable] = None
     burn_in_rounds: int = 0
     prefetch_rounds: int = 0
+    client_store: Optional[ClientStateStore] = None
+    stateful: bool = False
+    burn_stateful: bool = False
 
     def __post_init__(self):
+        """Validate knobs, normalize the burn-regime flags, jit the stages."""
         if self.max_staleness < 0:
             raise ValueError("max_staleness must be >= 0")
         if not 0.0 <= self.staleness_discount <= 1.0:
             raise ValueError("staleness_discount must be in [0, 1]")
+        if self.burn_cohort_fn is None:
+            # no dedicated burn stage: burn rounds run the main cohort_fn,
+            # so they are stateful exactly when the main regime is
+            self.burn_stateful = self.stateful
+        if (self.stateful or self.burn_stateful) and self.client_store is None:
+            raise ValueError(
+                "stateful=True requires a ClientStateStore (client_store)")
         self._cohort = jax.jit(self.cohort_fn)
         self._burn = (jax.jit(self.burn_cohort_fn)
                       if self.burn_cohort_fn is not None else self._cohort)
@@ -91,7 +145,10 @@ class AsyncRoundEngine:
     ) -> Tuple[ServerState, List[dict]]:
         """Returns ``(state, history)``; one history entry per applied round
         with ``loss_first`` / ``loss_last`` / ``client_loss`` / ``staleness``
-        (+ ``eval_fn`` metrics every ``eval_every`` rounds).
+        (+ ``eval_fn`` metrics every ``eval_every`` rounds, converted to
+        plain Python in the same final sync as the losses, and
+        ``state_drops`` — overlap-dropped client-state writes — for
+        stateful regimes). Every entry is JSON-serializable.
 
         ``on_round(record, state)`` fires after each server update with the
         raw (possibly still-on-device) metrics and the post-update state —
@@ -102,10 +159,11 @@ class AsyncRoundEngine:
                                    depth=self.prefetch_rounds)
                   if self.prefetch_rounds > 0 else None)
         get = source.get if source is not None else build_cohort
-        pending: deque = deque()  # (agg, metrics, version, round, is_burn)
+        pending: deque = deque()   # _InFlight, in dispatch (== apply) order
         raw: List[dict] = []
         version = 0                # server updates applied so far
         t_next = 0                 # next round to dispatch
+        completed = False
         try:
             for t_apply in range(num_rounds):
                 # keep up to max_staleness cohorts in flight beyond the one
@@ -115,37 +173,63 @@ class AsyncRoundEngine:
                     cohort = get(t_next)
                     is_burn = t_next < self.burn_in_rounds
                     fn = self._burn if is_burn else self._cohort
-                    agg, metrics = fn(state, cohort.batches, cohort.weights)
-                    pending.append((agg, metrics, version, t_next, is_burn))
+                    if (self.burn_stateful if is_burn else self.stateful):
+                        cstates, stamps = self.client_store.gather(
+                            cohort.client_ids)
+                        agg, metrics, new_states = fn(
+                            state, cohort.batches, cohort.weights, cstates)
+                        flight = _InFlight(agg, metrics, version, t_next,
+                                           is_burn, cohort.client_ids,
+                                           new_states, stamps)
+                    else:
+                        agg, metrics = fn(state, cohort.batches,
+                                          cohort.weights)
+                        flight = _InFlight(agg, metrics, version, t_next,
+                                           is_burn)
+                    pending.append(flight)
                     t_next += 1
 
-                agg, metrics, v, t, is_burn = pending.popleft()
-                assert t == t_apply, (t, t_apply)
-                staleness = version - v
-                server = self._burn_server if is_burn else self._server
-                state = server(state, agg,
+                fl = pending.popleft()
+                assert fl.round_idx == t_apply, (fl.round_idx, t_apply)
+                staleness = version - fl.version
+                server = self._burn_server if fl.is_burn else self._server
+                state = server(state, fl.agg,
                                self.staleness_discount ** staleness)
                 version += 1
 
                 rec = {"round": t_apply, "staleness": staleness,
-                       "metrics": metrics}
+                       "metrics": fl.metrics}
+                if fl.new_states is not None:
+                    # write back in apply order, tagged with the gather-time
+                    # stamps: a client already updated by an overlapping
+                    # cohort keeps that fresher value (stale write dropped)
+                    rec["state_drops"] = self.client_store.scatter(
+                        fl.client_ids, fl.new_states, fl.stamps)
                 if eval_fn is not None and (t_apply % eval_every == 0
                                             or t_apply == num_rounds - 1):
                     rec["eval"] = eval_fn(state.params)
                 raw.append(rec)
                 if on_round is not None:
                     on_round(rec, state)
+            completed = True
         finally:
             if source is not None:
-                source.close()
+                # a hung prefetch worker stays loud on a clean exit but
+                # must not mask an exception unwinding out of the loop
+                close_prefetcher(source, unwinding=not completed)
 
-        # one sync at the end instead of one per round
+        # one sync at the end instead of one per round; eval metrics are
+        # converted with the losses — splicing raw device arrays into
+        # history broke JSON serialization and hid a sync on first access
         history = []
         for rec in raw:
             entry = {"round": rec["round"], "staleness": rec["staleness"],
                      "loss_first": float(rec["metrics"]["loss_first"]),
                      "loss_last": float(rec["metrics"]["loss_last"])}
             entry["client_loss"] = entry["loss_last"]
-            entry.update(rec.get("eval", {}))
+            if "state_drops" in rec:
+                entry["state_drops"] = rec["state_drops"]
+            entry.update({k: _json_scalar(v)
+                          for k, v in rec.get("eval", {}).items()})
             history.append(entry)
         return state, history

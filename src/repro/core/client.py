@@ -22,11 +22,12 @@ def make_client_update(grad_fn: Callable, fed: FedConfig,
     """Returns ``update(params, batches, *extras) -> ClientResult``.
 
     ``batches``: pytree with leading axis ``fed.local_steps``. The result
-    is a ``(payload, metrics)`` NamedTuple; for the mean-delta algorithms
-    the payload is the delta pytree, so legacy ``delta, metrics = update(...)``
-    unpacking keeps working. The delta is a *pseudo-gradient*: the server
-    optimizer treats it exactly like a stochastic gradient of the global
-    objective (Proposition 2).
+    is a ``(payload, metrics, state_update)`` NamedTuple — read it by
+    attribute (``res.payload``, ``res.metrics``); the third field exists
+    for stateful algorithms, so the historical 2-tuple unpacking no longer
+    works. For the mean-delta algorithms the payload is the delta pytree —
+    a *pseudo-gradient*: the server optimizer treats it exactly like a
+    stochastic gradient of the global objective (Proposition 2).
     """
     from repro.algorithms import get_algorithm  # noqa: PLC0415 — cycle
 

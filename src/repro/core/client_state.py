@@ -1,0 +1,129 @@
+"""Host-side per-client persistent state for stateful federated algorithms.
+
+The paper's template assumes stateless clients, but its stateful cousins —
+SCAFFOLD-style control variates and the per-client site parameters of
+EP-based posterior inference (Guo et al. 2023) — need a statistic that
+persists *on the server, per client, across rounds*. ``ClientStateStore``
+is that statistic's home:
+
+  * dense numpy buffers with a leading ``num_clients`` axis, mirroring one
+    per-client state pytree (``FedAlgorithm.init_client_state``), lazily
+    allocated the first time a template is available;
+  * ``gather(client_ids)`` slices one cohort's states (and records a
+    per-client write stamp) for the jitted round program to consume;
+  * ``scatter(client_ids, updates, stamps)`` writes the cohort's
+    ``ClientResult.state_update`` back with compare-and-swap semantics:
+    a write is applied only if the client's state was not updated since
+    the matching gather. Under the async engine two in-flight cohorts can
+    overlap on a client; the cohort applied second gathered *before* the
+    first one wrote, so its stale write is dropped — an applied update is
+    never silently clobbered by a writer that did not see it;
+  * ``state_dict()`` / ``load_state_dict()`` expose a plain pytree so the
+    store checkpoints through ``checkpoint/io.py`` alongside ``ServerState``.
+
+Everything here is host-side (numpy): the stacked cohort slice transfers
+to the device once per round, with the batches, and the state traffic
+inside the round stays inside the single jitted program.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+
+
+class ClientStateStore:
+    """Per-client persistent state: dense host buffers + write stamps."""
+
+    def __init__(self, num_clients: int):
+        """Create an empty store for a population of ``num_clients``."""
+        if num_clients <= 0:
+            raise ValueError(f"num_clients must be >= 1, got {num_clients}")
+        self.num_clients = num_clients
+        self._buffers = None                  # pytree of (N, ...) np arrays
+        self._stamps = np.zeros(num_clients, np.int64)
+
+    @property
+    def initialized(self) -> bool:
+        """Whether the dense buffers have been allocated."""
+        return self._buffers is not None
+
+    def ensure(self, template) -> "ClientStateStore":
+        """Allocate the ``(num_clients, ...)`` buffers from one client's
+        state template (idempotent; zeros, matching leaf dtypes)."""
+        if self._buffers is None:
+            n = self.num_clients
+            self._buffers = jax.tree_util.tree_map(
+                lambda x: np.zeros((n,) + tuple(np.shape(x)),
+                                   np.asarray(x).dtype),
+                template)
+        return self
+
+    def reset(self) -> "ClientStateStore":
+        """Zero every client's state and write stamp (keeps the buffers)."""
+        if self._buffers is not None:
+            jax.tree_util.tree_map(lambda b: b.fill(0), self._buffers)
+        self._stamps[:] = 0
+        return self
+
+    def _require_initialized(self):
+        if self._buffers is None:
+            raise RuntimeError(
+                "ClientStateStore is uninitialized; call ensure(template) "
+                "with one client's state pytree first")
+
+    def gather(self, client_ids):
+        """One cohort's state slice: ``(stacked_states, stamps)``.
+
+        ``stacked_states`` leaves have shape ``(C, ...)`` and feed the
+        jitted round program; ``stamps`` snapshots each client's write
+        counter and must be handed back to :meth:`scatter` so overlapping
+        in-flight cohorts cannot clobber each other's applied updates.
+        """
+        self._require_initialized()
+        ids = np.asarray(client_ids, np.int64)
+        states = jax.tree_util.tree_map(lambda b: b[ids], self._buffers)
+        return states, self._stamps[ids].copy()
+
+    def scatter(self, client_ids, updates,
+                stamps: Optional[np.ndarray] = None) -> int:
+        """Write a cohort's state updates back; returns #clients dropped.
+
+        ``updates`` is the stacked ``ClientResult.state_update`` pytree
+        (leading cohort axis; device arrays are pulled to the host here —
+        the one blocking sync of a stateful round). With ``stamps`` (from
+        the matching :meth:`gather`), a client whose state was updated
+        since that gather keeps its newer value and this cohort's stale
+        write is dropped; ``stamps=None`` writes unconditionally.
+        """
+        self._require_initialized()
+        ids = np.asarray(client_ids, np.int64)
+        updates = jax.tree_util.tree_map(np.asarray, updates)
+        if stamps is None:
+            write = np.ones(ids.shape[0], bool)
+        else:
+            write = self._stamps[ids] == np.asarray(stamps)
+        rows = ids[write]
+        jax.tree_util.tree_map(
+            lambda b, u: b.__setitem__(rows, u[write]), self._buffers, updates)
+        self._stamps[rows] += 1
+        return int(ids.shape[0] - rows.shape[0])
+
+    # -- checkpointing -------------------------------------------------------
+    def state_dict(self):
+        """Checkpointable pytree: the dense buffers + write stamps."""
+        self._require_initialized()
+        return {"buffers": self._buffers, "stamps": self._stamps}
+
+    def load_state_dict(self, state) -> "ClientStateStore":
+        """Restore from :meth:`state_dict` output (leaf-count checked by
+        ``checkpoint.restore_checkpoint`` when loading from disk)."""
+        stamps = np.asarray(state["stamps"], np.int64)
+        if stamps.shape != (self.num_clients,):
+            raise ValueError(
+                f"stamps shape {stamps.shape} != ({self.num_clients},) — "
+                f"checkpoint was written for a different population size")
+        self._buffers = jax.tree_util.tree_map(np.asarray, state["buffers"])
+        self._stamps = stamps.copy()
+        return self

@@ -23,6 +23,8 @@ GradFn = Callable
 
 
 class IASGResult(NamedTuple):
+    """One IASG sampling pass: stacked samples, final iterate, losses."""
+
     samples: object        # tree, leading axis = num_samples
     params: object         # final iterate (what FedAvg would return)
     opt_state: object

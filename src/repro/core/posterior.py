@@ -22,10 +22,12 @@ class QuadraticClient(NamedTuple):
     weight: jnp.ndarray      # scalar q_i
 
     def loss(self, theta):
+        """0.5 (theta - mu)^T Sigma^{-1} (theta - mu)."""
         r = theta - self.mu
         return 0.5 * r @ self.sigma_inv @ r
 
     def grad(self, theta):
+        """Sigma^{-1} (theta - mu) — the exact local gradient."""
         return self.sigma_inv @ (theta - self.mu)
 
     def exact_delta(self, theta):

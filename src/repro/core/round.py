@@ -28,12 +28,14 @@ import numpy as np
 
 from repro.configs.base import FedConfig
 from repro.core.async_engine import AsyncRoundEngine
+from repro.core.client_state import ClientStateStore
 from repro.core.round_program import (make_cohort_program,
                                       make_round_program,
                                       make_server_program)
 from repro.core.server import (ServerState, check_weight_total,
                                init_server_state)
-from repro.data.prefetch import Cohort, CohortPrefetcher, stack_host
+from repro.data.prefetch import (Cohort, CohortPrefetcher, close_prefetcher,
+                                 stack_host)
 from repro.data.sampling import ClientSampler
 from repro.optim import get_optimizer
 
@@ -59,6 +61,7 @@ class FedSim:
     placement: Optional[str] = None
 
     def __post_init__(self):
+        """Build (and jit) the round programs and the client-state store."""
         self.sampler = ClientSampler(self.num_clients,
                                      self.fed.clients_per_round, self.seed)
         self.server_opt = get_optimizer(self.fed.server_opt,
@@ -73,19 +76,34 @@ class FedSim:
 
         from repro.algorithms import get_algorithm  # noqa: PLC0415 — cycle
 
+        self._alg = get_algorithm(self.fed)
         self._round = build(use_sampling=True)
         # burn-in rounds run the algorithm's burn regime, e.g. FedPA's
         # FedAvg regime (Section 5.2)
-        self._has_burn_regime = (get_algorithm(self.fed).has_burn_regime
+        self._has_burn_regime = (self._alg.has_burn_regime
                                  and self.fed.burn_in_rounds > 0)
         if self._has_burn_regime:
             self._burn_round = build(use_sampling=False)
         else:
             self._burn_round = self._round
+        # per-client persistent state (SCAFFOLD/FedEP): host-side store,
+        # gathered/scattered around each jitted round
+        self._stateful = self._alg.stateful
+        self._burn_stateful = (self._alg.burn_algorithm().stateful
+                               if self._has_burn_regime else self._stateful)
+        self.client_store = (ClientStateStore(self.num_clients)
+                             if self._stateful or self._burn_stateful
+                             else None)
         self._engine: Optional[AsyncRoundEngine] = None
 
     def init(self, params) -> ServerState:
-        return init_server_state(params, self.server_opt)
+        """Fresh server state (and, for stateful algorithms, a freshly
+        zeroed client-state store — each ``run`` starts from scratch)."""
+        if self.client_store is not None:
+            self.client_store.ensure(
+                self._alg.init_client_state(params)).reset()
+        return init_server_state(params, self.server_opt,
+                                 algorithm=self._alg)
 
     def stack_cohort(self, client_ids, round_idx: int):
         """Materialize the cohort's batches with a leading client axis.
@@ -115,10 +133,21 @@ class FedSim:
 
     def round(self, state: ServerState, round_idx: int,
               cohort: Optional[Cohort] = None):
+        """One synchronous round; stateful algorithms additionally gather
+        the cohort's client-state slice before the jitted round and scatter
+        the returned state updates back into the store."""
         cohort = cohort if cohort is not None else self.cohort(round_idx)
-        round_fn = (self._burn_round if round_idx < self.fed.burn_in_rounds
-                    else self._round)
-        state, metrics = round_fn(state, cohort.batches, cohort.weights)
+        is_burn = round_idx < self.fed.burn_in_rounds
+        round_fn = self._burn_round if is_burn else self._round
+        stateful = (self._burn_stateful
+                    if is_burn and self._has_burn_regime else self._stateful)
+        if stateful:
+            cstates, stamps = self.client_store.gather(cohort.client_ids)
+            state, metrics, new_states = round_fn(
+                state, cohort.batches, cohort.weights, cstates)
+            self.client_store.scatter(cohort.client_ids, new_states, stamps)
+        else:
+            state, metrics = round_fn(state, cohort.batches, cohort.weights)
         loss_first = float(metrics["loss_first"])
         loss_last = float(metrics["loss_last"])
         return state, {"client_loss": loss_last, "loss_first": loss_first,
@@ -126,6 +155,8 @@ class FedSim:
 
     def run(self, params, num_rounds: int,
             eval_fn: Optional[Callable] = None, eval_every: int = 1):
+        """Drive ``num_rounds`` rounds from fresh state; returns
+        ``(final_state, history)`` (sync or async per ``fed.async_rounds``)."""
         state = self.init(params)
         if self.fed.async_rounds:
             return self._run_async(state, num_rounds, eval_fn, eval_every)
@@ -134,6 +165,7 @@ class FedSim:
                                      depth=self.fed.prefetch_rounds)
                     if self.fed.prefetch_rounds > 0 else None)
         history: List[dict] = []
+        completed = False
         try:
             for r in range(num_rounds):
                 cohort = prefetch.get(r) if prefetch is not None else None
@@ -143,9 +175,12 @@ class FedSim:
                     metrics = {**metrics, **eval_fn(state.params)}
                 metrics["round"] = r
                 history.append(metrics)
+            completed = True
         finally:
             if prefetch is not None:
-                prefetch.close()
+                # loud on a clean exit, a warning when the round loop is
+                # already propagating its own exception
+                close_prefetcher(prefetch, unwinding=not completed)
         return state, history
 
     def _run_async(self, state: ServerState, num_rounds: int,
@@ -182,4 +217,7 @@ class FedSim:
             max_staleness=self.fed.max_staleness,
             staleness_discount=self.fed.staleness_discount,
             prefetch_rounds=self.fed.prefetch_rounds,
+            client_store=self.client_store,
+            stateful=self._stateful,
+            burn_stateful=self._burn_stateful,
         )

@@ -82,7 +82,7 @@ def make_cohort_program(
     prepare_params: Optional[Callable] = None,
     constrain_accum: Optional[Callable] = None,
 ) -> Callable:
-    """Build ``cohort_fn(state, client_batches[, client_weights])``.
+    """Build ``cohort_fn(state, client_batches[, client_weights[, states]])``.
 
     The client half of a round: cohort of local updates -> aggregated
     payload (the algorithm's linear accumulator; for mean-delta algorithms
@@ -94,9 +94,19 @@ def make_cohort_program(
     (unweighted) over the cohort; ``agg`` feeds ``make_server_program``'s
     server stage, which finalizes it into the pseudo-gradient.
 
+    For a *stateful* algorithm (``alg.stateful``) the signature grows one
+    argument and one result: ``cohort_fn(state, client_batches,
+    client_weights, client_states) -> (agg, losses, new_client_states)``.
+    ``client_states`` is the cohort's gathered ``ClientStateStore`` slice
+    (leading axis C) and ``new_client_states`` the stacked
+    ``ClientResult.state_update`` to scatter back — the gather/scatter
+    edges are host-side, but all state traffic inside the round stays in
+    the single jitted program across every placement.
+
     Takes the full ``ServerState`` (not just params) because the
     algorithm's broadcast hook may read server-optimizer statistics (MIME's
-    frozen momentum); only ``state.params`` (+ opt stats) are consumed, so
+    frozen momentum) or persistent algorithm state (SCAFFOLD's server
+    control variate); only ``state.params`` (+ opt stats) are consumed, so
     the async engine may pass a state that is ``s`` versions stale.
     ``server_opt`` is only consulted by that hook and defaults to the
     ``fed``-configured server optimizer.
@@ -113,15 +123,18 @@ def make_cohort_program(
     if wrap_client is not None:
         client_update = wrap_client(client_update)
     place = resolve_placement(fed, placement)
+    stateful = alg.stateful
 
     def _client_axes(n_extra: int):
-        return (None, 0) + (None,) * n_extra
+        return (None, 0) + ((0,) if stateful else ()) + (None,) * n_extra
 
-    def _run_parallel(params, client_batches, weights, extras):
+    def _run_parallel(params, client_batches, weights, extras, cstates):
         vm = jax.vmap(client_update, in_axes=_client_axes(len(extras)),
                       spmd_axis_name=spmd_axes)
-        res = vm(params, client_batches, *extras)
-        return alg.reduce_stacked(res.payload, weights), res.metrics
+        res = vm(params, client_batches,
+                 *((cstates,) if stateful else ()), *extras)
+        return (alg.reduce_stacked(res.payload, weights), res.metrics,
+                res.state_update)
 
     def _zero_accum(params):
         acc = alg.init_accum(params)
@@ -130,48 +143,68 @@ def make_cohort_program(
                                      acc)
         return acc
 
-    def _run_sequential(params, client_batches, weights, extras):
+    def _run_sequential(params, client_batches, weights, extras, cstates):
         def body(acc, xs):
-            batches, w = xs
-            res = client_update(params, batches, *extras)
-            return alg.accumulate(acc, res.payload, w), res.metrics
+            batches, w, cs = xs
+            res = client_update(params, batches,
+                                *((cs,) if stateful else ()), *extras)
+            return (alg.accumulate(acc, res.payload, w),
+                    (res.metrics, res.state_update))
 
-        return jax.lax.scan(body, _zero_accum(params),
-                            (client_batches, weights))
+        agg, (metrics, new_states) = jax.lax.scan(
+            body, _zero_accum(params),
+            (client_batches, weights, cstates if stateful else ()))
+        return agg, metrics, new_states
 
-    def _run_chunked(params, client_batches, weights, extras, chunk):
+    def _run_chunked(params, client_batches, weights, extras, cstates,
+                     chunk):
         C = weights.shape[0]
         n_chunks = -(-C // chunk)
         pad = n_chunks * chunk - C
+
+        def pad_lead(x):
+            return jnp.concatenate([x, jnp.repeat(x[:1], pad, axis=0)],
+                                   axis=0)
+
         if pad:
             # zero-weight duplicates of client 0 square off the last chunk
-            client_batches = tm.tmap(
-                lambda x: jnp.concatenate(
-                    [x, jnp.repeat(x[:1], pad, axis=0)], axis=0),
-                client_batches,
-            )
+            client_batches = tm.tmap(pad_lead, client_batches)
             weights = jnp.concatenate([weights, jnp.zeros((pad,), weights.dtype)])
-        chunked = tm.tmap(
-            lambda x: x.reshape((n_chunks, chunk) + x.shape[1:]), client_batches
-        )
+            if stateful:
+                cstates = tm.tmap(pad_lead, cstates)
+
+        def to_chunks(x):
+            return x.reshape((n_chunks, chunk) + x.shape[1:])
+
+        chunked = tm.tmap(to_chunks, client_batches)
         w_chunks = weights.reshape(n_chunks, chunk)
+        cs_chunks = tm.tmap(to_chunks, cstates) if stateful else ()
 
         def body(acc, xs):
-            batches, w = xs
+            batches, w, cs = xs
             vm = jax.vmap(client_update, in_axes=_client_axes(len(extras)),
                           spmd_axis_name=spmd_axes)
-            res = vm(params, batches, *extras)
+            res = vm(params, batches,
+                     *((cs,) if stateful else ()), *extras)
             acc = tm.tmap(lambda a, c: a + c.astype(a.dtype),
                           acc, alg.reduce_stacked(res.payload, w))
-            return acc, res.metrics
+            return acc, (res.metrics, res.state_update)
 
-        agg, metrics = jax.lax.scan(body, _zero_accum(params),
-                                    (chunked, w_chunks))
+        agg, (metrics, new_states) = jax.lax.scan(
+            body, _zero_accum(params), (chunked, w_chunks, cs_chunks))
         # (n_chunks, chunk) -> (C,) with the padding sliced off
-        metrics = tm.tmap(lambda x: x.reshape((n_chunks * chunk,))[:C], metrics)
-        return agg, metrics
+        unpad = lambda x: x.reshape((n_chunks * chunk,) + x.shape[2:])[:C]
+        metrics = tm.tmap(unpad, metrics)
+        if stateful:
+            new_states = tm.tmap(unpad, new_states)
+        return agg, metrics, new_states
 
-    def cohort_fn(state: ServerState, client_batches, client_weights=None):
+    def cohort_fn(state: ServerState, client_batches, client_weights=None,
+                  client_states=None):
+        if stateful and client_states is None:
+            raise ValueError(
+                f"algorithm {alg.name!r} is stateful: cohort_fn needs the "
+                f"gathered client_states slice (ClientStateStore.gather)")
         C = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
         params = (state.params if prepare_params is None
                   else prepare_params(state.params))
@@ -179,20 +212,23 @@ def make_cohort_program(
         weights = normalized_weights(client_weights, C)
 
         if place == "parallel":
-            agg, metrics = _run_parallel(params, client_batches,
-                                         weights, extras)
+            agg, metrics, new_states = _run_parallel(
+                params, client_batches, weights, extras, client_states)
         elif place == "sequential":
-            agg, metrics = _run_sequential(params, client_batches,
-                                           weights, extras)
+            agg, metrics, new_states = _run_sequential(
+                params, client_batches, weights, extras, client_states)
         else:
             chunk = _resolve_chunk(fed, chunk_size, C)
-            agg, metrics = _run_chunked(params, client_batches,
-                                        weights, extras, chunk)
+            agg, metrics, new_states = _run_chunked(
+                params, client_batches, weights, extras, client_states,
+                chunk)
 
-        return agg, {
+        losses = {
             "loss_first": jnp.mean(metrics["loss_first"]),
             "loss_last": jnp.mean(metrics["loss_last"]),
         }
+        return ((agg, losses, new_states) if stateful
+                else (agg, losses))
 
     return cohort_fn
 
@@ -258,7 +294,9 @@ def make_round_program(
     Composes ``make_cohort_program`` and ``make_server_program`` into the
     single-dispatch synchronous round: cohort of client updates -> weighted
     aggregation -> server step. Returns ``(new_state, {"loss_first",
-    "loss_last"})``.
+    "loss_last"})``. For a stateful algorithm the round takes the cohort's
+    gathered ``client_states`` and returns ``(new_state, losses,
+    new_client_states)`` (see ``make_cohort_program``).
 
     ``use_sampling=False`` builds the burn-in-round variant of the config's
     algorithm (e.g. the FedAvg regime of a FedPA config, Section 5.2) with
@@ -292,8 +330,17 @@ def make_round_program(
         prepare_params=prepare_params, finalize_params=finalize_params,
     )
 
-    def round_fn(state: ServerState, client_batches, client_weights=None):
-        agg, metrics = cohort_fn(state, client_batches, client_weights)
-        return server_fn(state, agg), metrics
+    from repro.algorithms import resolve_algorithm  # noqa: PLC0415 — cycle
+
+    if resolve_algorithm(fed, use_sampling).stateful:
+        def round_fn(state: ServerState, client_batches, client_weights=None,
+                     client_states=None):
+            agg, metrics, new_states = cohort_fn(
+                state, client_batches, client_weights, client_states)
+            return server_fn(state, agg), metrics, new_states
+    else:
+        def round_fn(state: ServerState, client_batches, client_weights=None):
+            agg, metrics = cohort_fn(state, client_batches, client_weights)
+            return server_fn(state, agg), metrics
 
     return round_fn

@@ -17,14 +17,27 @@ from repro.optim import Optimizer
 
 
 class ServerState(NamedTuple):
+    """Everything the server carries across rounds.
+
+    ``algo_state`` is the algorithm's persistent server-side statistic
+    (``FedAlgorithm.init_algo_state``): an empty pytree for most algorithms,
+    SCAFFOLD's server control variate. It defaults to ``()`` so positional
+    3-field construction (params, opt_state, round) keeps working.
+    """
+
     params: object
     opt_state: object
     round: jnp.ndarray   # i32 scalar
+    algo_state: object = ()
 
 
-def init_server_state(params, server_opt: Optimizer) -> ServerState:
+def init_server_state(params, server_opt: Optimizer,
+                      algorithm=None) -> ServerState:
+    """Fresh server state; ``algorithm`` (a ``FedAlgorithm``) seeds its
+    persistent ``algo_state`` — omitted, the slot is an empty pytree."""
+    algo_state = () if algorithm is None else algorithm.init_algo_state(params)
     return ServerState(params, server_opt.init(params),
-                       jnp.zeros((), jnp.int32))
+                       jnp.zeros((), jnp.int32), algo_state)
 
 
 def check_weight_total(total: float, shape=None, context: str = "") -> None:
@@ -55,17 +68,19 @@ def normalized_weights(client_weights, num_clients: int) -> jnp.ndarray:
                      jnp.zeros_like(w))
 
 
-def weighted_sum(stacked_deltas, weights):
+def weighted_sum(stacked_deltas, weights, cast: bool = True):
     """sum_i w_i * delta_i over the leading client axis.
 
     The reduction runs in fp32 regardless of the delta dtype and the result
     is cast once at the end — casting the normalized weights down to e.g.
     bf16 first would round realistic example-count weights to ~2 decimal
-    digits and bias the aggregate.
+    digits and bias the aggregate. ``cast=False`` keeps the fp32 sum (the
+    algorithm accumulator space, where ``FedAlgorithm.finalize`` owns the
+    single terminal cast).
     """
     return tm.tmap(
-        lambda d: jnp.tensordot(
-            weights, d.astype(jnp.float32), axes=1).astype(d.dtype),
+        lambda d: (jnp.tensordot(weights, d.astype(jnp.float32), axes=1)
+                   .astype(d.dtype if cast else jnp.float32)),
         stacked_deltas,
     )
 
@@ -100,8 +115,11 @@ def aggregate_deltas_list(deltas: Sequence, weights=None):
 def server_update(state: ServerState, mean_delta,
                   server_opt: Optimizer) -> ServerState:
     """theta <- SERVEROPT(theta, Delta). Deltas point along +grad, so they
-    plug directly into the (descent) optimizer update."""
+    plug directly into the (descent) optimizer update. ``algo_state`` is
+    carried through untouched (algorithms that update it do so in their
+    ``server_update`` hook, after this step)."""
     updates, opt_state = server_opt.update(mean_delta, state.opt_state,
                                            state.params)
     params = tm.tmap(lambda p, u: p + u.astype(p.dtype), state.params, updates)
-    return ServerState(params, opt_state, state.round + 1)
+    return state._replace(params=params, opt_state=opt_state,
+                          round=state.round + 1)

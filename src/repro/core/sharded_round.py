@@ -56,7 +56,7 @@ def _program_pieces(
 ):
     """Shared wiring: (grad_fn, cohort_kwargs, server_kwargs) for a given
     placement — one source of truth for the fused and split builders."""
-    from repro.algorithms import ClientResult, resolve_algorithm  # noqa: PLC0415
+    from repro.algorithms import resolve_algorithm  # noqa: PLC0415
 
     grad_fn = lm_grad_fn(cfg, compute_dtype=compute_dtype, q_chunk=q_chunk,
                          remat=remat)
@@ -80,7 +80,9 @@ def _program_pieces(
             payload = alg.map_components(
                 lambda t: fsdp_constrain(t, like_params=master_params),
                 res.payload)
-            return ClientResult(payload, res.metrics)
+            # state_update (stateful algorithms) passes through unchanged:
+            # its sharding is pinned by the gathered store slice it came from
+            return res._replace(payload=payload)
 
         return fsdp_client_update
 

@@ -13,6 +13,8 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
+import warnings
 from typing import Callable, NamedTuple, Optional
 
 import jax
@@ -66,9 +68,10 @@ class CohortPrefetcher:
     _DONE = object()
 
     def __init__(self, build_fn: BuildFn, start_round: int, stop_round: int,
-                 depth: int = 2):
+                 depth: int = 2, close_timeout: float = 5.0):
         if depth < 1:
             raise ValueError(f"prefetch depth must be >= 1, got {depth}")
+        self._close_timeout = close_timeout
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._error: Optional[BaseException] = None
         self._stop = threading.Event()
@@ -109,19 +112,60 @@ class CohortPrefetcher:
                 f"got {item.round_idx}")
         return item
 
-    def close(self):
-        """Stop the worker and drop queued cohorts (idempotent)."""
-        self._stop.set()
+    def _drain(self):
         while True:
             try:
                 self._q.get_nowait()
             except queue.Empty:
-                break
-        self._thread.join(timeout=5.0)
+                return
+
+    def close(self):
+        """Stop the worker and drop queued cohorts (idempotent).
+
+        Drain and join are LOOPED until the thread exits: a single
+        drain-then-join raced a worker mid-``put`` (the drain frees a slot,
+        the put succeeds, the item sits re-enqueued after the drain), and
+        ignoring the join timeout left a worker hung inside ``build_fn`` as
+        a silent zombie. A worker that does not exit within
+        ``close_timeout`` seconds now raises instead.
+        """
+        self._stop.set()
+        deadline = time.monotonic() + self._close_timeout
+        while self._thread.is_alive():
+            self._drain()
+            self._thread.join(timeout=0.05)
+            if self._thread.is_alive() and time.monotonic() >= deadline:
+                raise RuntimeError(
+                    f"cohort-prefetch thread did not exit within "
+                    f"{self._close_timeout}s of close() — build_fn is "
+                    f"likely hung")
+        self._drain()  # anything put between the last drain and exit
 
     def __enter__(self):
         return self
 
     def __exit__(self, *exc):
-        self.close()
+        # a hung-worker error must not mask the with-body's own exception
+        close_prefetcher(self, unwinding=exc[0] is not None)
         return False
+
+
+def close_prefetcher(prefetcher: "CohortPrefetcher", unwinding: bool) -> None:
+    """Close a prefetcher from a consumer's ``finally`` block.
+
+    ``unwinding=True`` means the consumer's round loop is already
+    propagating its own exception: the hung-worker ``RuntimeError`` that
+    :meth:`CohortPrefetcher.close` may raise is then demoted to a warning
+    so it cannot mask the real error. On a clean exit it stays loud.
+    (The caller must pass an explicit flag — inside a ``finally`` there is
+    no reliable way to distinguish the two cases after ``close()`` has
+    itself raised.)
+    """
+    try:
+        prefetcher.close()
+    except RuntimeError:
+        if not unwinding:
+            raise
+        warnings.warn(
+            "cohort prefetcher did not shut down cleanly while handling a "
+            "round-loop error", RuntimeWarning)

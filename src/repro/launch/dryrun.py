@@ -118,11 +118,14 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         )
         rules = ({"batch": (), "clients": caxes}
                  if placement == "parallel" else None)
+        # stateful rounds return (state, metrics, new_client_states)
+        out_sh = ((spec["shardings"][0], None, spec["shardings"][3])
+                  if len(spec["args"]) > 2 else (spec["shardings"][0], None))
         with axis_rules(mesh, rules):
             lowered = jax.jit(
                 round_fn,
                 in_shardings=spec["shardings"],
-                out_shardings=(spec["shardings"][0], None),
+                out_shardings=out_sh,
             ).lower(*spec["args"])
         local_steps = fed.local_steps
     elif shape.kind == "prefill":

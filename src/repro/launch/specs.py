@@ -89,12 +89,21 @@ def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig, fed: FedConfig,
 
 def server_state_specs(cfg: ModelConfig, fed: FedConfig, mesh: Mesh,
                        placement: str, param_dtype=jnp.float32):
-    """Abstract ServerState + shardings (tp for parallel, FSDP for seq)."""
+    """Abstract ServerState + shardings (tp for parallel, FSDP for seq).
+
+    Includes the algorithm's persistent ``algo_state`` slot (SCAFFOLD's
+    server control variate); its parameter-shaped leaves reuse the param
+    sharding, everything else stays replicated.
+    """
+    from repro.algorithms import get_algorithm  # noqa: PLC0415 — cycle
+
+    alg = get_algorithm(fed)
     params = abstract_params(cfg, param_dtype)
     server_opt = get_optimizer(fed.server_opt, fed.server_lr,
                                fed.server_momentum)
     state = jax.eval_shape(
-        lambda p: ServerState(p, server_opt.init(p), jnp.zeros((), jnp.int32)),
+        lambda p: ServerState(p, server_opt.init(p), jnp.zeros((), jnp.int32),
+                              alg.init_algo_state(p)),
         params,
     )
     shard_fn = param_shardings if placement == "parallel" else fsdp_shardings
@@ -108,8 +117,38 @@ def server_state_specs(cfg: ModelConfig, fed: FedConfig, mesh: Mesh,
         return flat_params.get(leaf.shape, NamedSharding(mesh, P()))
 
     opt_sh = jax.tree_util.tree_map(match, state.opt_state)
-    state_sh = ServerState(p_sh, opt_sh, NamedSharding(mesh, P()))
+    algo_sh = jax.tree_util.tree_map(match, state.algo_state)
+    state_sh = ServerState(p_sh, opt_sh, NamedSharding(mesh, P()), algo_sh)
     return state, state_sh
+
+
+def client_state_specs(cfg: ModelConfig, fed: FedConfig, mesh: Mesh,
+                      placement: str, param_dtype=jnp.float32):
+    """Abstract gathered cohort client-state slice + shardings.
+
+    ``(None, None)`` for stateless algorithms. The leading cohort axis
+    shards over the client axes under the parallel placement (one client
+    per data slice, like the batches) and stays unsharded for the
+    sequential scan.
+    """
+    from repro.algorithms import get_algorithm  # noqa: PLC0415 — cycle
+
+    alg = get_algorithm(fed)
+    if not alg.stateful:
+        return None, None
+    params = abstract_params(cfg, param_dtype)
+    one = jax.eval_shape(alg.init_client_state, params)
+    if placement == "parallel":
+        C = _client_extent(mesh)
+        lead = P(client_axes(mesh))
+    else:
+        C = fed.clients_per_round
+        lead = P()
+    specs = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct((C,) + tuple(x.shape), x.dtype), one)
+    shardings = jax.tree_util.tree_map(
+        lambda x: NamedSharding(mesh, P(*lead, *(None,) * len(x.shape))), one)
+    return specs, shardings
 
 
 # ---------------------------------------------------------------------------
@@ -233,6 +272,12 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig, fed: FedConfig,
     if shape.kind == "train":
         state, state_sh = server_state_specs(cfg, fed, mesh, placement)
         batches, batch_sh = train_batch_specs(cfg, shape, fed, mesh, placement)
+        cstates, cstate_sh = client_state_specs(cfg, fed, mesh, placement)
+        if cstates is not None:
+            # stateful round: fn(state, batches, weights=None, client_states)
+            return {"kind": "train", "placement": placement,
+                    "args": (state, batches, None, cstates),
+                    "shardings": (state_sh, batch_sh, None, cstate_sh)}
         return {"kind": "train", "placement": placement,
                 "args": (state, batches), "shardings": (state_sh, batch_sh)}
     params = abstract_params(cfg, jnp.bfloat16)

@@ -23,6 +23,7 @@ from repro.algorithms import algorithm_names, get_algorithm, phase_name
 from repro.checkpoint import restore_checkpoint, save_checkpoint
 from repro.configs.base import FedConfig
 from repro.core.async_engine import AsyncRoundEngine
+from repro.core.client_state import ClientStateStore
 from repro.core.server import init_server_state
 from repro.core.sharded_round import make_fed_round, make_fed_round_split
 from repro.data import SyntheticLMData
@@ -41,7 +42,7 @@ def build_fed(args) -> FedConfig:
         steps_per_sample=args.steps_per_sample,
         shrinkage_rho=args.rho,
         server_opt=args.server_opt, server_lr=args.server_lr,
-        client_opt="sgdm", client_lr=args.client_lr,
+        client_opt=args.client_opt, client_lr=args.client_lr,
         burn_in_rounds=args.burn_in_rounds,
         async_rounds=args.async_rounds,
         max_staleness=args.max_staleness,
@@ -71,6 +72,8 @@ def main():
     ap.add_argument("--rho", type=float, default=0.01)
     ap.add_argument("--server-opt", default="sgdm")
     ap.add_argument("--server-lr", type=float, default=0.5)
+    ap.add_argument("--client-opt", default="sgdm",
+                    help="client optimizer (scaffold requires 'sgd')")
     ap.add_argument("--client-lr", type=float, default=0.05)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq-len", type=int, default=128)
@@ -106,11 +109,34 @@ def main():
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
     server_opt = get_optimizer(fed.server_opt, fed.server_lr,
                                fed.server_momentum)
-    state = init_server_state(params, server_opt)
+    alg = get_algorithm(fed)
+    state = init_server_state(params, server_opt, algorithm=alg)
+    # stateful algorithms (scaffold/fedep): per-client persistent state,
+    # checkpointed alongside the server state. A burn regime may differ in
+    # statefulness from the main regime (fedep burns in as stateless
+    # fedavg) — same rule as FedSim/AsyncRoundEngine.
+    burn_stateful = (alg.burn_algorithm().stateful
+                     if alg.has_burn_regime and fed.burn_in_rounds
+                     else alg.stateful)
+    store = (ClientStateStore(args.num_clients)
+             .ensure(alg.init_client_state(params))
+             if alg.stateful or burn_stateful else None)
+
+    def ckpt_tree(round_state):
+        if store is None:
+            return round_state
+        return {"server": round_state, "clients": store.state_dict()}
+
     start_round = 0
     if args.ckpt_dir and os.path.isdir(args.ckpt_dir):
         try:
-            state, start_round, _ = restore_checkpoint(args.ckpt_dir, state)
+            restored, start_round, _ = restore_checkpoint(args.ckpt_dir,
+                                                          ckpt_tree(state))
+            if store is None:
+                state = restored
+            else:
+                state = restored["server"]
+                store.load_state_dict(restored["clients"])
             print(f"restored checkpoint at round {start_round}")
         except FileNotFoundError:
             pass
@@ -121,8 +147,7 @@ def main():
     round_burn = jax.jit(make_fed_round(cfg, fed, placement="parallel",
                                         q_chunk=q_chunk, use_sampling=False))
 
-    def round_batches(r):
-        ids = sampler.sample(r)
+    def round_batches(r, ids):
         toks = data.round_batches(ids, fed.local_steps, args.batch, s_text,
                                   round_idx=r)
         batches = {"tokens": toks}
@@ -162,7 +187,7 @@ def main():
     def maybe_checkpoint(round_state, r):
         if args.ckpt_dir and ((r + 1) % args.ckpt_every == 0
                               or r == args.rounds - 1):
-            save_checkpoint(args.ckpt_dir, round_state, r + 1,
+            save_checkpoint(args.ckpt_dir, ckpt_tree(round_state), r + 1,
                             {"arch": cfg.name, "algorithm": fed.algorithm})
 
     if fed.async_rounds:
@@ -171,7 +196,7 @@ def main():
         cohort_fn, server_fn = make_fed_round_split(
             cfg, fed, placement="parallel", q_chunk=q_chunk)
         burn_cohort_fn = burn_server_fn = None
-        if get_algorithm(fed).has_burn_regime and fed.burn_in_rounds:
+        if alg.has_burn_regime and fed.burn_in_rounds:
             burn_cohort_fn, burn_server_fn = make_fed_round_split(
                 cfg, fed, placement="parallel", q_chunk=q_chunk,
                 use_sampling=False)
@@ -184,11 +209,15 @@ def main():
             max_staleness=fed.max_staleness,
             staleness_discount=fed.staleness_discount,
             prefetch_rounds=fed.prefetch_rounds,
+            client_store=store,
+            stateful=alg.stateful,
+            burn_stateful=burn_stateful,
         )
 
         def build_cohort(i):
             r = start_round + i
-            return Cohort(i, None, round_batches(r), None)
+            ids = sampler.sample(r)
+            return Cohort(i, ids, round_batches(r, ids), None)
 
         last_t = time.time()
 
@@ -216,8 +245,20 @@ def main():
     else:
         for r in range(start_round, args.rounds):
             t0 = time.time()
-            fn = round_burn if r < fed.burn_in_rounds else round_sample
-            state, metrics = fn(state, round_batches(r))
+            is_burn = r < fed.burn_in_rounds
+            fn = round_burn if is_burn else round_sample
+            ids = sampler.sample(r)
+            batches = round_batches(r, ids)
+            stateful_round = (store is not None
+                              and (burn_stateful if is_burn
+                                   else alg.stateful))
+            if stateful_round:
+                cstates, stamps = store.gather(ids)
+                state, metrics, new_states = fn(state, batches, None,
+                                                cstates)
+                store.scatter(ids, new_states, stamps)
+            else:
+                state, metrics = fn(state, batches)
             ev = float(eval_fn(state.params))
             rec = {"round": r, "eval_loss": ev,
                    "client_loss_last": float(metrics["loss_last"]),

@@ -25,8 +25,8 @@ from repro.optim import adagrad, adam, get_optimizer, sgd, sgdm, yogi
 # ---------------------------------------------------------------------------
 
 def test_builtin_algorithms_registered():
-    assert {"fedavg", "fedpa", "mime", "fedprox",
-            "fedpa_precision"} <= set(algorithm_names())
+    assert {"fedavg", "fedpa", "mime", "fedprox", "fedpa_precision",
+            "scaffold", "fedep"} <= set(algorithm_names())
 
 
 def test_unknown_algorithm_rejected_with_registry_names():
@@ -69,6 +69,39 @@ def test_fedprox_mu_validated():
     with pytest.raises(ValueError, match="fedprox_mu"):
         FedConfig(algorithm="fedprox", fedprox_mu=-0.1)
     FedConfig(algorithm="fedprox", fedprox_mu=0.0)  # 0 == fedavg, fine
+
+
+def test_scaffold_knobs_validated():
+    """Option II's closed form assumes vanilla SGD local steps, and the
+    server control-variate scale is a |S|/N fraction."""
+    with pytest.raises(ValueError, match="client_opt"):
+        FedConfig(algorithm="scaffold")              # default sgdm clients
+    with pytest.raises(ValueError, match="scaffold_c_scale"):
+        FedConfig(algorithm="scaffold", client_opt="sgd",
+                  scaffold_c_scale=0.0)
+    FedConfig(algorithm="scaffold", client_opt="sgd", scaffold_c_scale=0.25)
+
+
+def test_fedep_damping_validated():
+    kw = dict(burn_in_steps=4, steps_per_sample=2)
+    with pytest.raises(ValueError, match="fedep_damping"):
+        FedConfig(algorithm="fedep", fedep_damping=0.0, **kw)
+    with pytest.raises(ValueError, match="fedep_damping"):
+        FedConfig(algorithm="fedep", fedep_damping=1.5, **kw)
+    # and it inherits FedPA's whole-window checks
+    with pytest.raises(ValueError, match="steps_per_sample"):
+        FedConfig(algorithm="fedep", local_steps=9, **kw)
+
+
+def test_fedpa_single_window_boundary_constructs():
+    """local_steps == burn_in_steps + steps_per_sample is exactly one IASG
+    window (l = 1) and must construct; the < case names the >= bound."""
+    f = FedConfig(algorithm="fedpa", local_steps=6, burn_in_steps=4,
+                  steps_per_sample=2)
+    assert f.num_samples == 1
+    with pytest.raises(ValueError, match=">="):
+        FedConfig(algorithm="fedpa", local_steps=5, burn_in_steps=4,
+                  steps_per_sample=2)
 
 
 def test_fedpa_precision_inherits_fedpa_window_checks():
@@ -159,6 +192,26 @@ def test_new_algorithms_converge_at_least_as_fast_as_fedavg(problem):
                              burn_in_rounds=5, **base), problem)
     assert d_prox < d_avg, (d_prox, d_avg)
     assert d_prec < d_avg, (d_prec, d_avg)
+
+
+def test_stateful_algorithms_beat_fedavg(problem):
+    """The per-client-state subsystem pays for itself: SCAFFOLD's control
+    variates cancel the client-drift bias outright, and FedEP's damped
+    persistent sites land closer to the global posterior mode than fedavg
+    on the same heterogeneous least-squares round budget."""
+    base = dict(clients_per_round=2, local_steps=60, server_opt="sgd",
+                server_lr=0.1, client_opt="sgd", client_lr=0.005)
+    d_avg = _dist(FedConfig(algorithm="fedavg", **base), problem)
+    d_scaf = _dist(FedConfig(algorithm="scaffold", **base), problem)
+    d_ep = _dist(FedConfig(algorithm="fedep", burn_in_steps=20,
+                           steps_per_sample=10, shrinkage_rho=1.0,
+                           burn_in_rounds=5, fedep_damping=0.5, **base),
+                 problem)
+    assert d_scaf < d_avg, (d_scaf, d_avg)
+    assert d_ep < d_avg, (d_ep, d_avg)
+    # drift correction is the stronger mechanism on this bias-dominated
+    # problem: scaffold should in fact roughly close the gap
+    assert d_scaf < 0.5 * d_avg, (d_scaf, d_avg)
 
 
 # ---------------------------------------------------------------------------

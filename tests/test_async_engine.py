@@ -1,7 +1,11 @@
 """Async double-buffered engine: staleness=0 reproduces the sync round
-engine numerically; staleness discounting, pipeline bookkeeping, and the
-host-side cohort prefetcher behave as specified."""
+engine numerically; staleness discounting, pipeline bookkeeping, history
+serializability, and the host-side cohort prefetcher behave as
+specified."""
 import dataclasses
+import json
+import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -101,6 +105,33 @@ def test_staleness_discount_downweights_stale_deltas(problem):
                                np.asarray(one.params), rtol=1e-6)
 
 
+def test_history_eval_metrics_are_synced_and_json_serializable(problem):
+    """eval_fn results used to be spliced into history as raw device
+    arrays — breaking ``json.dumps(history)`` and hiding a blocking sync
+    on first consumer access. They are now converted in the same single
+    end-of-loop sync as the losses."""
+    grad_fn, batch_fn = problem
+    fed = dataclasses.replace(FEDS["fedavg"], async_rounds=True,
+                              max_staleness=1)
+    sim = FedSim(fed=fed, grad_fn=grad_fn, batch_fn=batch_fn, num_clients=C)
+
+    def eval_fn(params):
+        # jax scalar + jax vector, as a real eval_fn would return
+        return {"eval_loss": jnp.sum(params * params),
+                "param_head": params[:2]}
+
+    _, hist = sim.run(jnp.zeros(D), 4, eval_fn=eval_fn, eval_every=2)
+    json.dumps(hist)   # the regression: TypeError on jax.Array before
+    for h in hist:
+        for v in h.values():
+            assert isinstance(v, (int, float, list)), (type(v), h)
+    assert "eval_loss" in hist[0] and "eval_loss" not in hist[1]
+    assert isinstance(hist[0]["eval_loss"], float)
+    # non-scalar eval metrics come back as plain lists
+    assert isinstance(hist[0]["param_head"], list)
+    assert len(hist[0]["param_head"]) == 2
+
+
 def test_engine_validates_knobs(problem):
     grad_fn, _ = problem
     with pytest.raises(ValueError):
@@ -146,9 +177,39 @@ def test_prefetcher_propagates_builder_errors():
 
 
 def test_prefetcher_close_is_prompt():
-    """close() mid-stream neither deadlocks nor requires draining."""
+    """close() mid-stream neither deadlocks nor requires draining, actually
+    stops the worker thread, and leaves no re-enqueued cohort behind (the
+    old single drain-then-join raced a worker mid-put)."""
     pf = CohortPrefetcher(lambda r: Cohort(r, None, {}, None), 0, 1000,
                           depth=2)
     pf.get(0)
     pf.close()
+    assert not pf._thread.is_alive()
+    assert pf._q.empty()
     pf.close()  # idempotent
+
+
+def test_prefetcher_close_raises_on_hung_builder():
+    """A build_fn that never returns used to leave a silent zombie thread
+    (the join timeout result was ignored); close() now raises, naming the
+    likely culprit."""
+    release = threading.Event()
+    entered = threading.Event()
+
+    def build(r):
+        if r >= 1:
+            entered.set()
+            release.wait()          # hangs until the test releases it
+        return Cohort(r, None, {}, None)
+
+    pf = CohortPrefetcher(build, 0, 10, depth=1, close_timeout=0.5)
+    assert pf.get(0).round_idx == 0
+    assert entered.wait(timeout=5.0)   # worker is now stuck inside build(1)
+    t0 = time.monotonic()
+    with pytest.raises(RuntimeError, match="did not exit"):
+        pf.close()
+    assert time.monotonic() - t0 < 5.0
+    release.set()                      # let the daemon thread die
+    pf._thread.join(timeout=5.0)
+    assert not pf._thread.is_alive()
+    pf.close()                         # now a clean no-op

@@ -1,0 +1,218 @@
+"""Per-client persistent state: the ClientStateStore (lazy init, gather/
+scatter, overlap CAS semantics), the stateful round programs, the async
+engine's tagged write-back, and the ServerState + store checkpoint
+round-trip (bitwise-identical continuation)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.algorithms import get_algorithm
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.configs.base import FedConfig
+from repro.core import FedSim, make_round_program
+from repro.core.client_state import ClientStateStore
+from repro.core.server import init_server_state
+from repro.data import make_federated_lsq
+from repro.data.synthetic_lsq import lsq_batches
+from repro.optim import get_optimizer
+
+C, D = 4, 3
+
+SCAFFOLD = FedConfig(algorithm="scaffold", clients_per_round=C,
+                     local_steps=12, server_opt="sgd", server_lr=0.1,
+                     client_opt="sgd", client_lr=0.01)
+FEDEP = FedConfig(algorithm="fedep", clients_per_round=C, local_steps=12,
+                  burn_in_steps=4, steps_per_sample=2, shrinkage_rho=0.5,
+                  burn_in_rounds=2, fedep_damping=0.7, server_opt="sgd",
+                  server_lr=0.1, client_opt="sgd", client_lr=0.01)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    clients, data = make_federated_lsq(C, 50, D, heterogeneity=20.0, seed=0)
+
+    def grad_fn(params, batch):
+        def loss(p):
+            r = batch["x"] @ p - batch["y"]
+            return 0.5 * jnp.mean(r * r) * 50
+        return jax.value_and_grad(loss)(params)
+
+    def batch_fn(cid, r, steps):
+        X, y = data[cid]
+        return lsq_batches(X, y, 10, steps, seed=r * 131 + cid)
+
+    return grad_fn, batch_fn
+
+
+# ---------------------------------------------------------------------------
+# Store unit behavior
+# ---------------------------------------------------------------------------
+
+def test_store_lazy_init_gather_scatter():
+    store = ClientStateStore(6)
+    assert not store.initialized
+    with pytest.raises(RuntimeError, match="uninitialized"):
+        store.gather([0])
+    template = {"c": jnp.zeros(2), "n": jnp.zeros((), jnp.int32)}
+    store.ensure(template)
+    store.ensure(template)  # idempotent
+    assert store.initialized
+
+    states, stamps = store.gather([1, 4])
+    np.testing.assert_array_equal(states["c"], np.zeros((2, 2)))
+    np.testing.assert_array_equal(stamps, [0, 0])
+
+    upd = {"c": np.asarray([[1.0, 2.0], [3.0, 4.0]]),
+           "n": np.asarray([7, 8], np.int32)}
+    assert store.scatter([1, 4], upd, stamps) == 0
+    got, stamps2 = store.gather([4, 1])
+    np.testing.assert_array_equal(got["c"], [[3.0, 4.0], [1.0, 2.0]])
+    np.testing.assert_array_equal(got["n"], [8, 7])
+    np.testing.assert_array_equal(stamps2, [1, 1])
+    # untouched clients stay zero
+    np.testing.assert_array_equal(store.gather([0])[0]["c"], np.zeros((1, 2)))
+
+
+def test_store_overlap_write_is_dropped_not_clobbered():
+    """Two cohorts gather the same client before either writes: the write
+    applied second (based on the pre-first-write state) is dropped, so the
+    first applied update is never lost."""
+    store = ClientStateStore(3).ensure(jnp.zeros(1))
+    _, stamps_a = store.gather([0, 1])
+    _, stamps_b = store.gather([0, 2])          # overlaps client 0
+
+    assert store.scatter([0, 1], np.asarray([[1.0], [1.0]]), stamps_a) == 0
+    # cohort B gathered before A wrote: its client-0 write must be dropped
+    assert store.scatter([0, 2], np.asarray([[9.0], [2.0]]), stamps_b) == 1
+    states, _ = store.gather([0, 1, 2])
+    np.testing.assert_array_equal(states.ravel(), [1.0, 1.0, 2.0])
+
+    # a gather AFTER A's write sees the new stamp and may overwrite
+    _, stamps_c = store.gather([0])
+    assert store.scatter([0], np.asarray([[5.0]]), stamps_c) == 0
+    np.testing.assert_array_equal(store.gather([0])[0].ravel(), [5.0])
+
+
+def test_store_reset_and_unconditional_scatter():
+    store = ClientStateStore(2).ensure(jnp.zeros(1))
+    store.scatter([0], np.asarray([[3.0]]))      # stamps=None: always write
+    np.testing.assert_array_equal(store.gather([0])[0].ravel(), [3.0])
+    store.reset()
+    states, stamps = store.gather([0, 1])
+    np.testing.assert_array_equal(states, np.zeros((2, 1)))
+    np.testing.assert_array_equal(stamps, [0, 0])
+
+
+def test_persistent_state_is_fp32_even_for_bf16_configs():
+    """Control variates / EP sites are running statistics updated every
+    participation: re-rounding them to bf16 per round would drop
+    corrections below one ulp (the same per-fold re-rounding the fp32
+    accumulator contract forbids). Only shipped payloads get the wire
+    dtype."""
+    params = jnp.zeros(4, jnp.bfloat16)
+    for fed in (SCAFFOLD, FEDEP):
+        alg = get_algorithm(dataclasses.replace(fed,
+                                                delta_dtype="bfloat16"))
+        for leaf in jax.tree_util.tree_leaves(alg.init_client_state(params)):
+            assert leaf.dtype == jnp.float32, fed.algorithm
+        for leaf in jax.tree_util.tree_leaves(alg.init_algo_state(params)):
+            assert leaf.dtype == jnp.float32, fed.algorithm
+
+
+def test_store_load_rejects_wrong_population():
+    store = ClientStateStore(2).ensure(jnp.zeros(1))
+    other = ClientStateStore(3).ensure(jnp.zeros(1))
+    with pytest.raises(ValueError, match="population"):
+        store.load_state_dict(other.state_dict())
+
+
+# ---------------------------------------------------------------------------
+# Engine plumbing
+# ---------------------------------------------------------------------------
+
+def test_stateful_round_requires_client_states(problem):
+    grad_fn, _ = problem
+    round_fn = make_round_program(grad_fn, SCAFFOLD)
+    opt = get_optimizer("sgd", 0.1)
+    state = init_server_state(jnp.zeros(D), opt,
+                              algorithm=get_algorithm(SCAFFOLD))
+    batches = {"x": jnp.zeros((C, 12, 10, D)), "y": jnp.zeros((C, 12, 10))}
+    with pytest.raises(ValueError, match="stateful"):
+        round_fn(state, batches)
+
+
+@pytest.mark.parametrize("fed", [SCAFFOLD, FEDEP], ids=["scaffold", "fedep"])
+def test_state_persists_across_rounds_and_resets_on_init(fed, problem):
+    """Round t+1's clients see the state round t wrote (the store is not
+    zero after a round), and FedSim.init starts every run from zeros."""
+    grad_fn, batch_fn = problem
+    sim = FedSim(fed=fed, grad_fn=grad_fn, batch_fn=batch_fn, num_clients=C)
+    state = sim.init(jnp.zeros(D))
+    for r in range(3):
+        state, _ = sim.round(state, r)
+    buffers = jax.tree_util.tree_leaves(sim.client_store.state_dict())
+    assert any(np.abs(b).sum() > 0 for b in buffers)
+    sim.init(jnp.zeros(D))
+    assert all(np.abs(b).sum() == 0
+               for b in jax.tree_util.tree_leaves(
+                   sim.client_store.state_dict()))
+
+
+def test_async_overlapping_cohorts_do_not_lose_applied_updates(problem):
+    """Full participation + max_staleness=1: every odd round's cohort
+    gathered before the previous round's write landed, so its C stale
+    writes are dropped (surfaced as ``state_drops``) instead of clobbering
+    the applied state; even rounds gather fresh and write cleanly."""
+    grad_fn, batch_fn = problem
+    fed = dataclasses.replace(SCAFFOLD, async_rounds=True, max_staleness=1)
+    sim = FedSim(fed=fed, grad_fn=grad_fn, batch_fn=batch_fn, num_clients=C)
+    _, hist = sim.run(jnp.zeros(D), 6)
+    assert [h["staleness"] for h in hist] == [0, 1, 1, 1, 1, 1]
+    assert [h["state_drops"] for h in hist] == [0, C, 0, C, 0, C]
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint round-trip: save, reload, continue — bitwise identical
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fed", [SCAFFOLD, FEDEP], ids=["scaffold", "fedep"])
+def test_checkpoint_roundtrip_bitwise_continuation(fed, problem, tmp_path):
+    """ServerState (incl. scaffold's algo_state control variate) + the
+    ClientStateStore survive a save/reload and the next round is bitwise
+    identical to the uninterrupted run."""
+    grad_fn, batch_fn = problem
+    sim = FedSim(fed=fed, grad_fn=grad_fn, batch_fn=batch_fn, num_clients=C)
+    state = sim.init(jnp.zeros(D))
+    for r in range(3):
+        state, _ = sim.round(state, r)
+    save_checkpoint(str(tmp_path),
+                    {"server": state,
+                     "clients": sim.client_store.state_dict()}, 3,
+                    {"algorithm": fed.algorithm})
+
+    # uninterrupted reference: one more round
+    ref_state, _ = sim.round(state, 3)
+    ref_store = jax.tree_util.tree_map(
+        np.copy, sim.client_store.state_dict())
+
+    # cold start: fresh FedSim, restore, continue
+    sim2 = FedSim(fed=fed, grad_fn=grad_fn, batch_fn=batch_fn,
+                  num_clients=C)
+    st2 = sim2.init(jnp.zeros(D))
+    restored, step, meta = restore_checkpoint(
+        str(tmp_path),
+        {"server": st2, "clients": sim2.client_store.state_dict()})
+    assert step == 3 and meta["algorithm"] == fed.algorithm
+    sim2.client_store.load_state_dict(restored["clients"])
+    got_state, _ = sim2.round(restored["server"], 3)
+
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        (got_state.params, got_state.algo_state,
+         sim2.client_store.state_dict()),
+        (ref_state.params, ref_state.algo_state, ref_store))
+    assert int(got_state.round) == int(ref_state.round)

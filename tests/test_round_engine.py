@@ -50,8 +50,9 @@ FEDS = {
                          client_opt="sgd", client_lr=0.01),
 }
 
-# every registered algorithm, incl. the non-delta-payload one; FEDS stays
-# the delta-payload subset the pre-refactor legacy loop can reproduce
+# every registered algorithm, incl. the non-delta-payload one and the two
+# stateful ones; FEDS stays the delta-payload subset the pre-refactor
+# legacy loop can reproduce
 ALL_FEDS = {
     **FEDS,
     "fedpa_precision": FedConfig(algorithm="fedpa_precision",
@@ -60,7 +61,24 @@ ALL_FEDS = {
                                  shrinkage_rho=0.5, burn_in_rounds=2,
                                  server_opt="sgd", server_lr=0.1,
                                  client_opt="sgd", client_lr=0.01),
+    # stateful: per-client persistent state threaded through every placement
+    "scaffold": FedConfig(algorithm="scaffold", clients_per_round=C,
+                          local_steps=STEPS, server_opt="sgdm",
+                          server_lr=0.5, client_opt="sgd", client_lr=0.01),
+    "fedep": FedConfig(algorithm="fedep", clients_per_round=C,
+                       local_steps=STEPS, burn_in_steps=4,
+                       steps_per_sample=2, shrinkage_rho=0.5,
+                       burn_in_rounds=2, fedep_damping=0.7,
+                       server_opt="sgd", server_lr=0.1,
+                       client_opt="sgd", client_lr=0.01),
 }
+
+
+def _stacked_init_states(fed, params):
+    """The cohort's gathered client-state slice for a fresh store (zeros)."""
+    alg = get_algorithm(fed)
+    one = alg.init_client_state(params)
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *([one] * C))
 
 
 @pytest.fixture(scope="module")
@@ -101,10 +119,10 @@ def _legacy_round(fed, grad_fn, batch_fn, state, round_idx, weights=None):
                  else jax.tree_util.tree_map(jnp.zeros_like, state.params),)
     deltas, losses = [], []
     for cid in range(C):
-        delta, m = update(state.params,
-                          batch_fn(cid, round_idx, fed.local_steps), *extra)
-        deltas.append(delta)
-        losses.append(float(m["loss_last"]))
+        res = update(state.params,
+                     batch_fn(cid, round_idx, fed.local_steps), *extra)
+        deltas.append(res.payload)
+        losses.append(float(res.metrics["loss_last"]))
     mean_delta = aggregate_deltas_list(
         deltas, None if weights is None else list(weights))
     return server_update(state, mean_delta, server_opt), float(np.mean(losses))
@@ -198,7 +216,9 @@ def _eager_round(fed, grad_fn, batch_fn, state, round_idx, weights=None):
     """Eager per-client reference built from the FedAlgorithm hooks: one
     jitted client dispatch per client, stacked payloads, eager aggregation
     and server step — the strategy-API analogue of ``_legacy_round`` that
-    also covers non-delta payloads (fedpa_precision)."""
+    also covers non-delta payloads (fedpa_precision) and per-client state
+    (scaffold/fedep: each client gets its zero initial state and the
+    returned state updates are stacked for comparison)."""
     alg = get_algorithm(fed)
     client_opt = get_optimizer(fed.client_opt, fed.client_lr,
                                fed.client_momentum)
@@ -206,17 +226,22 @@ def _eager_round(fed, grad_fn, batch_fn, state, round_idx, weights=None):
                                fed.server_momentum)
     update = jax.jit(alg.make_client_update(grad_fn, client_opt))
     extras = alg.broadcast(state, server_opt)
-    payloads, losses = [], []
+    cstate0 = alg.init_client_state(state.params)
+    payloads, losses, new_states = [], [], []
     for cid in range(C):
         res = update(state.params, batch_fn(cid, round_idx, fed.local_steps),
-                     *extras)
+                     *((cstate0,) if alg.stateful else ()), *extras)
         payloads.append(res.payload)
         losses.append(float(res.metrics["loss_last"]))
+        new_states.append(res.state_update)
     stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *payloads)
     w = normalized_weights(
         None if weights is None else np.asarray(weights, np.float32), C)
     agg = alg.reduce_stacked(stacked, w)
-    return alg.server_update(state, agg, server_opt), float(np.mean(losses))
+    states = (jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *new_states)
+              if alg.stateful else None)
+    return (alg.server_update(state, agg, server_opt), float(np.mean(losses)),
+            states)
 
 
 @pytest.mark.parametrize("alg_name", list(ALL_FEDS))
@@ -226,18 +251,30 @@ def _eager_round(fed, grad_fn, batch_fn, state, round_idx, weights=None):
 def test_engine_matches_eager_hooks_all_registered(problem, alg_name,
                                                    placement, chunk):
     """Every registered algorithm x every placement == the eager per-client
-    reference assembled from the same FedAlgorithm hooks."""
+    reference assembled from the same FedAlgorithm hooks — incl. the
+    stacked per-client state updates of the stateful algorithms."""
     grad_fn, batch_fn = problem
     fed = ALL_FEDS[alg_name]
+    alg = get_algorithm(fed)
     server_opt = get_optimizer(fed.server_opt, fed.server_lr,
                                fed.server_momentum)
-    state0 = init_server_state(jnp.zeros(D), server_opt)
-    want, want_loss = _eager_round(fed, grad_fn, batch_fn, state0, 0)
+    state0 = init_server_state(jnp.zeros(D), server_opt, algorithm=alg)
+    want, want_loss, want_states = _eager_round(fed, grad_fn, batch_fn,
+                                                state0, 0)
 
     round_fn = jax.jit(make_round_program(grad_fn, fed, placement=placement,
                                           chunk_size=chunk,
                                           server_opt=server_opt))
-    got, metrics = round_fn(state0, _stack(batch_fn, 0, fed.local_steps))
+    batches = _stack(batch_fn, 0, fed.local_steps)
+    if alg.stateful:
+        got, metrics, got_states = round_fn(
+            state0, batches, None, _stacked_init_states(fed, state0.params))
+        jax.tree_util.tree_map(
+            lambda a, b: np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6),
+            got_states, want_states)
+    else:
+        got, metrics = round_fn(state0, batches)
     np.testing.assert_allclose(np.asarray(got.params),
                                np.asarray(want.params), rtol=1e-5, atol=1e-6)
     assert float(metrics["loss_last"]) == pytest.approx(want_loss, rel=1e-5)
@@ -357,3 +394,55 @@ def test_bf16_weighted_aggregation_parity_with_fp32_reference():
     d32 = {"w": jnp.asarray(np.asarray(deltas["w"], np.float32))}
     np.testing.assert_allclose(np.asarray(weighted_sum(d32, w)["w"]), 0.103,
                                rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Accumulator dtype contract: fp32 regardless of delta_dtype
+# ---------------------------------------------------------------------------
+
+def test_accumulator_is_fp32_for_every_registered_algorithm():
+    """``init_accum`` used to zero the accumulator in ``delta_dtype``, so
+    bf16 configs folded the sequential/chunked placements in bf16 —
+    re-rounding on every client fold. The accumulator space is fp32 for
+    every algorithm; ``finalize`` owns the single cast back."""
+    from repro.algorithms import algorithm_names
+    params = jnp.zeros(5, jnp.bfloat16)
+    for name in algorithm_names():
+        fed = ALL_FEDS.get(name)
+        if fed is None:   # out-of-package test algorithms etc.
+            continue
+        alg = get_algorithm(dataclasses.replace(fed,
+                                                delta_dtype="bfloat16"))
+        acc = alg.init_accum(params)
+        for leaf in jax.tree_util.tree_leaves(acc):
+            assert leaf.dtype == jnp.float32, (name, leaf.dtype)
+        # finalize casts the fp32 accumulator once, to the delta dtype
+        for leaf in jax.tree_util.tree_leaves(alg.finalize(acc)):
+            assert leaf.dtype == jnp.bfloat16, (name, leaf.dtype)
+
+
+@pytest.mark.parametrize("alg_name", ["fedavg", "fedpa_precision"])
+def test_bf16_sequential_and_chunked_match_stacked_fp32_path(problem,
+                                                             alg_name):
+    """delta_dtype=bf16: the sequential and chunked placements must match
+    the parallel (stacked, fp32-reduced) path to fp32-accumulation
+    tolerance — one terminal bf16 rounding, not one per folded client."""
+    grad_fn, batch_fn = problem
+    fed = dataclasses.replace(ALL_FEDS[alg_name], delta_dtype="bfloat16")
+    server_opt = get_optimizer(fed.server_opt, fed.server_lr,
+                               fed.server_momentum)
+    state0 = init_server_state(jnp.zeros(D), server_opt)
+    batches = _stack(batch_fn, 1, fed.local_steps)
+    weights = np.asarray([701.0, 299.0, 1303.0, 97.0], np.float32)
+    outs = {}
+    for place, chunk in (("parallel", None), ("sequential", None),
+                         ("chunked", 3)):
+        rf = jax.jit(make_round_program(grad_fn, fed, placement=place,
+                                        chunk_size=chunk,
+                                        server_opt=server_opt))
+        outs[place] = np.asarray(rf(state0, batches, weights)[0].params,
+                                 np.float32)
+    for place in ("sequential", "chunked"):
+        # within ~1 bf16 ulp of the stacked path (fp32 reduction-order only)
+        np.testing.assert_allclose(outs[place], outs["parallel"],
+                                   rtol=2**-8, atol=1e-6)

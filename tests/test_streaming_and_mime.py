@@ -38,8 +38,8 @@ def test_streaming_dp_equals_batch_dp():
     batch_up = jax.jit(make_client_update(grad_fn, fed, opt))
     stream_up = jax.jit(make_client_update(
         grad_fn, dataclasses.replace(fed, streaming_dp=True), opt))
-    d1, m1 = batch_up(theta0, batches)
-    d2, m2 = stream_up(theta0, batches)
+    d1, m1, _ = batch_up(theta0, batches)
+    d2, m2, _ = stream_up(theta0, batches)
     np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=2e-4,
                                atol=2e-4)
     assert float(m1["loss_last"]) == float(m2["loss_last"])
