@@ -21,6 +21,14 @@ own operating point) the async engine removes the serialized fetch/decode
 regime both paths converge toward pure device time. Writes
 ``BENCH_async_engine.json`` for the CI artifact lane.
 
+A third, *stateful* lane runs SCAFFOLD (per-client control variates)
+through the same async pipeline with both client-state placements: the
+host ``ClientStateStore`` pays one blocking device sync per round at
+scatter time (the write-back pulls the stacked state updates to numpy),
+while the ``DeviceClientStateStore`` keeps the gather/CAS-scatter inside
+the jitted programs — its per-round time should sit within noise of the
+*stateless* async path, demonstrating the sync is gone.
+
   PYTHONPATH=src python -m benchmarks.bench_async_engine [--full]
 """
 from __future__ import annotations
@@ -46,7 +54,8 @@ CLIENTS = 16
 FETCH_MS = 1.0
 
 
-def _bench_one(cfg, fed, rounds, batch_size, n_local, seed=0):
+def _make_problem(cfg, n_local, batch_size, seed=0):
+    """(grad_fn, batch_fn, params) for the simulated-store CNN workload."""
     side = cfg.image_size
     fc = make_dirichlet_classification(
         CLIENTS, cfg.num_classes, side * side, n_per_client=n_local,
@@ -74,24 +83,71 @@ def _bench_one(cfg, fed, rounds, batch_size, n_local, seed=0):
         idx = idx.reshape(steps, batch_size)
         return {"x": x[idx], "y": fc.client_y[cid][idx]}
 
-    params = init_cnn_params(jax.random.PRNGKey(seed), cfg)
+    return grad_fn, batch_fn, init_cnn_params(jax.random.PRNGKey(seed), cfg)
 
-    def timed(sim):
-        state, _ = sim.run(params, 3)      # warm-up: compile + thread spin-up
-        jax.block_until_ready(state.params)
-        t0 = time.perf_counter()
-        state, _ = sim.run(params, rounds)
-        jax.block_until_ready(state.params)
-        return (time.perf_counter() - t0) / rounds * 1e3
 
+def _timed(sim, params, rounds):
+    """Mean per-round wall-clock (ms) after a compile/spin-up warm-up."""
+    state, _ = sim.run(params, 3)      # warm-up: compile + thread spin-up
+    jax.block_until_ready(state.params)
+    t0 = time.perf_counter()
+    state, _ = sim.run(params, rounds)
+    jax.block_until_ready(state.params)
+    return (time.perf_counter() - t0) / rounds * 1e3
+
+
+def _bench_one(cfg, fed, rounds, batch_size, n_local, seed=0):
+    grad_fn, batch_fn, params = _make_problem(cfg, n_local, batch_size, seed)
     sync_sim = FedSim(fed=fed, grad_fn=grad_fn, batch_fn=batch_fn,
                       num_clients=CLIENTS, seed=seed)
     afed = dataclasses.replace(fed, async_rounds=True, max_staleness=1,
                                staleness_discount=0.9, prefetch_rounds=2)
     async_sim = FedSim(fed=afed, grad_fn=grad_fn, batch_fn=batch_fn,
                        num_clients=CLIENTS, seed=seed)
-    out = {"sync_ms": timed(sync_sim), "async_ms": timed(async_sim)}
+    out = {"sync_ms": _timed(sync_sim, params, rounds),
+           "async_ms": _timed(async_sim, params, rounds)}
     out["speedup"] = out["sync_ms"] / out["async_ms"]
+    return out
+
+
+def _bench_stateful(cfg, rounds, batch_size, n_local, local_steps, seed=0):
+    """The stateful async lane: SCAFFOLD, host store vs device store.
+
+    Same async pipeline (max_staleness=1, prefetch thread) three ways —
+    host-store scatter (one blocking device->host sync per round at
+    write-back time), device-store (gather/CAS-scatter traced inside the
+    jitted programs, drops synced once at end of loop), and the sync
+    host-store loop as the baseline — plus a *stateless* control: fedavg
+    with the identical client optimizer / step count, i.e. the same async
+    round minus the per-client state. Device-store time within noise of
+    that control is the "per-round sync removed" claim, measured."""
+    grad_fn, batch_fn, params = _make_problem(cfg, n_local, batch_size, seed)
+    fed = FedConfig(algorithm="scaffold", clients_per_round=CLIENTS,
+                    local_steps=local_steps, server_opt="sgdm",
+                    server_lr=0.3, client_opt="sgd", client_lr=0.01)
+    afed = dataclasses.replace(fed, async_rounds=True, max_staleness=1,
+                               staleness_discount=0.9, prefetch_rounds=2)
+
+    def sim(f):
+        return FedSim(fed=f, grad_fn=grad_fn, batch_fn=batch_fn,
+                      num_clients=CLIENTS, seed=seed)
+
+    out = {
+        "sync_ms": _timed(sim(fed), params, rounds),
+        "async_host_ms": _timed(sim(afed), params, rounds),
+        "async_device_ms": _timed(
+            sim(dataclasses.replace(afed, client_state_placement="device")),
+            params, rounds),
+        # the matched stateless control (NOT the grid's fedavg, whose
+        # client optimizer differs): same opt, same steps, no state
+        "stateless_async_ms": _timed(
+            sim(dataclasses.replace(afed, algorithm="fedavg")),
+            params, rounds),
+    }
+    out["device_speedup_vs_host"] = (out["async_host_ms"]
+                                     / out["async_device_ms"])
+    out["device_overhead_vs_stateless"] = (out["async_device_ms"]
+                                           / out["stateless_async_ms"])
     return out
 
 
@@ -127,6 +183,18 @@ def run(quick: bool = True):
                                  f"async={res['async_ms']:.1f}ms"
                                  f"({res['speedup']:.2f}x)")})
     report["best_speedup"] = max(report[a]["speedup"] for a, *_ in grid)
+
+    # stateful lane: same async pipeline with per-client state; the device
+    # store should land within noise of its matched stateless control
+    # where the host store pays its per-round write-back sync
+    steps, batch = grid[0][1], grid[0][2]
+    st = _bench_stateful(cfg, rounds, batch, n_local, steps)
+    report["stateful_scaffold"] = st
+    rows.append({"name": f"async_engine/scaffold_state_{cfg.name}",
+                 "us_per_call": st["async_host_ms"] * 1e3,
+                 "derived": (f"host={st['async_host_ms']:.1f}ms,"
+                             f"device={st['async_device_ms']:.1f}ms,"
+                             f"stateless={st['stateless_async_ms']:.1f}ms")})
     with open("BENCH_async_engine.json", "w") as f:
         json.dump(report, f, indent=2)
     return rows

@@ -246,11 +246,26 @@ class FedConfig:
     # Cohort batch trees stacked ahead of the round loop by a background
     # host thread (data/prefetch.py); 0 = stack inline as before.
     prefetch_rounds: int = 0
+    # --- per-client persistent state (core/client_state.py) ---
+    # Where stateful algorithms' per-client state lives: "host" (numpy
+    # store, gather/scatter at the round edges — one blocking device sync
+    # per stateful round at scatter time) or "device" (dense buffers stay
+    # on the accelerator; gather/CAS-scatter are traced inside the jitted
+    # round with the cohort ids as an argument — no per-round host sync).
+    client_state_placement: str = "host"
 
     def __post_init__(self):
         if self.round_placement not in ("parallel", "sequential", "chunked"):
             raise ValueError(
                 f"unknown round_placement {self.round_placement!r}")
+        # the registered store implementations are the source of truth for
+        # valid placements; late import avoids a configs<->core cycle, as
+        # does the get_algorithm import below
+        from repro.core.client_state import STORES  # noqa: PLC0415
+        if self.client_state_placement not in STORES:
+            raise ValueError(
+                f"unknown client_state_placement "
+                f"{self.client_state_placement!r}; known: {tuple(STORES)}")
         if self.round_chunk_size < 0:
             raise ValueError("round_chunk_size must be >= 0")
         if self.max_staleness < 0:

@@ -9,7 +9,14 @@ sharded_round (multi-pod SPMD), both thin frontends over the engine.
 """
 from repro.core.async_engine import AsyncRoundEngine  # noqa: F401
 from repro.core.client import make_client_update  # noqa: F401
-from repro.core.client_state import ClientStateStore  # noqa: F401
+from repro.core.client_state import (  # noqa: F401
+    ClientStateStore,
+    DeviceClientStateStore,
+    device_gather,
+    device_scatter,
+    jit_donating_store,
+    make_client_store,
+)
 from repro.core.diagnostics import (  # noqa: F401
     bias_variance,
     effective_sample_size,
@@ -23,6 +30,7 @@ from repro.core.dp_delta import (  # noqa: F401
     online_dp_init,
     online_dp_update,
 )
+from repro.core.history import json_scalar  # noqa: F401
 from repro.core.iasg import IASGResult, iasg_sample, sgd_steps  # noqa: F401
 from repro.core.posterior import (  # noqa: F401
     QuadraticClient,

@@ -32,12 +32,13 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Callable, List, NamedTuple, Optional, Tuple
+from typing import Callable, List, NamedTuple, Optional, Tuple, Union
 
 import jax
-import numpy as np
 
-from repro.core.client_state import ClientStateStore
+from repro.core.client_state import (ClientStateStore, DeviceClientStateStore,
+                                     device_scatter, jit_donating_store)
+from repro.core.history import json_scalar
 from repro.core.server import ServerState
 from repro.data.prefetch import Cohort, CohortPrefetcher, close_prefetcher
 
@@ -52,7 +53,10 @@ class _InFlight(NamedTuple):
     ``client_ids`` / ``new_states`` / ``stamps`` carry the per-client
     state write-back (None for stateless regimes): the gather-time write
     stamps let the store drop a stale write from a cohort that overlapped
-    an already-applied one on the same client.
+    an already-applied one on the same client. With the device store the
+    three are device arrays (the traced id vector, the cohort program's
+    stacked state output, the on-device stamp snapshot) and the write-back
+    never touches the host.
     """
 
     agg: object
@@ -63,16 +67,6 @@ class _InFlight(NamedTuple):
     client_ids: object = None
     new_states: object = None
     stamps: object = None
-
-
-def _json_scalar(v):
-    """Device/NumPy metric -> plain Python (history must JSON-serialize).
-
-    Scalars become Python numbers, arrays become lists — by rank, not
-    size, so a length-1 vector metric keeps its list type.
-    """
-    a = np.asarray(v)
-    return a.item() if a.ndim == 0 else a.tolist()
 
 
 @dataclasses.dataclass
@@ -95,9 +89,18 @@ class AsyncRoundEngine:
     gather-time stamps — so when two in-flight cohorts overlap on a
     client, the one applied second (which gathered before the first wrote)
     is dropped for that client instead of clobbering the fresher state.
-    The write-back pulls ``new_states`` to the host, which syncs on that
-    cohort's compute — later cohorts are already dispatched, but stateful
-    rounds do pay one device sync per round that stateless ones avoid.
+
+    With the host ``ClientStateStore`` the write-back pulls ``new_states``
+    to the host, which syncs on that cohort's compute — one device sync
+    per stateful round that stateless rounds avoid. With a
+    ``DeviceClientStateStore`` the gather happens *inside* the dispatched
+    cohort program (``cohort_fn(state, batches, weights, store_state,
+    client_ids) -> (agg, metrics, new_states, stamps)``, the device-store
+    signature of ``make_cohort_program``) and the write-back is a small
+    jitted ``device_scatter`` (store buffers donated): the CAS runs
+    against the on-device stamps, the dropped-write count stays a device
+    counter folded into the end-of-loop sync with the losses, and the
+    stateful pipeline regains the stateless path's sync-free round loop.
     """
 
     cohort_fn: Callable
@@ -108,7 +111,8 @@ class AsyncRoundEngine:
     burn_server_fn: Optional[Callable] = None
     burn_in_rounds: int = 0
     prefetch_rounds: int = 0
-    client_store: Optional[ClientStateStore] = None
+    client_store: Optional[Union[ClientStateStore,
+                                 DeviceClientStateStore]] = None
     stateful: bool = False
     burn_stateful: bool = False
 
@@ -124,7 +128,13 @@ class AsyncRoundEngine:
             self.burn_stateful = self.stateful
         if (self.stateful or self.burn_stateful) and self.client_store is None:
             raise ValueError(
-                "stateful=True requires a ClientStateStore (client_store)")
+                "stateful=True requires a client-state store (client_store)")
+        self._device_store = isinstance(self.client_store,
+                                        DeviceClientStateStore)
+        # the device write-back stage: donate the store so the (N, ...)
+        # buffers alias in place instead of doubling per-client state
+        self._scatter = (jit_donating_store(device_scatter, 0)
+                         if self._device_store else None)
         self._cohort = jax.jit(self.cohort_fn)
         self._burn = (jax.jit(self.burn_cohort_fn)
                       if self.burn_cohort_fn is not None else self._cohort)
@@ -155,6 +165,11 @@ class AsyncRoundEngine:
         for live logging/checkpointing. Forcing metrics there re-introduces
         a per-round sync, so log sparingly in throughput-sensitive loops.
         """
+        if eval_fn is not None and eval_every < 1:
+            raise ValueError(
+                f"eval_every must be >= 1 when eval_fn is set, got "
+                f"{eval_every} (evaluate every round with eval_every=1, or "
+                f"pass eval_fn=None to disable evaluation)")
         source = (CohortPrefetcher(build_cohort, 0, num_rounds,
                                    depth=self.prefetch_rounds)
                   if self.prefetch_rounds > 0 else None)
@@ -173,7 +188,23 @@ class AsyncRoundEngine:
                     cohort = get(t_next)
                     is_burn = t_next < self.burn_in_rounds
                     fn = self._burn if is_burn else self._cohort
-                    if (self.burn_stateful if is_burn else self.stateful):
+                    if not (self.burn_stateful if is_burn else self.stateful):
+                        agg, metrics = fn(state, cohort.batches,
+                                          cohort.weights)
+                        flight = _InFlight(agg, metrics, version, t_next,
+                                           is_burn)
+                    elif self._device_store:
+                        # gather happens inside the dispatched program
+                        # against the store's current device buffers; the
+                        # returned stamps snapshot (device) tags the CAS
+                        ids = self.client_store.prepare_ids(
+                            cohort.client_ids)
+                        agg, metrics, new_states, stamps = fn(
+                            state, cohort.batches, cohort.weights,
+                            self.client_store.device_state(), ids)
+                        flight = _InFlight(agg, metrics, version, t_next,
+                                           is_burn, ids, new_states, stamps)
+                    else:
                         cstates, stamps = self.client_store.gather(
                             cohort.client_ids)
                         agg, metrics, new_states = fn(
@@ -181,11 +212,6 @@ class AsyncRoundEngine:
                         flight = _InFlight(agg, metrics, version, t_next,
                                            is_burn, cohort.client_ids,
                                            new_states, stamps)
-                    else:
-                        agg, metrics = fn(state, cohort.batches,
-                                          cohort.weights)
-                        flight = _InFlight(agg, metrics, version, t_next,
-                                           is_burn)
                     pending.append(flight)
                     t_next += 1
 
@@ -203,8 +229,18 @@ class AsyncRoundEngine:
                     # write back in apply order, tagged with the gather-time
                     # stamps: a client already updated by an overlapping
                     # cohort keeps that fresher value (stale write dropped)
-                    rec["state_drops"] = self.client_store.scatter(
-                        fl.client_ids, fl.new_states, fl.stamps)
+                    if self._device_store:
+                        # one jitted scatter, store buffers donated; the
+                        # drop count stays a device scalar until the
+                        # end-of-loop sync — no per-round host pull
+                        new_store, drops = self._scatter(
+                            self.client_store.device_state(), fl.client_ids,
+                            fl.new_states, fl.stamps)
+                        self.client_store.set_device_state(new_store)
+                        rec["state_drops"] = drops
+                    else:
+                        rec["state_drops"] = self.client_store.scatter(
+                            fl.client_ids, fl.new_states, fl.stamps)
                 if eval_fn is not None and (t_apply % eval_every == 0
                                             or t_apply == num_rounds - 1):
                     rec["eval"] = eval_fn(state.params)
@@ -218,9 +254,10 @@ class AsyncRoundEngine:
                 # must not mask an exception unwinding out of the loop
                 close_prefetcher(source, unwinding=not completed)
 
-        # one sync at the end instead of one per round; eval metrics are
-        # converted with the losses — splicing raw device arrays into
-        # history broke JSON serialization and hid a sync on first access
+        # one sync at the end instead of one per round; eval metrics (and
+        # the device store's state_drops counters) are converted with the
+        # losses — splicing raw device arrays into history broke JSON
+        # serialization and hid a sync on first access
         history = []
         for rec in raw:
             entry = {"round": rec["round"], "staleness": rec["staleness"],
@@ -228,8 +265,8 @@ class AsyncRoundEngine:
                      "loss_last": float(rec["metrics"]["loss_last"])}
             entry["client_loss"] = entry["loss_last"]
             if "state_drops" in rec:
-                entry["state_drops"] = rec["state_drops"]
-            entry.update({k: _json_scalar(v)
+                entry["state_drops"] = json_scalar(rec["state_drops"])
+            entry.update({k: json_scalar(v)
                           for k, v in rec.get("eval", {}).items()})
             history.append(entry)
         return state, history

@@ -1,36 +1,71 @@
-"""Host-side per-client persistent state for stateful federated algorithms.
+"""Per-client persistent state for stateful federated algorithms.
 
 The paper's template assumes stateless clients, but its stateful cousins —
 SCAFFOLD-style control variates and the per-client site parameters of
 EP-based posterior inference (Guo et al. 2023) — need a statistic that
-persists *on the server, per client, across rounds*. ``ClientStateStore``
-is that statistic's home:
+persists *on the server, per client, across rounds*. Two interchangeable
+stores give that statistic a home (``FedConfig.client_state_placement``):
 
-  * dense numpy buffers with a leading ``num_clients`` axis, mirroring one
-    per-client state pytree (``FedAlgorithm.init_client_state``), lazily
-    allocated the first time a template is available;
-  * ``gather(client_ids)`` slices one cohort's states (and records a
-    per-client write stamp) for the jitted round program to consume;
-  * ``scatter(client_ids, updates, stamps)`` writes the cohort's
-    ``ClientResult.state_update`` back with compare-and-swap semantics:
-    a write is applied only if the client's state was not updated since
-    the matching gather. Under the async engine two in-flight cohorts can
-    overlap on a client; the cohort applied second gathered *before* the
-    first one wrote, so its stale write is dropped — an applied update is
-    never silently clobbered by a writer that did not see it;
-  * ``state_dict()`` / ``load_state_dict()`` expose a plain pytree so the
-    store checkpoints through ``checkpoint/io.py`` alongside ``ServerState``.
+  * :class:`ClientStateStore` (``"host"``, the default) — dense numpy
+    buffers with a leading ``num_clients`` axis, mirroring one per-client
+    state pytree (``FedAlgorithm.init_client_state``), lazily allocated the
+    first time a template is available. ``gather(client_ids)`` slices one
+    cohort's states (and records a per-client write stamp) for the jitted
+    round program to consume; ``scatter(client_ids, updates, stamps)``
+    writes the cohort's ``ClientResult.state_update`` back with
+    compare-and-swap semantics: a write is applied only if the client's
+    state was not updated since the matching gather. Under the async
+    engine two in-flight cohorts can overlap on a client; the cohort
+    applied second gathered *before* the first one wrote, so its stale
+    write is dropped — an applied update is never silently clobbered by a
+    writer that did not see it. The scatter pulls the stacked updates to
+    the host: the one blocking device sync a stateful round pays that a
+    stateless one does not.
 
-Everything here is host-side (numpy): the stacked cohort slice transfers
-to the device once per round, with the batches, and the state traffic
-inside the round stays inside the single jitted program.
+  * :class:`DeviceClientStateStore` (``"device"``) — the same dense
+    ``(num_clients, ...)`` buffers and write stamps as device arrays, with
+    the gather (``buffers[ids]``) and CAS scatter (``jnp.where``-masked
+    ``.at[ids].set``, stamps compared and bumped on device) traced *inside*
+    the jitted round programs via :func:`device_gather` /
+    :func:`device_scatter`: the cohort's ``client_ids`` become a traced
+    argument, state traffic never leaves the accelerator, and the store's
+    buffers are donated to the round (:func:`jit_donating_store`) so the
+    update happens in place. The per-round host sync is gone; data only
+    crosses to the host in :meth:`DeviceClientStateStore.state_dict`
+    (checkpointing).
+
+Both stores share the write-stamp CAS contract, refuse duplicate client
+ids in one cohort (numpy's buffered fancy indexing and XLA's scatter would
+both silently make an arbitrary write win), and expose the same
+``state_dict()`` / ``load_state_dict()`` pytree so checkpoints written
+from one placement restore into the other through ``checkpoint/io.py``.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
+
+
+def _require_unique_ids(client_ids: np.ndarray, op: str) -> None:
+    """Raise if a cohort names the same client twice.
+
+    Duplicate ids in one scatter are ill-defined in both stores: numpy's
+    buffered fancy indexing makes the *last* write win (and bumps the
+    stamp once), XLA's scatter picks an arbitrary winner — either way one
+    client's update is silently discarded. The engine's sampler draws
+    without replacement, but the stores are public API, so this is
+    enforced loudly at the edge.
+    """
+    ids, counts = np.unique(client_ids, return_counts=True)
+    if ids.shape[0] != np.asarray(client_ids).shape[0]:
+        dups = ids[counts > 1]
+        raise ValueError(
+            f"{op} got duplicate client ids {dups.tolist()}: a cohort may "
+            f"name each client at most once (duplicate writes would "
+            f"silently drop all but one update)")
 
 
 class ClientStateStore:
@@ -99,6 +134,7 @@ class ClientStateStore:
         """
         self._require_initialized()
         ids = np.asarray(client_ids, np.int64)
+        _require_unique_ids(ids, "ClientStateStore.scatter")
         updates = jax.tree_util.tree_map(np.asarray, updates)
         if stamps is None:
             write = np.ones(ids.shape[0], bool)
@@ -127,3 +163,230 @@ class ClientStateStore:
         self._buffers = jax.tree_util.tree_map(np.asarray, state["buffers"])
         self._stamps = stamps.copy()
         return self
+
+
+# ---------------------------------------------------------------------------
+# Device-resident store: gather/scatter traced inside the jitted round
+# ---------------------------------------------------------------------------
+
+def device_gather(store_state, client_ids):
+    """Traced cohort gather: ``(stacked_states, stamps_snapshot)``.
+
+    ``store_state`` is :meth:`DeviceClientStateStore.device_state` (the
+    dense ``(N, ...)`` buffers + ``(N,)`` write stamps) and ``client_ids``
+    a traced ``(C,)`` int vector; the slice happens on device, inside
+    whatever jitted program calls this. The stamps snapshot must be handed
+    back to :func:`device_scatter` for the CAS check.
+    """
+    states = jax.tree_util.tree_map(lambda b: b[client_ids],
+                                    store_state["buffers"])
+    return states, store_state["stamps"][client_ids]
+
+
+def device_scatter(store_state, client_ids, updates, stamps=None):
+    """Traced CAS write-back: ``(new_store_state, drops)``.
+
+    The device twin of :meth:`ClientStateStore.scatter`: a client whose
+    stamp moved since the matching :func:`device_gather` keeps its newer
+    value (``jnp.where``-masked ``.at[ids].set``, so the stale row writes
+    back the value it would have overwritten), applied stamps are bumped
+    on device, and ``drops`` (the number of dropped writes) stays a device
+    scalar — the caller decides when, if ever, to sync it to the host.
+    ``stamps=None`` writes unconditionally. Duplicate ``client_ids`` must
+    be rejected host-side before tracing (``prepare_ids``): XLA's scatter
+    would pick an arbitrary winner silently.
+    """
+    buffers, all_stamps = store_state["buffers"], store_state["stamps"]
+    if stamps is None:
+        ok = jnp.ones(client_ids.shape[0], bool)
+    else:
+        ok = all_stamps[client_ids] == stamps
+
+    def write(b, u):
+        mask = ok.reshape((-1,) + (1,) * (u.ndim - 1))
+        return b.at[client_ids].set(
+            jnp.where(mask, u.astype(b.dtype), b[client_ids]))
+
+    new_buffers = jax.tree_util.tree_map(write, buffers, updates)
+    new_stamps = all_stamps.at[client_ids].add(ok.astype(all_stamps.dtype))
+    drops = client_ids.shape[0] - jnp.sum(ok.astype(jnp.int32))
+    return {"buffers": new_buffers, "stamps": new_stamps}, drops
+
+
+def jit_donating_store(fn: Callable, store_argnum: int) -> Callable:
+    """``jax.jit(fn)`` with the store-state argument donated when possible.
+
+    Donation lets XLA alias the store's ``(N, ...)`` input buffers to the
+    returned updated store, so the round updates the state in place
+    instead of holding two copies of ``N x`` per-client state in HBM. The
+    CPU backend does not implement donation (it would warn on every
+    compile), so this degrades to a plain ``jit`` there — purely a memory
+    optimization either way; numerics are identical.
+    """
+    if jax.default_backend() == "cpu":
+        return jax.jit(fn)
+    return jax.jit(fn, donate_argnums=(store_argnum,))
+
+
+class DeviceClientStateStore:
+    """Per-client persistent state as device-resident buffers.
+
+    Same population/``ensure``/``reset``/``state_dict`` API and CAS
+    write-stamp contract as the host :class:`ClientStateStore`, but the
+    dense ``(num_clients, ...)`` buffers and the stamps are jax device
+    arrays, and the engines trace :func:`device_gather` /
+    :func:`device_scatter` against :meth:`device_state` *inside* their
+    jitted round programs (the cohort's ``client_ids`` are a traced
+    argument, prepared by :meth:`prepare_ids`) and hand the returned store
+    pytree back to :meth:`set_device_state` — no host sync anywhere in the
+    round loop. ``gather``/``scatter`` remain as host-callable conveniences
+    with the host store's exact semantics (``scatter`` returns the drop
+    count, which forces one sync) for tests and interactive use; the
+    engines never call them.
+
+    Stamps are int32 on device (jax default-int under disabled x64);
+    :meth:`state_dict` widens them to the host store's int64 so checkpoints
+    are interchangeable between placements.
+    """
+
+    def __init__(self, num_clients: int):
+        """Create an empty device store for ``num_clients`` clients."""
+        if num_clients <= 0:
+            raise ValueError(f"num_clients must be >= 1, got {num_clients}")
+        self.num_clients = num_clients
+        self._buffers = None                  # pytree of (N, ...) jnp arrays
+        self._stamps = jnp.zeros(num_clients, jnp.int32)
+
+    @property
+    def initialized(self) -> bool:
+        """Whether the dense device buffers have been allocated."""
+        return self._buffers is not None
+
+    def ensure(self, template) -> "DeviceClientStateStore":
+        """Allocate the ``(num_clients, ...)`` device buffers from one
+        client's state template (idempotent; zeros, matching leaf dtypes)."""
+        if self._buffers is None:
+            n = self.num_clients
+            self._buffers = jax.tree_util.tree_map(
+                lambda x: jnp.zeros((n,) + tuple(np.shape(x)),
+                                    jnp.asarray(x).dtype),
+                template)
+        return self
+
+    def reset(self) -> "DeviceClientStateStore":
+        """Zero every client's state and write stamp (keeps the shapes)."""
+        if self._buffers is not None:
+            self._buffers = jax.tree_util.tree_map(
+                lambda b: jnp.zeros_like(b), self._buffers)
+        self._stamps = jnp.zeros(self.num_clients, jnp.int32)
+        return self
+
+    def _require_initialized(self):
+        if self._buffers is None:
+            raise RuntimeError(
+                "DeviceClientStateStore is uninitialized; call "
+                "ensure(template) with one client's state pytree first")
+
+    # -- the engine-facing traced-state handshake ---------------------------
+    def _check_range(self, ids: np.ndarray) -> np.ndarray:
+        if ids.size and (ids.min() < 0 or ids.max() >= self.num_clients):
+            raise ValueError(
+                f"client ids {ids.tolist()} out of range for population "
+                f"{self.num_clients}")
+        return ids
+
+    def prepare_ids(self, client_ids) -> jnp.ndarray:
+        """Cohort ids -> the traced ``(C,)`` int32 argument of the round.
+
+        Checks duplicates and range host-side, while the ids are still
+        concrete (inside the jit XLA clamps out-of-range indices and the
+        scatter cannot raise).
+        """
+        ids = np.asarray(client_ids, np.int64)
+        _require_unique_ids(ids, "DeviceClientStateStore")
+        return jnp.asarray(self._check_range(ids), jnp.int32)
+
+    def device_state(self):
+        """The store as a traced-argument pytree: ``{"buffers", "stamps"}``.
+
+        Hand this to the jitted round (or :func:`device_gather` /
+        :func:`device_scatter`) and give the returned updated pytree back
+        to :meth:`set_device_state`; with :func:`jit_donating_store` the
+        round aliases the update in place.
+        """
+        self._require_initialized()
+        return {"buffers": self._buffers, "stamps": self._stamps}
+
+    def set_device_state(self, store_state) -> "DeviceClientStateStore":
+        """Adopt the updated ``{"buffers", "stamps"}`` a round returned.
+
+        Pure reference rebinding: nothing syncs, the arrays may still be
+        futures of an in-flight dispatch.
+        """
+        self._buffers = store_state["buffers"]
+        self._stamps = store_state["stamps"]
+        return self
+
+    # -- host-callable conveniences (host-store API parity) -----------------
+    def gather(self, client_ids):
+        """One cohort's state slice ``(stacked_states, stamps)`` (device
+        arrays), with the host store's contract — incl. rejecting
+        out-of-range ids, which XLA's gather would silently clamp; for
+        tests/interactive use — the engines gather inside their jitted
+        rounds instead."""
+        self._require_initialized()
+        ids = self._check_range(np.asarray(client_ids, np.int64))
+        return device_gather(self.device_state(), jnp.asarray(ids, jnp.int32))
+
+    def scatter(self, client_ids, updates,
+                stamps: Optional[jnp.ndarray] = None) -> int:
+        """CAS write-back; returns #clients dropped (blocks on the count).
+
+        Host-store API parity for tests/interactive use: the engines trace
+        :func:`device_scatter` inside their round programs and fold the
+        drop counter into their end-of-loop sync instead of blocking here.
+        """
+        ids = self.prepare_ids(client_ids)
+        updates = jax.tree_util.tree_map(jnp.asarray, updates)
+        new_state, drops = device_scatter(self.device_state(), ids, updates,
+                                          stamps)
+        self.set_device_state(new_state)
+        return int(drops)
+
+    # -- checkpointing -------------------------------------------------------
+    def state_dict(self):
+        """Checkpointable pytree — the ONE place device state crosses to
+        the host (stamps widened to the host store's int64, so checkpoints
+        restore into either placement)."""
+        self._require_initialized()
+        return {
+            "buffers": jax.tree_util.tree_map(np.asarray, self._buffers),
+            "stamps": np.asarray(self._stamps, np.int64),
+        }
+
+    def load_state_dict(self, state) -> "DeviceClientStateStore":
+        """Restore from either store's :meth:`state_dict` output (pushed
+        to device; population size checked)."""
+        stamps = np.asarray(state["stamps"], np.int64)
+        if stamps.shape != (self.num_clients,):
+            raise ValueError(
+                f"stamps shape {stamps.shape} != ({self.num_clients},) — "
+                f"checkpoint was written for a different population size")
+        self._buffers = jax.tree_util.tree_map(jnp.asarray, state["buffers"])
+        self._stamps = jnp.asarray(stamps, jnp.int32)
+        return self
+
+
+#: Store classes by ``FedConfig.client_state_placement`` value.
+STORES = {"host": ClientStateStore, "device": DeviceClientStateStore}
+
+
+def make_client_store(placement: str, num_clients: int):
+    """Instantiate the store for a ``client_state_placement`` value."""
+    try:
+        cls = STORES[placement]
+    except KeyError:
+        raise ValueError(
+            f"unknown client_state_placement {placement!r}; "
+            f"known: {tuple(STORES)}") from None
+    return cls(num_clients)

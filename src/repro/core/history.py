@@ -1,0 +1,22 @@
+"""Round-history helpers shared by the sync and async engines.
+
+Both ``FedSim.run`` and ``AsyncRoundEngine.run`` return a per-round
+``history`` list whose entries must be plain-Python JSON-serializable
+dicts — splicing raw device arrays in breaks ``json.dumps(history)`` and
+hides a blocking device sync behind the first consumer access.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def json_scalar(v):
+    """Device/NumPy metric -> plain Python (history must JSON-serialize).
+
+    Scalars become Python numbers, arrays become lists — by rank, not
+    size, so a length-1 vector metric keeps its list type. Reading a
+    device array here blocks until its computation lands, so engines call
+    this once per run (the end-of-loop sync), not once per round.
+    """
+    a = np.asarray(v)
+    return a.item() if a.ndim == 0 else a.tolist()

@@ -28,7 +28,8 @@ import numpy as np
 
 from repro.configs.base import FedConfig
 from repro.core.async_engine import AsyncRoundEngine
-from repro.core.client_state import ClientStateStore
+from repro.core.client_state import jit_donating_store, make_client_store
+from repro.core.history import json_scalar
 from repro.core.round_program import (make_cohort_program,
                                       make_round_program,
                                       make_server_program)
@@ -68,13 +69,22 @@ class FedSim:
                                         self.fed.server_lr,
                                         self.fed.server_momentum)
 
+        from repro.algorithms import (get_algorithm,  # noqa: PLC0415 — cycle
+                                      resolve_algorithm)
+
+        self._state_placement = self.fed.client_state_placement
+
         def build(use_sampling: bool):
-            return jax.jit(make_round_program(
+            round_fn = make_round_program(
                 self.grad_fn, self.fed, placement=self.placement,
                 server_opt=self.server_opt, use_sampling=use_sampling,
-            ))
-
-        from repro.algorithms import get_algorithm  # noqa: PLC0415 — cycle
+            )
+            if (resolve_algorithm(self.fed, use_sampling).stateful
+                    and self._state_placement == "device"):
+                # round_fn(state, batches, weights, store_state, ids):
+                # donate the store so the (N, ...) buffers update in place
+                return jit_donating_store(round_fn, 3)
+            return jax.jit(round_fn)
 
         self._alg = get_algorithm(self.fed)
         self._round = build(use_sampling=True)
@@ -86,12 +96,14 @@ class FedSim:
             self._burn_round = build(use_sampling=False)
         else:
             self._burn_round = self._round
-        # per-client persistent state (SCAFFOLD/FedEP): host-side store,
-        # gathered/scattered around each jitted round
+        # per-client persistent state (SCAFFOLD/FedEP): host or device
+        # store per fed.client_state_placement; host gathers/scatters at
+        # the round edges, device threads its buffers through the jit
         self._stateful = self._alg.stateful
         self._burn_stateful = (self._alg.burn_algorithm().stateful
                                if self._has_burn_regime else self._stateful)
-        self.client_store = (ClientStateStore(self.num_clients)
+        self.client_store = (make_client_store(self._state_placement,
+                                               self.num_clients)
                              if self._stateful or self._burn_stateful
                              else None)
         self._engine: Optional[AsyncRoundEngine] = None
@@ -133,15 +145,23 @@ class FedSim:
 
     def round(self, state: ServerState, round_idx: int,
               cohort: Optional[Cohort] = None):
-        """One synchronous round; stateful algorithms additionally gather
-        the cohort's client-state slice before the jitted round and scatter
-        the returned state updates back into the store."""
+        """One synchronous round; stateful algorithms additionally thread
+        the cohort's client state through the jitted round — gathered and
+        scattered at the host edges for the host store, or passed as the
+        store's device buffers (+ the cohort ids) with the gather/CAS
+        scatter fused into the program for the device store."""
         cohort = cohort if cohort is not None else self.cohort(round_idx)
         is_burn = round_idx < self.fed.burn_in_rounds
         round_fn = self._burn_round if is_burn else self._round
         stateful = (self._burn_stateful
                     if is_burn and self._has_burn_regime else self._stateful)
-        if stateful:
+        if stateful and self._state_placement == "device":
+            ids = self.client_store.prepare_ids(cohort.client_ids)
+            state, metrics, new_store = round_fn(
+                state, cohort.batches, cohort.weights,
+                self.client_store.device_state(), ids)
+            self.client_store.set_device_state(new_store)
+        elif stateful:
             cstates, stamps = self.client_store.gather(cohort.client_ids)
             state, metrics, new_states = round_fn(
                 state, cohort.batches, cohort.weights, cstates)
@@ -157,6 +177,11 @@ class FedSim:
             eval_fn: Optional[Callable] = None, eval_every: int = 1):
         """Drive ``num_rounds`` rounds from fresh state; returns
         ``(final_state, history)`` (sync or async per ``fed.async_rounds``)."""
+        if eval_fn is not None and eval_every < 1:
+            raise ValueError(
+                f"eval_every must be >= 1 when eval_fn is set, got "
+                f"{eval_every} (evaluate every round with eval_every=1, or "
+                f"pass eval_fn=None to disable evaluation)")
         state = self.init(params)
         if self.fed.async_rounds:
             return self._run_async(state, num_rounds, eval_fn, eval_every)
@@ -172,7 +197,12 @@ class FedSim:
                 state, metrics = self.round(state, r, cohort)
                 if eval_fn is not None and (r % eval_every == 0
                                             or r == num_rounds - 1):
-                    metrics = {**metrics, **eval_fn(state.params)}
+                    # eval metrics may be device arrays: convert here so
+                    # history stays JSON-serializable (the sync path's twin
+                    # of the async engine's end-of-loop conversion)
+                    metrics = {**metrics,
+                               **{k: json_scalar(v)
+                                  for k, v in eval_fn(state.params).items()}}
                 metrics["round"] = r
                 history.append(metrics)
             completed = True

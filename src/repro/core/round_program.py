@@ -41,11 +41,16 @@ import jax.numpy as jnp
 
 from repro.configs.base import FedConfig
 from repro.core import tree_math as tm
+from repro.core.client_state import STORES, device_gather, device_scatter
 from repro.core.server import ServerState, normalized_weights
 from repro.optim import Optimizer, get_optimizer
 
 #: Client placements understood by the engine.
 PLACEMENTS = ("parallel", "sequential", "chunked")
+
+#: Client-state placements understood by the engine (the registered store
+#: implementations — ``core.client_state.STORES`` is the source of truth).
+STATE_PLACEMENTS = tuple(STORES)
 
 
 def resolve_placement(fed: FedConfig, placement: Optional[str] = None) -> str:
@@ -53,6 +58,16 @@ def resolve_placement(fed: FedConfig, placement: Optional[str] = None) -> str:
     p = placement or fed.round_placement
     if p not in PLACEMENTS:
         raise ValueError(f"unknown placement {p!r}; known: {PLACEMENTS}")
+    return p
+
+
+def resolve_state_placement(fed: FedConfig,
+                            state_placement: Optional[str] = None) -> str:
+    """Explicit argument wins; otherwise ``fed.client_state_placement``."""
+    p = state_placement or fed.client_state_placement
+    if p not in STATE_PLACEMENTS:
+        raise ValueError(
+            f"unknown client-state placement {p!r}; known: {STATE_PLACEMENTS}")
     return p
 
 
@@ -81,6 +96,7 @@ def make_cohort_program(
     wrap_client: Optional[Callable] = None,
     prepare_params: Optional[Callable] = None,
     constrain_accum: Optional[Callable] = None,
+    state_placement: Optional[str] = None,
 ) -> Callable:
     """Build ``cohort_fn(state, client_batches[, client_weights[, states]])``.
 
@@ -94,14 +110,26 @@ def make_cohort_program(
     (unweighted) over the cohort; ``agg`` feeds ``make_server_program``'s
     server stage, which finalizes it into the pseudo-gradient.
 
-    For a *stateful* algorithm (``alg.stateful``) the signature grows one
-    argument and one result: ``cohort_fn(state, client_batches,
-    client_weights, client_states) -> (agg, losses, new_client_states)``.
-    ``client_states`` is the cohort's gathered ``ClientStateStore`` slice
-    (leading axis C) and ``new_client_states`` the stacked
-    ``ClientResult.state_update`` to scatter back — the gather/scatter
-    edges are host-side, but all state traffic inside the round stays in
-    the single jitted program across every placement.
+    For a *stateful* algorithm (``alg.stateful``) the signature depends on
+    the client-state placement (``state_placement``, default
+    ``fed.client_state_placement``):
+
+    * ``"host"`` — one extra argument and result: ``cohort_fn(state,
+      client_batches, client_weights, client_states) -> (agg, losses,
+      new_client_states)``. ``client_states`` is the cohort's gathered
+      ``ClientStateStore`` slice (leading axis C) and
+      ``new_client_states`` the stacked ``ClientResult.state_update`` to
+      scatter back — the gather/scatter edges are host-side numpy.
+    * ``"device"`` — the gather moves *inside* the program:
+      ``cohort_fn(state, client_batches, client_weights, store_state,
+      client_ids) -> (agg, losses, new_client_states, stamps)``.
+      ``store_state`` is ``DeviceClientStateStore.device_state()`` (the
+      full dense ``(N, ...)`` buffers + write stamps) and ``client_ids``
+      the traced cohort id vector; the cohort's slice is gathered on
+      device and the returned stacked updates + gather-time stamps feed
+      ``core.client_state.device_scatter`` (fused into the round by
+      ``make_round_program``, or applied later by the async engine) — no
+      state traffic ever touches the host.
 
     Takes the full ``ServerState`` (not just params) because the
     algorithm's broadcast hook may read server-optimizer statistics (MIME's
@@ -123,6 +151,7 @@ def make_cohort_program(
     if wrap_client is not None:
         client_update = wrap_client(client_update)
     place = resolve_placement(fed, placement)
+    state_place = resolve_state_placement(fed, state_placement)
     stateful = alg.stateful
 
     def _client_axes(n_extra: int):
@@ -199,12 +228,8 @@ def make_cohort_program(
             new_states = tm.tmap(unpad, new_states)
         return agg, metrics, new_states
 
-    def cohort_fn(state: ServerState, client_batches, client_weights=None,
-                  client_states=None):
-        if stateful and client_states is None:
-            raise ValueError(
-                f"algorithm {alg.name!r} is stateful: cohort_fn needs the "
-                f"gathered client_states slice (ClientStateStore.gather)")
+    def _run_cohort(state: ServerState, client_batches, client_weights,
+                    client_states):
         C = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
         params = (state.params if prepare_params is None
                   else prepare_params(state.params))
@@ -227,8 +252,38 @@ def make_cohort_program(
             "loss_first": jnp.mean(metrics["loss_first"]),
             "loss_last": jnp.mean(metrics["loss_last"]),
         }
-        return ((agg, losses, new_states) if stateful
-                else (agg, losses))
+        return agg, losses, new_states
+
+    if stateful and state_place == "device":
+        def cohort_fn(state: ServerState, client_batches,
+                      client_weights=None, store_state=None,
+                      client_ids=None):
+            if store_state is None or client_ids is None:
+                raise ValueError(
+                    f"algorithm {alg.name!r} is stateful with the device "
+                    f"store: cohort_fn needs store_state "
+                    f"(DeviceClientStateStore.device_state()) and the "
+                    f"cohort's client_ids (prepare_ids)")
+            cstates, stamps = device_gather(store_state, client_ids)
+            agg, losses, new_states = _run_cohort(
+                state, client_batches, client_weights, cstates)
+            return agg, losses, new_states, stamps
+    elif stateful:
+        def cohort_fn(state: ServerState, client_batches,
+                      client_weights=None, client_states=None):
+            if client_states is None:
+                raise ValueError(
+                    f"algorithm {alg.name!r} is stateful: cohort_fn needs "
+                    f"the gathered client_states slice "
+                    f"(ClientStateStore.gather)")
+            return _run_cohort(state, client_batches, client_weights,
+                               client_states)
+    else:
+        def cohort_fn(state: ServerState, client_batches,
+                      client_weights=None):
+            agg, losses, _ = _run_cohort(state, client_batches,
+                                         client_weights, None)
+            return agg, losses
 
     return cohort_fn
 
@@ -288,15 +343,22 @@ def make_round_program(
     prepare_params: Optional[Callable] = None,
     finalize_params: Optional[Callable] = None,
     constrain_accum: Optional[Callable] = None,
+    state_placement: Optional[str] = None,
 ) -> Callable:
     """Build the fused ``round_fn(state, client_batches[, client_weights])``.
 
     Composes ``make_cohort_program`` and ``make_server_program`` into the
     single-dispatch synchronous round: cohort of client updates -> weighted
     aggregation -> server step. Returns ``(new_state, {"loss_first",
-    "loss_last"})``. For a stateful algorithm the round takes the cohort's
-    gathered ``client_states`` and returns ``(new_state, losses,
-    new_client_states)`` (see ``make_cohort_program``).
+    "loss_last"})``. For a stateful algorithm with the host store the round
+    takes the cohort's gathered ``client_states`` and returns
+    ``(new_state, losses, new_client_states)``; with the device store
+    (``state_placement="device"``) it takes ``(store_state, client_ids)``
+    instead and returns ``(new_state, losses, new_store_state)`` — gather,
+    clients, CAS scatter, and server step all in the one jitted program,
+    so callers may donate ``store_state``
+    (``core.client_state.jit_donating_store``) for an in-place update
+    (see ``make_cohort_program``).
 
     ``use_sampling=False`` builds the burn-in-round variant of the config's
     algorithm (e.g. the FedAvg regime of a FedPA config, Section 5.2) with
@@ -324,6 +386,7 @@ def make_round_program(
         spmd_axes=spmd_axes, use_sampling=use_sampling, client_opt=client_opt,
         server_opt=server_opt, wrap_client=wrap_client,
         prepare_params=prepare_params, constrain_accum=constrain_accum,
+        state_placement=state_placement,
     )
     server_fn = make_server_program(
         fed, server_opt=server_opt, use_sampling=use_sampling,
@@ -332,7 +395,22 @@ def make_round_program(
 
     from repro.algorithms import resolve_algorithm  # noqa: PLC0415 — cycle
 
-    if resolve_algorithm(fed, use_sampling).stateful:
+    stateful = resolve_algorithm(fed, use_sampling).stateful
+    state_place = resolve_state_placement(fed, state_placement)
+
+    if stateful and state_place == "device":
+        def round_fn(state: ServerState, client_batches, client_weights=None,
+                     store_state=None, client_ids=None):
+            agg, metrics, new_states, stamps = cohort_fn(
+                state, client_batches, client_weights, store_state,
+                client_ids)
+            # within one program nothing can write between the gather and
+            # this scatter, so the CAS always succeeds (drops == 0 by
+            # construction; discarded)
+            new_store, _ = device_scatter(store_state, client_ids,
+                                          new_states, stamps)
+            return server_fn(state, agg), metrics, new_store
+    elif stateful:
         def round_fn(state: ServerState, client_batches, client_weights=None,
                      client_states=None):
             agg, metrics, new_states = cohort_fn(

@@ -117,6 +117,13 @@ def make_fed_round(
                      ["frontend": (C, K, B_local, F, d)]}.
     ``use_sampling=False`` gives the burn-in-round variant (FedAvg regime)
     of the same FedPA config — used for the first ``burn_in_rounds`` rounds.
+
+    Stateful algorithms follow ``fed.client_state_placement``: ``"host"``
+    appends the gathered ``client_states`` slice to the signature,
+    ``"device"`` appends ``(store_state, client_ids)`` with the
+    gather/CAS-scatter fused into the program and the updated store
+    returned (see ``round_program.make_round_program``); ``launch/specs.py``
+    provides the matching abstract store specs for the dry-run.
     """
     grad_fn, cohort_kw, server_kw = _program_pieces(
         cfg, fed, placement, spmd_axes, compute_dtype, q_chunk, remat,

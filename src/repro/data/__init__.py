@@ -1,3 +1,4 @@
+"""Data pipelines: synthetic federated problems, sampling, prefetching."""
 from repro.data.dirichlet import make_dirichlet_classification  # noqa: F401
 from repro.data.lm_synthetic import SyntheticLMData  # noqa: F401
 from repro.data.prefetch import (  # noqa: F401

@@ -17,6 +17,8 @@ import numpy as np
 
 
 class FederatedClassification(NamedTuple):
+    """One federated classification problem: per-client shards + test set."""
+
     client_x: list          # list of (n_i, d) float arrays
     client_y: list          # list of (n_i,) int arrays
     weights: np.ndarray     # q_i proportional to n_i
@@ -38,6 +40,9 @@ def make_dirichlet_classification(
     n_test: int = 1000,
     seed: int = 0,
 ) -> FederatedClassification:
+    """Build the synthetic non-IID problem: per-client label distributions
+    ~ Dirichlet(alpha), features = noisy class prototypes, test set drawn
+    from the global (uniform) label distribution."""
     rng = np.random.default_rng(seed)
     protos = proto_scale * rng.standard_normal((num_classes, d))
 
@@ -62,6 +67,8 @@ def make_dirichlet_classification(
 
 
 def classification_batches(xs, ys, batch_size: int, num_steps: int, seed: int = 0):
+    """One client-round's ``{"x", "y"}`` batches with a leading step axis
+    (sampled with replacement from the client's shard)."""
     rng = np.random.default_rng(seed)
     idx = rng.integers(0, xs.shape[0], size=(num_steps, batch_size))
     return {"x": jnp.asarray(xs[idx]), "y": jnp.asarray(ys[idx])}

@@ -69,6 +69,7 @@ class CohortPrefetcher:
 
     def __init__(self, build_fn: BuildFn, start_round: int, stop_round: int,
                  depth: int = 2, close_timeout: float = 5.0):
+        """Start the worker thread building rounds ``[start, stop)``."""
         if depth < 1:
             raise ValueError(f"prefetch depth must be >= 1, got {depth}")
         self._close_timeout = close_timeout
@@ -100,6 +101,8 @@ class CohortPrefetcher:
         self._thread.start()
 
     def get(self, round_idx: int) -> Cohort:
+        """Blocking in-order fetch of round ``round_idx``'s cohort
+        (re-raises a builder exception, refuses out-of-order reads)."""
         item = self._q.get()
         if item is self._DONE:
             if self._error is not None:
@@ -142,10 +145,12 @@ class CohortPrefetcher:
         self._drain()  # anything put between the last drain and exit
 
     def __enter__(self):
+        """Context-manager entry: the prefetcher itself."""
         return self
 
     def __exit__(self, *exc):
-        # a hung-worker error must not mask the with-body's own exception
+        """Close on exit; a hung-worker error must not mask the with-body's
+        own exception."""
         close_prefetcher(self, unwinding=exc[0] is not None)
         return False
 

@@ -8,7 +8,10 @@ import numpy as np
 
 
 class ClientSampler:
+    """Deterministic per-round cohort sampler (M of N, no replacement)."""
+
     def __init__(self, num_clients: int, clients_per_round: int, seed: int = 0):
+        """Bind the population size, cohort size, and run seed."""
         if clients_per_round > num_clients:
             raise ValueError("clients_per_round > num_clients")
         self.num_clients = num_clients
@@ -16,6 +19,9 @@ class ClientSampler:
         self.seed = seed
 
     def sample(self, round_idx: int) -> np.ndarray:
+        """Round ``round_idx``'s cohort ids — a pure function of
+        ``(seed, round_idx)``, so re-running a round resamples identically
+        (the sampler never draws a client twice within one round)."""
         rng = np.random.default_rng(
             np.random.SeedSequence(entropy=self.seed, spawn_key=(round_idx,))
         )
@@ -23,6 +29,7 @@ class ClientSampler:
                           replace=False)
 
     def participation_counts(self, num_rounds: int) -> np.ndarray:
+        """How many of the first ``num_rounds`` rounds each client joins."""
         counts = np.zeros(self.num_clients, dtype=np.int64)
         for r in range(num_rounds):
             counts[self.sample(r)] += 1

@@ -1,21 +1,21 @@
-import os
-os.environ["XLA_FLAGS"] = (
-    os.environ.get("REPRO_XLA_FLAGS")
-    or "--xla_force_host_platform_device_count=512"
-)
-
 """Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
 combination against the production mesh and extract the roofline terms.
 
-The two lines above MUST stay the first statements in this module (before
-any other import): jax locks the device count on first initialization, and
-the dry-run needs 512 placeholder host devices for ``jax.make_mesh`` to
-build the production meshes. Tests override via REPRO_XLA_FLAGS.
+The two ``os.environ`` statements below MUST stay ahead of every other
+import: jax locks the device count on first initialization, and the
+dry-run needs 512 placeholder host devices for ``jax.make_mesh`` to build
+the production meshes. Tests override via REPRO_XLA_FLAGS.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-27b --shape train_4k
   PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all --out dryrun.jsonl
 """
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("REPRO_XLA_FLAGS")
+    or "--xla_force_host_platform_device_count=512"
+)
 
 import argparse      # noqa: E402
 import dataclasses   # noqa: E402
@@ -64,7 +64,14 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
               mesh=None, save_hlo: str = None,
               cache_shard: str = "greedy", moe_chunk: int = 0,
               tp_boundary: bool = False, moe_routing: str = "onehot",
-              delta_dtype: str = "float32") -> dict:
+              delta_dtype: str = "float32",
+              client_state_placement: str = "host",
+              num_clients: int = 64) -> dict:
+    """Lower (and optionally compile) one (arch, shape, mesh) combination;
+    returns the record dict (roofline terms, memory, collectives, or the
+    skip/error status). ``client_state_placement="device"`` lowers the
+    stateful round with the device-resident client-state store —
+    ``num_clients`` sizes its population axis."""
     cfg = configs.get_config(arch)
     shape = SHAPES[shape_name]
     skip = should_skip(cfg, shape)
@@ -84,6 +91,10 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     if delta_dtype != "float32":
         fed = dataclasses.replace(fed, delta_dtype=delta_dtype)
         rec["delta_dtype"] = delta_dtype
+    if client_state_placement != "host":
+        fed = dataclasses.replace(
+            fed, client_state_placement=client_state_placement)
+        rec["client_state_placement"] = client_state_placement
     if placement == "auto":
         placement = default_placement(cfg)
     rec["placement"] = placement if shape.kind == "train" else "-"
@@ -105,7 +116,7 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         rec["tp_boundary"] = True
 
     spec = input_specs(cfg, shape, fed, mesh, placement,
-                       cache_shard=cache_shard)
+                       cache_shard=cache_shard, num_clients=num_clients)
     t0 = time.time()
 
     if shape.kind == "train":
@@ -118,7 +129,9 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         )
         rules = ({"batch": (), "clients": caxes}
                  if placement == "parallel" else None)
-        # stateful rounds return (state, metrics, new_client_states)
+        # stateful rounds return (state, metrics, new_client_states) — or
+        # (state, metrics, new_store_state) with the device store, whose
+        # sharding also sits at args index 3
         out_sh = ((spec["shardings"][0], None, spec["shardings"][3])
                   if len(spec["args"]) > 2 else (spec["shardings"][0], None))
         with axis_rules(mesh, rules):
@@ -208,6 +221,7 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
 
 
 def main():
+    """CLI: sweep (arch x shape x mesh) combos, print the roofline table."""
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="all")
     ap.add_argument("--shape", default="all")
@@ -231,6 +245,14 @@ def main():
     ap.add_argument("--delta-dtype", default="float32",
                     choices=("float32", "bfloat16"),
                     help="FedPA sample/DP-state dtype (§Perf)")
+    ap.add_argument("--client-state-placement", default="host",
+                    choices=("host", "device"),
+                    help="client-state store for stateful algorithms: "
+                         "host numpy or device-resident buffers traced "
+                         "through the round (core/client_state.py)")
+    ap.add_argument("--num-clients", type=int, default=64,
+                    help="population size of the device-resident "
+                         "client-state store (device placement only)")
     ap.add_argument("--moe-routing", default="onehot",
                     choices=("onehot", "sort"),
                     help="MoE dispatch implementation (§Perf)")
@@ -259,6 +281,8 @@ def main():
                         tp_boundary=args.tp_boundary,
                         moe_routing=args.moe_routing,
                         delta_dtype=args.delta_dtype,
+                        client_state_placement=args.client_state_placement,
+                        num_clients=args.num_clients,
                     )
                 except Exception as e:  # noqa: BLE001 — record and continue
                     rec = {"arch": arch, "shape": shape,

@@ -34,10 +34,12 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def mesh_from_config(mc: MeshConfig):
+    """Materialize a ``MeshConfig`` as a jax mesh over the visible devices."""
     return make_mesh_compat(mc.shape, mc.axes)
 
 
 def mesh_config(multi_pod: bool = False) -> MeshConfig:
+    """The production ``MeshConfig`` for one pod or the two-pod slice."""
     return MULTI_POD if multi_pod else SINGLE_POD
 
 

@@ -20,6 +20,8 @@ from repro.sharding.roofline import derive, format_table
 
 
 def reanalyze_file(path: str) -> dict:
+    """Re-derive one roofline record from a saved ``*.hlo.gz`` dump
+    (arch/shape/mesh parsed back out of the dump's file name)."""
     base = os.path.basename(path).replace(".hlo.gz", "")
     parts = base.split("__")
     arch, shape_name, mesh_name = parts[:3]
@@ -47,6 +49,7 @@ def reanalyze_file(path: str) -> dict:
 
 
 def main():
+    """CLI: re-analyze every dump in a directory, print the table."""
     ap = argparse.ArgumentParser()
     ap.add_argument("hlo_dir")
     ap.add_argument("--out", default=None)

@@ -20,6 +20,7 @@ from repro.models import init_params, prefill_step, serve_step
 
 
 def main():
+    """CLI: prefill a synthetic batch, then decode ``--gen`` tokens."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-27b", choices=configs.ALL_ARCHS)
     ap.add_argument("--smoke", action="store_true", default=True)

@@ -20,6 +20,7 @@ from repro.sharding import fsdp_shardings, param_shardings
 
 
 def client_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The mesh axes that carry federated clients / batch."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
@@ -151,6 +152,52 @@ def client_state_specs(cfg: ModelConfig, fed: FedConfig, mesh: Mesh,
     return specs, shardings
 
 
+def device_store_specs(cfg: ModelConfig, fed: FedConfig, mesh: Mesh,
+                       placement: str, num_clients: int = 64,
+                       param_dtype=jnp.float32):
+    """Abstract device-resident client-state store + cohort-id specs.
+
+    The ``client_state_placement="device"`` round signature appends
+    ``(store_state, client_ids)``: the full population's dense
+    ``{"buffers": (N, ...), "stamps": (N,)}`` store
+    (``DeviceClientStateStore.device_state()``) and the traced ``(C,)``
+    cohort id vector. Returns ``(store_spec, store_sharding, ids_spec,
+    ids_sharding)``; ``(None,) * 4`` for stateless algorithms. The leading
+    population axis shards over the client axes when divisible (the
+    in-program gather reshards the cohort slice) and replicates otherwise;
+    ids are replicated.
+    """
+    from repro.algorithms import get_algorithm  # noqa: PLC0415 — cycle
+
+    alg = get_algorithm(fed)
+    if not alg.stateful:
+        return None, None, None, None
+    params = abstract_params(cfg, param_dtype)
+    one = jax.eval_shape(alg.init_client_state, params)
+    caxes = client_axes(mesh)
+    extent = 1
+    for a in caxes:
+        extent *= mesh.shape[a]
+    lead = P(caxes) if num_clients % extent == 0 else P()
+    store_spec = {
+        "buffers": jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct((num_clients,) + tuple(x.shape),
+                                           x.dtype), one),
+        "stamps": jax.ShapeDtypeStruct((num_clients,), jnp.int32),
+    }
+    store_sh = {
+        "buffers": jax.tree_util.tree_map(
+            lambda x: NamedSharding(mesh,
+                                    P(*lead, *(None,) * len(x.shape))), one),
+        "stamps": NamedSharding(mesh, P(*lead)),
+    }
+    C = (_client_extent(mesh) if placement == "parallel"
+         else fed.clients_per_round)
+    ids_spec = jax.ShapeDtypeStruct((C,), jnp.int32)
+    ids_sh = NamedSharding(mesh, P())
+    return store_spec, store_sh, ids_spec, ids_sh
+
+
 # ---------------------------------------------------------------------------
 # Inference (prefill / decode)
 # ---------------------------------------------------------------------------
@@ -211,6 +258,7 @@ def _kv_cache_sharding(leaf, mesh: Mesh, mode: str) -> NamedSharding:
 def decode_state_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
                        cache_dtype=jnp.bfloat16, headroom: int = 0,
                        cache_shard: str = "greedy"):
+    """Abstract decode state (KV caches, positions) + shardings."""
     B = shape.global_batch
     max_len = shape.seq_len + headroom
     state = abstract_decode_state(cfg, B, max_len, cache_dtype)
@@ -232,6 +280,7 @@ def decode_state_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
 
 
 def token_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """One decode step's token-id batch spec + sharding."""
     B = shape.global_batch
     spec = jax.ShapeDtypeStruct((B,), jnp.int32)
     ce = _client_extent(mesh)
@@ -242,6 +291,7 @@ def token_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
 
 
 def prefill_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """Prefill inputs (token batch, optional frontend) + shardings."""
     B = shape.global_batch
     s_text = shape.seq_len - (cfg.frontend_tokens if cfg.frontend else 0)
     ce = _client_extent(mesh)
@@ -263,15 +313,28 @@ def prefill_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
 
 def input_specs(cfg: ModelConfig, shape: ShapeConfig, fed: FedConfig,
                 mesh: Mesh, placement: Optional[str] = None,
-                cache_shard: str = "greedy"):
+                cache_shard: str = "greedy", num_clients: int = 64):
     """Every input the lowered step needs, as ShapeDtypeStructs, plus
-    matching shardings: {"args": (...), "shardings": (...)} keyed by kind."""
+    matching shardings: {"args": (...), "shardings": (...)} keyed by kind.
+    ``num_clients`` sizes the device-resident client-state store's
+    population axis for ``fed.client_state_placement="device"`` rounds."""
     from repro.core.sharded_round import default_placement  # late: cycle-free
 
     placement = placement or default_placement(cfg)
     if shape.kind == "train":
         state, state_sh = server_state_specs(cfg, fed, mesh, placement)
         batches, batch_sh = train_batch_specs(cfg, shape, fed, mesh, placement)
+        if fed.client_state_placement == "device":
+            store, store_sh, ids, ids_sh = device_store_specs(
+                cfg, fed, mesh, placement, num_clients)
+            if store is not None:
+                # device-stateful round:
+                # fn(state, batches, weights=None, store_state, client_ids)
+                # -> (state, losses, new_store_state)
+                return {"kind": "train", "placement": placement,
+                        "args": (state, batches, None, store, ids),
+                        "shardings": (state_sh, batch_sh, None, store_sh,
+                                      ids_sh)}
         cstates, cstate_sh = client_state_specs(cfg, fed, mesh, placement)
         if cstates is not None:
             # stateful round: fn(state, batches, weights=None, client_states)

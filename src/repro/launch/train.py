@@ -23,7 +23,7 @@ from repro.algorithms import algorithm_names, get_algorithm, phase_name
 from repro.checkpoint import restore_checkpoint, save_checkpoint
 from repro.configs.base import FedConfig
 from repro.core.async_engine import AsyncRoundEngine
-from repro.core.client_state import ClientStateStore
+from repro.core.client_state import jit_donating_store, make_client_store
 from repro.core.server import init_server_state
 from repro.core.sharded_round import make_fed_round, make_fed_round_split
 from repro.data import SyntheticLMData
@@ -34,6 +34,7 @@ from repro.optim import get_optimizer
 
 
 def build_fed(args) -> FedConfig:
+    """CLI flags -> the run's ``FedConfig``."""
     return FedConfig(
         algorithm=args.algorithm,
         clients_per_round=args.clients,
@@ -48,10 +49,12 @@ def build_fed(args) -> FedConfig:
         max_staleness=args.max_staleness,
         staleness_discount=args.staleness_discount,
         prefetch_rounds=args.prefetch_rounds,
+        client_state_placement=args.client_state_placement,
     )
 
 
 def main():
+    """Parse flags, build the round programs, drive the training loop."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="fedlm-100m",
                     choices=configs.ALL_ARCHS)
@@ -89,6 +92,13 @@ def main():
     ap.add_argument("--prefetch-rounds", type=int, default=2,
                     help="cohort batches stacked ahead by a host thread "
                          "(0 = inline)")
+    ap.add_argument("--client-state-placement", default="host",
+                    choices=("host", "device"),
+                    help="where stateful algorithms' per-client state "
+                         "lives: host numpy store (one device sync per "
+                         "stateful round at scatter time) or device "
+                         "buffers threaded through the jitted round "
+                         "(sync-free; pulled to host only at checkpoints)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)
@@ -118,11 +128,16 @@ def main():
     burn_stateful = (alg.burn_algorithm().stateful
                      if alg.has_burn_regime and fed.burn_in_rounds
                      else alg.stateful)
-    store = (ClientStateStore(args.num_clients)
+    device_store = fed.client_state_placement == "device"
+    store = (make_client_store(fed.client_state_placement, args.num_clients)
              .ensure(alg.init_client_state(params))
              if alg.stateful or burn_stateful else None)
 
     def ckpt_tree(round_state):
+        """Checkpoint pytree: bare server state, or {"server", "clients"}.
+
+        ``store.state_dict()`` is the one place device-resident client
+        state is pulled to the host."""
         if store is None:
             return round_state
         return {"server": round_state, "clients": store.state_dict()}
@@ -142,10 +157,19 @@ def main():
             pass
 
     q_chunk = min(64, s_text)
-    round_sample = jax.jit(make_fed_round(cfg, fed, placement="parallel",
-                                          q_chunk=q_chunk))
-    round_burn = jax.jit(make_fed_round(cfg, fed, placement="parallel",
-                                        q_chunk=q_chunk, use_sampling=False))
+
+    def jit_round(round_fn, stateful_regime):
+        # device-stateful rounds take (state, batches, weights, store, ids)
+        # — donate the store so its buffers update in place
+        if device_store and stateful_regime:
+            return jit_donating_store(round_fn, 3)
+        return jax.jit(round_fn)
+
+    round_sample = jit_round(make_fed_round(cfg, fed, placement="parallel",
+                                            q_chunk=q_chunk), alg.stateful)
+    round_burn = jit_round(make_fed_round(cfg, fed, placement="parallel",
+                                          q_chunk=q_chunk,
+                                          use_sampling=False), burn_stateful)
 
     def round_batches(r, ids):
         toks = data.round_batches(ids, fed.local_steps, args.batch, s_text,
@@ -252,7 +276,12 @@ def main():
             stateful_round = (store is not None
                               and (burn_stateful if is_burn
                                    else alg.stateful))
-            if stateful_round:
+            if stateful_round and device_store:
+                state, metrics, new_ss = fn(state, batches, None,
+                                            store.device_state(),
+                                            store.prepare_ids(ids))
+                store.set_device_state(new_ss)
+            elif stateful_round:
                 cstates, stamps = store.gather(ids)
                 state, metrics, new_states = fn(state, batches, None,
                                                 cstates)

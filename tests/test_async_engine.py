@@ -132,6 +132,47 @@ def test_history_eval_metrics_are_synced_and_json_serializable(problem):
     assert len(hist[0]["param_head"]) == 2
 
 
+def test_sync_history_eval_metrics_are_synced_and_json_serializable(problem):
+    """The synchronous ``FedSim.run`` loop had the same bug the async
+    engine was cured of: ``eval_fn`` results spliced into history as raw
+    device arrays, breaking ``json.dumps(history)``. Both paths now
+    convert through the shared ``core.history.json_scalar``."""
+    grad_fn, batch_fn = problem
+    sim = FedSim(fed=FEDS["fedavg"], grad_fn=grad_fn, batch_fn=batch_fn,
+                 num_clients=C)
+
+    def eval_fn(params):
+        return {"eval_loss": jnp.sum(params * params),
+                "param_head": params[:2]}
+
+    _, hist = sim.run(jnp.zeros(D), 4, eval_fn=eval_fn, eval_every=2)
+    json.dumps(hist)   # the regression: TypeError on jax.Array before
+    for h in hist:
+        for v in h.values():
+            assert isinstance(v, (int, float, list)), (type(v), h)
+    assert "eval_loss" in hist[0] and "eval_loss" not in hist[1]
+    assert isinstance(hist[0]["eval_loss"], float)
+    assert isinstance(hist[0]["param_head"], list)
+    assert len(hist[0]["param_head"]) == 2
+
+
+@pytest.mark.parametrize("async_mode", [False, True], ids=["sync", "async"])
+@pytest.mark.parametrize("eval_every", [0, -1])
+def test_run_rejects_nonpositive_eval_every(problem, async_mode, eval_every):
+    """eval_every <= 0 used to surface as a bare ZeroDivisionError from
+    ``t % eval_every`` deep in the round loop (after rounds already ran,
+    in the async case); both engines now validate it eagerly, by name."""
+    grad_fn, batch_fn = problem
+    fed = dataclasses.replace(FEDS["fedavg"], async_rounds=async_mode)
+    sim = FedSim(fed=fed, grad_fn=grad_fn, batch_fn=batch_fn, num_clients=C)
+    with pytest.raises(ValueError, match="eval_every"):
+        sim.run(jnp.zeros(D), 2, eval_fn=lambda p: {"e": 0.0},
+                eval_every=eval_every)
+    # with evaluation disabled, eval_every is unused and must not reject
+    _, hist = sim.run(jnp.zeros(D), 1, eval_fn=None, eval_every=eval_every)
+    assert len(hist) == 1
+
+
 def test_engine_validates_knobs(problem):
     grad_fn, _ = problem
     with pytest.raises(ValueError):

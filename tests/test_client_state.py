@@ -1,7 +1,9 @@
-"""Per-client persistent state: the ClientStateStore (lazy init, gather/
-scatter, overlap CAS semantics), the stateful round programs, the async
-engine's tagged write-back, and the ServerState + store checkpoint
-round-trip (bitwise-identical continuation)."""
+"""Per-client persistent state: the host ClientStateStore and the
+device-resident DeviceClientStateStore (lazy init, gather/scatter, overlap
+CAS semantics, duplicate-id rejection), the stateful round programs in
+both placements, the async engine's tagged write-back, host-vs-device
+bitwise parity across placements and engines, and the ServerState + store
+checkpoint round-trip (bitwise-identical continuation, cross-placement)."""
 import dataclasses
 
 import jax
@@ -13,13 +15,18 @@ from repro.algorithms import get_algorithm
 from repro.checkpoint import restore_checkpoint, save_checkpoint
 from repro.configs.base import FedConfig
 from repro.core import FedSim, make_round_program
-from repro.core.client_state import ClientStateStore
+from repro.core.client_state import (ClientStateStore, DeviceClientStateStore,
+                                     make_client_store)
 from repro.core.server import init_server_state
 from repro.data import make_federated_lsq
 from repro.data.synthetic_lsq import lsq_batches
 from repro.optim import get_optimizer
 
 C, D = 4, 3
+
+BOTH_STORES = pytest.mark.parametrize(
+    "store_cls", [ClientStateStore, DeviceClientStateStore],
+    ids=["host", "device"])
 
 SCAFFOLD = FedConfig(algorithm="scaffold", clients_per_round=C,
                      local_steps=12, server_opt="sgd", server_lr=0.1,
@@ -51,8 +58,9 @@ def problem():
 # Store unit behavior
 # ---------------------------------------------------------------------------
 
-def test_store_lazy_init_gather_scatter():
-    store = ClientStateStore(6)
+@BOTH_STORES
+def test_store_lazy_init_gather_scatter(store_cls):
+    store = store_cls(6)
     assert not store.initialized
     with pytest.raises(RuntimeError, match="uninitialized"):
         store.gather([0])
@@ -76,11 +84,13 @@ def test_store_lazy_init_gather_scatter():
     np.testing.assert_array_equal(store.gather([0])[0]["c"], np.zeros((1, 2)))
 
 
-def test_store_overlap_write_is_dropped_not_clobbered():
+@BOTH_STORES
+def test_store_overlap_write_is_dropped_not_clobbered(store_cls):
     """Two cohorts gather the same client before either writes: the write
     applied second (based on the pre-first-write state) is dropped, so the
-    first applied update is never lost."""
-    store = ClientStateStore(3).ensure(jnp.zeros(1))
+    first applied update is never lost — identical CAS semantics in the
+    host store (numpy) and the device store (on-device stamps)."""
+    store = store_cls(3).ensure(jnp.zeros(1))
     _, stamps_a = store.gather([0, 1])
     _, stamps_b = store.gather([0, 2])          # overlaps client 0
 
@@ -88,22 +98,59 @@ def test_store_overlap_write_is_dropped_not_clobbered():
     # cohort B gathered before A wrote: its client-0 write must be dropped
     assert store.scatter([0, 2], np.asarray([[9.0], [2.0]]), stamps_b) == 1
     states, _ = store.gather([0, 1, 2])
-    np.testing.assert_array_equal(states.ravel(), [1.0, 1.0, 2.0])
+    np.testing.assert_array_equal(np.ravel(states), [1.0, 1.0, 2.0])
 
     # a gather AFTER A's write sees the new stamp and may overwrite
     _, stamps_c = store.gather([0])
     assert store.scatter([0], np.asarray([[5.0]]), stamps_c) == 0
-    np.testing.assert_array_equal(store.gather([0])[0].ravel(), [5.0])
+    np.testing.assert_array_equal(np.ravel(store.gather([0])[0]), [5.0])
 
 
-def test_store_reset_and_unconditional_scatter():
-    store = ClientStateStore(2).ensure(jnp.zeros(1))
+@BOTH_STORES
+def test_store_reset_and_unconditional_scatter(store_cls):
+    store = store_cls(2).ensure(jnp.zeros(1))
     store.scatter([0], np.asarray([[3.0]]))      # stamps=None: always write
-    np.testing.assert_array_equal(store.gather([0])[0].ravel(), [3.0])
+    np.testing.assert_array_equal(np.ravel(store.gather([0])[0]), [3.0])
     store.reset()
     states, stamps = store.gather([0, 1])
     np.testing.assert_array_equal(states, np.zeros((2, 1)))
     np.testing.assert_array_equal(stamps, [0, 0])
+
+
+@BOTH_STORES
+def test_store_scatter_rejects_duplicate_client_ids(store_cls):
+    """Duplicate ids in one scatter are ill-defined (numpy's buffered fancy
+    indexing and XLA's scatter both silently pick one winner and the stamp
+    bumps once) — the stores must refuse them loudly, with and without CAS
+    stamps."""
+    store = store_cls(4).ensure(jnp.zeros(1))
+    upd = np.asarray([[1.0], [2.0], [3.0]])
+    with pytest.raises(ValueError, match="duplicate client ids"):
+        store.scatter([1, 2, 1], upd)
+    _, stamps = store.gather([1, 2, 1])
+    with pytest.raises(ValueError, match="duplicate client ids"):
+        store.scatter([1, 2, 1], upd, stamps)
+    # the failed scatters must not have written or bumped anything
+    states, stamps = store.gather([1, 2])
+    np.testing.assert_array_equal(states, np.zeros((2, 1)))
+    np.testing.assert_array_equal(stamps, [0, 0])
+    # unique ids still work
+    assert store.scatter([1, 2], upd[:2]) == 0
+
+
+def test_device_store_prepare_ids_validates():
+    store = DeviceClientStateStore(4).ensure(jnp.zeros(1))
+    with pytest.raises(ValueError, match="duplicate client ids"):
+        store.prepare_ids([0, 0, 1])
+    with pytest.raises(ValueError, match="out of range"):
+        store.prepare_ids([0, 4])
+    # gather must reject out-of-range ids too (XLA would silently clamp
+    # buffers[ids] to the last client where numpy raises IndexError)
+    with pytest.raises(ValueError, match="out of range"):
+        store.gather([4])
+    ids = store.prepare_ids([2, 0])
+    assert ids.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(ids), [2, 0])
 
 
 def test_persistent_state_is_fp32_even_for_bf16_configs():
@@ -122,11 +169,21 @@ def test_persistent_state_is_fp32_even_for_bf16_configs():
             assert leaf.dtype == jnp.float32, fed.algorithm
 
 
-def test_store_load_rejects_wrong_population():
-    store = ClientStateStore(2).ensure(jnp.zeros(1))
-    other = ClientStateStore(3).ensure(jnp.zeros(1))
+@BOTH_STORES
+def test_store_load_rejects_wrong_population(store_cls):
+    store = store_cls(2).ensure(jnp.zeros(1))
+    other = store_cls(3).ensure(jnp.zeros(1))
     with pytest.raises(ValueError, match="population"):
         store.load_state_dict(other.state_dict())
+
+
+def test_make_client_store_resolves_placement():
+    assert isinstance(make_client_store("host", 2), ClientStateStore)
+    assert isinstance(make_client_store("device", 2), DeviceClientStateStore)
+    with pytest.raises(ValueError, match="client_state_placement"):
+        make_client_store("tpu", 2)
+    with pytest.raises(ValueError, match="client_state_placement"):
+        FedConfig(client_state_placement="tpu")
 
 
 # ---------------------------------------------------------------------------
@@ -144,11 +201,14 @@ def test_stateful_round_requires_client_states(problem):
         round_fn(state, batches)
 
 
+@pytest.mark.parametrize("store_place", ["host", "device"])
 @pytest.mark.parametrize("fed", [SCAFFOLD, FEDEP], ids=["scaffold", "fedep"])
-def test_state_persists_across_rounds_and_resets_on_init(fed, problem):
+def test_state_persists_across_rounds_and_resets_on_init(fed, store_place,
+                                                         problem):
     """Round t+1's clients see the state round t wrote (the store is not
     zero after a round), and FedSim.init starts every run from zeros."""
     grad_fn, batch_fn = problem
+    fed = dataclasses.replace(fed, client_state_placement=store_place)
     sim = FedSim(fed=fed, grad_fn=grad_fn, batch_fn=batch_fn, num_clients=C)
     state = sim.init(jnp.zeros(D))
     for r in range(3):
@@ -161,17 +221,62 @@ def test_state_persists_across_rounds_and_resets_on_init(fed, problem):
                    sim.client_store.state_dict()))
 
 
-def test_async_overlapping_cohorts_do_not_lose_applied_updates(problem):
+@pytest.mark.parametrize("store_place", ["host", "device"])
+def test_async_overlapping_cohorts_do_not_lose_applied_updates(store_place,
+                                                               problem):
     """Full participation + max_staleness=1: every odd round's cohort
     gathered before the previous round's write landed, so its C stale
     writes are dropped (surfaced as ``state_drops``) instead of clobbering
-    the applied state; even rounds gather fresh and write cleanly."""
+    the applied state; even rounds gather fresh and write cleanly. The
+    device store reproduces the pattern with its CAS running against the
+    on-device stamps (drops synced once, at end of loop)."""
     grad_fn, batch_fn = problem
-    fed = dataclasses.replace(SCAFFOLD, async_rounds=True, max_staleness=1)
+    fed = dataclasses.replace(SCAFFOLD, async_rounds=True, max_staleness=1,
+                              client_state_placement=store_place)
     sim = FedSim(fed=fed, grad_fn=grad_fn, batch_fn=batch_fn, num_clients=C)
     _, hist = sim.run(jnp.zeros(D), 6)
     assert [h["staleness"] for h in hist] == [0, 1, 1, 1, 1, 1]
     assert [h["state_drops"] for h in hist] == [0, C, 0, C, 0, C]
+    assert all(isinstance(h["state_drops"], int) for h in hist)
+
+
+# ---------------------------------------------------------------------------
+# Host store vs device store: bitwise parity across placements and engines
+# ---------------------------------------------------------------------------
+
+def _store_dict_np(store):
+    return jax.tree_util.tree_map(np.asarray, store.state_dict())
+
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+@pytest.mark.parametrize("placement,chunk",
+                         [("parallel", None), ("sequential", None),
+                          ("chunked", 3)])  # 3 !| 4: pads
+@pytest.mark.parametrize("fed", [SCAFFOLD, FEDEP], ids=["scaffold", "fedep"])
+def test_host_vs_device_store_bitwise_parity(fed, placement, chunk, mode,
+                                             problem):
+    """The device store's in-jit gather/CAS-scatter is pure data movement:
+    server params AND the full per-client state buffers must match the
+    host store BITWISE after multi-round runs (incl. fedep's stateless
+    burn rounds), for every placement, sync and async (staleness=0)."""
+    grad_fn, batch_fn = problem
+    fed = dataclasses.replace(
+        fed, round_placement=placement,
+        round_chunk_size=chunk if chunk is not None else 0,
+        **(dict(async_rounds=True, max_staleness=0, prefetch_rounds=2)
+           if mode == "async" else {}))
+    host = FedSim(fed=fed, grad_fn=grad_fn, batch_fn=batch_fn,
+                  num_clients=C)
+    dev = FedSim(fed=dataclasses.replace(fed,
+                                         client_state_placement="device"),
+                 grad_fn=grad_fn, batch_fn=batch_fn, num_clients=C)
+    want, _ = host.run(jnp.zeros(D), 4)
+    got, _ = dev.run(jnp.zeros(D), 4)
+    np.testing.assert_array_equal(np.asarray(got.params),
+                                  np.asarray(want.params))
+    jax.tree_util.tree_map(
+        np.testing.assert_array_equal,
+        _store_dict_np(dev.client_store), _store_dict_np(host.client_store))
 
 
 # ---------------------------------------------------------------------------
@@ -215,4 +320,47 @@ def test_checkpoint_roundtrip_bitwise_continuation(fed, problem, tmp_path):
         (got_state.params, got_state.algo_state,
          sim2.client_store.state_dict()),
         (ref_state.params, ref_state.algo_state, ref_store))
+    assert int(got_state.round) == int(ref_state.round)
+
+
+@pytest.mark.parametrize("restore_place", ["host", "device"])
+@pytest.mark.parametrize("fed", [SCAFFOLD, FEDEP], ids=["scaffold", "fedep"])
+def test_device_store_checkpoint_restores_into_either_placement(
+        fed, restore_place, problem, tmp_path):
+    """A ``{"server", "clients"}`` checkpoint written from DEVICE buffers
+    (``state_dict()`` is the one device->host pull) restores into either
+    placement and the next round is bitwise identical to the uninterrupted
+    device-store run — the store placement is a runtime knob, not a
+    checkpoint format."""
+    grad_fn, batch_fn = problem
+    fed_dev = dataclasses.replace(fed, client_state_placement="device")
+    sim = FedSim(fed=fed_dev, grad_fn=grad_fn, batch_fn=batch_fn,
+                 num_clients=C)
+    state = sim.init(jnp.zeros(D))
+    for r in range(3):
+        state, _ = sim.round(state, r)
+    save_checkpoint(str(tmp_path),
+                    {"server": state,
+                     "clients": sim.client_store.state_dict()}, 3,
+                    {"algorithm": fed.algorithm})
+
+    # uninterrupted reference: one more device-store round
+    ref_state, _ = sim.round(state, 3)
+    ref_store = _store_dict_np(sim.client_store)
+
+    sim2 = FedSim(fed=dataclasses.replace(
+                      fed, client_state_placement=restore_place),
+                  grad_fn=grad_fn, batch_fn=batch_fn, num_clients=C)
+    st2 = sim2.init(jnp.zeros(D))
+    restored, step, meta = restore_checkpoint(
+        str(tmp_path),
+        {"server": st2, "clients": sim2.client_store.state_dict()})
+    assert step == 3 and meta["algorithm"] == fed.algorithm
+    sim2.client_store.load_state_dict(restored["clients"])
+    got_state, _ = sim2.round(restored["server"], 3)
+
+    np.testing.assert_array_equal(np.asarray(got_state.params),
+                                  np.asarray(ref_state.params))
+    jax.tree_util.tree_map(np.testing.assert_array_equal,
+                           _store_dict_np(sim2.client_store), ref_store)
     assert int(got_state.round) == int(ref_state.round)
