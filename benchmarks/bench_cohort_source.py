@@ -1,0 +1,155 @@
+"""Thread vs process cohort prefetcher on a decode-bound input pipeline
+(data/prefetch.py).
+
+The workload models the cross-device input path where host-side decode —
+not device compute — is the largest pipeline stage: the builder runs a
+chain of elementwise numpy passes over a scratch buffer (elementwise
+ufuncs never release the GIL, unlike BLAS calls) before emitting the
+cohort's stacked batches, and the consumer replays a round loop's
+dispatch/device-wait interleave (short GIL-holding dispatch slices
+separated by GIL-released device waits, the shape of jit dispatch plus
+blocking metric syncs). Three lanes over the same rounds, best-of-
+``TRIALS`` per lane to shed scheduler noise:
+
+* ``inline``  — no prefetcher: decode serialized into the round loop;
+* ``thread``  — ``CohortPrefetcher``: decode overlaps device waits but
+  shares the GIL with the loop's dispatch work;
+* ``process`` — ``ProcessCohortPrefetcher``: decode runs behind a fork
+  and cohorts arrive through the shared-memory arena (one memcpy per
+  round at ``get()``).
+
+Both prefetchers must beat ``inline`` (the decode leaves the critical
+path), and ``process_speedup_vs_thread`` is the gated headline: the arena
+reader must be at least as fast as the GIL-sharing thread backend on this
+decode-bound config. On multi-core hosts the arena genuinely overlaps
+GIL-bound decode with the loop's own Python and the margin grows; on a
+single-core host every backend time-shares one CPU, so the expected
+margin is parity — the headline then checks that the arena's copy + IPC
+overhead stays amortized below the thread backend's GIL handoff cost.
+Writes ``BENCH_cohort_source.json`` for the CI artifact + regression
+lane.
+
+  PYTHONPATH=src python -m benchmarks.bench_cohort_source [--full]
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.data.prefetch import Cohort, make_prefetcher
+
+CLIENTS = 16
+TRIALS = 3
+#: Dispatch/device-wait interleaves per round (jit dispatch + metric sync).
+DISPATCHES = 6
+DEVICE_WAIT_S = 0.003
+
+
+def _make_build_fn(n_local, dim, steps, batch, scratch_elems, passes):
+    """Decode-bound cohort builder: GIL-holding numpy passes + gather."""
+    rng = np.random.default_rng(0)
+    scratch = rng.random(scratch_elems).astype(np.float32)
+    client_u8 = [rng.integers(0, 256, size=(n_local, dim), dtype=np.uint8)
+                 for _ in range(CLIENTS)]
+
+    def build(r):
+        step_rng = np.random.default_rng(r)
+        s = scratch.copy()
+        for _ in range(passes):
+            # elementwise ufuncs on a multi-MB buffer: atomic, GIL-held
+            s = s * 1.0001 + 0.0001
+        xs = []
+        for cid in range(CLIENTS):
+            idx = step_rng.integers(0, n_local, size=(steps, batch))
+            xs.append(client_u8[cid][idx].astype(np.float32) / 255.0)
+        # checksum leaf ties the scratch passes into the shipped cohort so
+        # the decode work cannot be dead-code-skipped by a future refactor
+        return Cohort(r, np.arange(CLIENTS),
+                      {"x": np.stack(xs), "chk": s[:4].copy()}, None)
+
+    return build
+
+
+def _dispatch_slice(n):
+    """~0.5ms of small-op Python: the GIL-holding side of a jit dispatch."""
+    acc = np.zeros(4)
+    for i in range(n):
+        acc = acc + i
+    return float(acc[0])
+
+
+def _consume(cohort, dispatch_n):
+    """One round's consumer side: touch the batches, then interleave
+    dispatch slices with GIL-released device waits."""
+    total = float(cohort.batches["x"][0, 0, 0].sum())
+    for _ in range(DISPATCHES):
+        _dispatch_slice(dispatch_n)
+        time.sleep(DEVICE_WAIT_S)
+    return total
+
+
+def _lane(backend, build, rounds, dispatch_n):
+    """Best-of-``TRIALS`` mean per-round wall-clock (ms) for one lane."""
+    best = float("inf")
+    for _ in range(TRIALS):
+        if backend == "inline":
+            t0 = time.perf_counter()
+            for r in range(rounds):
+                _consume(build(r), dispatch_n)
+            best = min(best, (time.perf_counter() - t0) / rounds * 1e3)
+            continue
+        with make_prefetcher(backend, build, 0, rounds, depth=2) as p:
+            _consume(p.get(0), dispatch_n)   # spin-up: fork/thread + fill
+            t0 = time.perf_counter()
+            for r in range(1, rounds):
+                _consume(p.get(r), dispatch_n)
+            best = min(best,
+                       (time.perf_counter() - t0) / (rounds - 1) * 1e3)
+    return best
+
+
+def run(quick: bool = True):
+    """quick: the CI operating point; full: heavier decode + more rounds."""
+    if quick:
+        rounds, n_local, dim, steps, batch = 50, 2048, 64, 8, 16
+        scratch_elems, passes, dispatch_n = 2_000_000, 10, 300
+    else:
+        rounds, n_local, dim, steps, batch = 100, 4096, 128, 8, 32
+        scratch_elems, passes, dispatch_n = 4_000_000, 20, 600
+
+    build = _make_build_fn(n_local, dim, steps, batch, scratch_elems, passes)
+    t0 = time.perf_counter()
+    build(0)
+    decode_ms = (time.perf_counter() - t0) * 1e3
+
+    report = {"clients_per_round": CLIENTS, "rounds": rounds,
+              "decode_passes": passes, "dispatches": DISPATCHES,
+              "decode_ms": decode_ms}
+    for lane in ("inline", "thread", "process"):
+        report[f"{lane}_ms"] = _lane(lane, build, rounds, dispatch_n)
+    report["thread_speedup_vs_inline"] = (report["inline_ms"]
+                                          / report["thread_ms"])
+    report["process_speedup_vs_inline"] = (report["inline_ms"]
+                                           / report["process_ms"])
+    # the headline: the arena reader must not trail the thread backend on
+    # a decode-bound pipeline
+    report["process_speedup_vs_thread"] = (report["thread_ms"]
+                                           / report["process_ms"])
+    with open("BENCH_cohort_source.json", "w") as f:
+        json.dump(report, f, indent=2)
+    return [{
+        "name": "cohort_source/decode_bound",
+        "us_per_call": report["inline_ms"] * 1e3,
+        "derived": (f"inline={report['inline_ms']:.1f}ms,"
+                    f"thread={report['thread_ms']:.1f}ms,"
+                    f"process={report['process_ms']:.1f}ms"
+                    f"({report['process_speedup_vs_thread']:.2f}x vs thread)"),
+    }]
+
+
+if __name__ == "__main__":
+    import sys
+    for row in run(quick="--full" not in sys.argv):
+        print(row)

@@ -1,0 +1,140 @@
+"""Bench regression gate: compare fresh ``BENCH_*.json`` reports against
+the committed baselines in ``benchmarks/baselines/``.
+
+Only dimensionless ratio metrics — keys containing ``speedup`` or
+``overhead`` — are gated; absolute ``*_ms``/``*_us`` timings vary too
+much across runners to fail CI on. For ``speedup`` keys higher is
+better, for ``overhead`` keys lower is better; either direction fails
+when it regresses by more than ``--tolerance`` (default 20%).
+
+Typical CI usage, after the bench lane has produced the reports::
+
+  PYTHONPATH=src python -m benchmarks.run --only round_engine,async_engine,cohort_source
+  python -m benchmarks.check_regression
+
+To refresh the baselines after an intentional perf change, rerun the
+benches on a quiet machine and copy the reports over (the failure
+message prints this too)::
+
+  cp BENCH_round_engine.json BENCH_async_engine.json \
+     BENCH_cohort_source.json benchmarks/baselines/
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+#: fraction of the baseline value a gated metric may regress by
+DEFAULT_TOLERANCE = 0.20
+
+REFRESH_HINT = (
+    "To refresh after an intentional perf change:\n"
+    "  PYTHONPATH=src python -m benchmarks.run "
+    "--only round_engine,async_engine,cohort_source\n"
+    "  cp BENCH_round_engine.json BENCH_async_engine.json "
+    "BENCH_cohort_source.json benchmarks/baselines/"
+)
+
+
+def flatten(report: dict, prefix: str = "") -> dict:
+    """Flatten nested report sections into dotted keys
+    (``fedavg.parallel_speedup``)."""
+    out = {}
+    for k, v in report.items():
+        key = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(flatten(v, prefix=key + "."))
+        else:
+            out[key] = v
+    return out
+
+
+def gated_keys(report: dict) -> list[str]:
+    """Ratio-type metric names: dimensionless, stable across runners."""
+    return sorted(
+        k for k, v in flatten(report).items()
+        if isinstance(v, (int, float))
+        and ("speedup" in k or "overhead" in k)
+    )
+
+
+def check_report(name: str, current: dict, baseline: dict,
+                 tolerance: float) -> list[str]:
+    """Return failure messages for one BENCH report pair (empty = pass)."""
+    failures = []
+    flat_base, flat_cur = flatten(baseline), flatten(current)
+    for key in gated_keys(baseline):
+        base = float(flat_base[key])
+        if key not in flat_cur:
+            failures.append(f"{name}: metric '{key}' missing from current "
+                            f"report (baseline has {base:.3f})")
+            continue
+        cur = float(flat_cur[key])
+        if base <= 0:
+            continue  # degenerate baseline: nothing meaningful to gate
+        if "overhead" in key:
+            worse = (cur - base) / base       # overhead: higher is worse
+        else:
+            worse = (base - cur) / base       # speedup: lower is worse
+        if worse > tolerance:
+            failures.append(
+                f"{name}: {key} regressed {worse * 100:.1f}% "
+                f"(baseline {base:.3f} -> current {cur:.3f}, "
+                f"tolerance {tolerance * 100:.0f}%)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baselines", default="benchmarks/baselines",
+                    help="directory of committed BENCH_*.json baselines")
+    ap.add_argument("--current", default=".",
+                    help="directory holding the freshly produced reports")
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE,
+                    help="allowed fractional regression (default 0.20)")
+    args = ap.parse_args(argv)
+
+    baseline_dir = Path(args.baselines)
+    current_dir = Path(args.current)
+    baselines = sorted(baseline_dir.glob("BENCH_*.json"))
+    if not baselines:
+        print(f"check_regression: no BENCH_*.json under {baseline_dir}/ — "
+              "nothing to gate", file=sys.stderr)
+        return 1
+
+    failures: list[str] = []
+    checked = 0
+    for base_path in baselines:
+        cur_path = current_dir / base_path.name
+        if not cur_path.exists():
+            failures.append(f"{base_path.name}: current report not found at "
+                            f"{cur_path} (bench lane did not run it?)")
+            continue
+        with open(base_path) as f:
+            baseline = json.load(f)
+        with open(cur_path) as f:
+            current = json.load(f)
+        keys = gated_keys(baseline)
+        checked += len(keys)
+        fails = check_report(base_path.name, current, baseline,
+                             args.tolerance)
+        status = "FAIL" if fails else "ok"
+        print(f"{base_path.name}: {len(keys)} gated metric(s) ... {status}")
+        failures.extend(fails)
+
+    if failures:
+        print()
+        for msg in failures:
+            print(f"REGRESSION: {msg}")
+        print()
+        print(REFRESH_HINT)
+        return 1
+    print(f"check_regression: {checked} metric(s) within "
+          f"{args.tolerance * 100:.0f}% of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

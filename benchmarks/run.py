@@ -10,8 +10,8 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_async_engine, bench_roofline,
-                        bench_round_engine, fig1_quadratic,
+from benchmarks import (bench_async_engine, bench_cohort_source,
+                        bench_roofline, bench_round_engine, fig1_quadratic,
                         fig3_bias_variance, fig4_ess, table1_client_cost,
                         table3_benchmark_sim, table3_lr_sim)
 
@@ -25,6 +25,7 @@ BENCHES = {
     "roofline": bench_roofline,
     "round_engine": bench_round_engine,
     "async_engine": bench_async_engine,
+    "cohort_source": bench_cohort_source,
 }
 
 

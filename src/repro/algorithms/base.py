@@ -181,6 +181,15 @@ class FedAlgorithm:
     #: the engines thread the cohort's state slices through the jitted
     #: round via ``core.client_state.ClientStateStore``.
     stateful: bool = False
+    #: Whether heterogeneous local-step budgets (``fed.min_local_steps``)
+    #: are exact for this algorithm. Budgets freeze a client's idle steps
+    #: by masking its gradients to zero, which is a true no-op only when
+    #: every local step is driven purely by ``grad_fn`` (FedAvg/FedPA
+    #: family under ``client_opt="sgd"``); algorithms that add non-gradient
+    #: terms to the step (SCAFFOLD's control variate, MIME's frozen
+    #: momentum, FedProx's proximal pull) would keep moving the params
+    #: during idle steps, so they refuse the knob.
+    supports_step_budgets: bool = False
 
     def __init__(self, fed):
         """Bind the algorithm to a ``FedConfig`` (stored as ``self.fed``)."""
@@ -200,6 +209,12 @@ class FedAlgorithm:
                 f"streaming_dp=True requires algorithm='fedpa' (the online "
                 f"DP of Appendix C); {self.fed.algorithm!r} has no streaming "
                 f"client — it would be silently ignored")
+        if self.fed.min_local_steps and not self.supports_step_budgets:
+            raise ValueError(
+                f"min_local_steps > 0 (heterogeneous local-step budgets) is "
+                f"not supported by algorithm {self.fed.algorithm!r}: its "
+                f"local steps are not purely gradient-driven, so masking "
+                f"gradients would not freeze idle steps")
 
     @property
     def num_samples(self) -> int:

@@ -20,6 +20,8 @@ from repro.optim import Optimizer
 class FedAvg(FedAlgorithm):
     """Weighted-mean-delta FedAvg; the template's defaults unchanged."""
 
+    supports_step_budgets = True
+
     def make_client_update(self, grad_fn: Callable,
                            client_opt: Optimizer) -> Callable:
         """``update(params, batches) -> ClientResult`` — K local SGD steps."""

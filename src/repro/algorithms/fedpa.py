@@ -28,6 +28,7 @@ class FedPA(FedAlgorithm):
 
     supports_streaming_dp = True
     has_burn_regime = True
+    supports_step_budgets = True
 
     @property
     def num_samples(self) -> int:

@@ -1,3 +1,4 @@
+"""Checkpoint save/restore for server state (checkpoint.io)."""
 from repro.checkpoint.io import (  # noqa: F401
     latest_checkpoint,
     restore_checkpoint,

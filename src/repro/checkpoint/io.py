@@ -22,6 +22,7 @@ def _keystr(path) -> str:
 
 def save_checkpoint(ckpt_dir: str, state: Any, step: int,
                     metadata: Optional[dict] = None) -> str:
+    """Write ``state`` as ckpt_<step>.npz + a .json path/dtype manifest."""
     os.makedirs(ckpt_dir, exist_ok=True)
     leaves_with_paths = jax.tree_util.tree_flatten_with_path(state)[0]
     arrays = {}
@@ -48,6 +49,7 @@ def save_checkpoint(ckpt_dir: str, state: Any, step: int,
 
 
 def latest_checkpoint(ckpt_dir: str) -> Optional[int]:
+    """Return the highest checkpoint step in ``ckpt_dir`` (None if empty)."""
     if not os.path.isdir(ckpt_dir):
         return None
     steps = [

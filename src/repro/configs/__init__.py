@@ -57,6 +57,7 @@ ALL_ARCHS: List[str] = list(_MODULES)
 
 
 def get_config(arch: str) -> ModelConfig:
+    """Return the full-size ModelConfig registered under ``arch``."""
     if arch not in _MODULES:
         raise KeyError(f"unknown arch {arch!r}; known: {ALL_ARCHS}")
     return _MODULES[arch].config()
@@ -107,8 +108,10 @@ def make_smoke(cfg: ModelConfig) -> ModelConfig:
 
 
 def get_smoke(arch: str) -> ModelConfig:
+    """Return the mechanically shrunken smoke variant of ``arch``."""
     return make_smoke(get_config(arch))
 
 
 def all_configs() -> Dict[str, ModelConfig]:
+    """Return every registered arch name mapped to its full config."""
     return {a: get_config(a) for a in ALL_ARCHS}

@@ -32,6 +32,7 @@ class LayerSpec:
     window: int = 0              # sliding-window size; only used by mixer="swa"
 
     def __post_init__(self):
+        """Reject unknown mixer/ffn names and window-less swa layers."""
         if self.mixer not in MIXERS:
             raise ValueError(f"unknown mixer {self.mixer!r}")
         if self.ffn not in FFNS:
@@ -60,6 +61,7 @@ class MoEConfig:
 
     @property
     def enabled(self) -> bool:
+        """True when this config actually routes through experts."""
         return self.num_experts > 0
 
 
@@ -105,6 +107,7 @@ class ModelConfig:
     citation: str = ""
 
     def __post_init__(self):
+        """Derive head_dim and check head/layer-count consistency."""
         if self.head_dim == 0:
             object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
         if self.num_heads % self.num_kv_heads != 0:
@@ -118,9 +121,11 @@ class ModelConfig:
     # -- derived ------------------------------------------------------------
     @property
     def num_layers(self) -> int:
+        """Total decoder layers: pattern x repeats + tail."""
         return len(self.pattern) * self.repeats + len(self.tail)
 
     def layers(self) -> Tuple[LayerSpec, ...]:
+        """The concrete per-layer spec sequence (pattern unrolled + tail)."""
         return self.pattern * self.repeats + self.tail
 
     @property
@@ -130,14 +135,17 @@ class ModelConfig:
 
     @property
     def q_dim(self) -> int:
+        """Query projection width (num_heads x head_dim)."""
         return self.num_heads * self.head_dim
 
     @property
     def kv_dim(self) -> int:
+        """Key/value projection width (num_kv_heads x head_dim)."""
         return self.num_kv_heads * self.head_dim
 
     @property
     def lru_width(self) -> int:
+        """RG-LRU recurrent width (lru_d, defaulting to d_model)."""
         return self.lru_d or self.d_model
 
     # -- bookkeeping ----------------------------------------------------------
@@ -164,6 +172,8 @@ class ModelConfig:
 
 @dataclass(frozen=True)
 class ShapeConfig:
+    """A named input shape: (seq_len, global_batch) plus train/prefill/decode kind."""
+
     name: str
     seq_len: int
     global_batch: int
@@ -246,6 +256,37 @@ class FedConfig:
     # Cohort batch trees stacked ahead of the round loop by a background
     # host thread (data/prefetch.py); 0 = stack inline as before.
     prefetch_rounds: int = 0
+    # How prefetched cohorts are decoded off the round loop: "process"
+    # (child process + shared-memory arena — numpy decode overlaps even
+    # where the GIL would serialize it; requires numpy-leaf batch trees) or
+    # "thread" (the in-process fallback; any leaf types).
+    prefetch_backend: str = "process"
+    # --- fault-injecting cohort simulation (data/cohort_source.py) ---
+    # Per-client availability traces: "always" (every client eligible every
+    # round — today's ClientSampler behaviour) or "diurnal" (each client is
+    # up for an availability_duty fraction of an availability_period-round
+    # cycle, with a per-client phase; cohorts draw from the available set).
+    availability: str = "always"
+    availability_period: int = 24
+    availability_duty: float = 0.5
+    # P(a sampled client drops mid-round): its half-finished contribution is
+    # masked out of the weighted aggregation (survivors renormalize) and its
+    # persistent-state write is suppressed. 1.0 = every round all-dropped
+    # (zero delta), deterministic per (seed, round).
+    dropout_rate: float = 0.0
+    # P(a whole cohort misses the round deadline): the async engine applies
+    # it late, with straggler lateness added to the staleness exponent of
+    # staleness_discount**s. Requires async_rounds=True.
+    straggler_rate: float = 0.0
+    # Extra rounds of lateness a straggling cohort picks up (uniform in
+    # [1, straggler_max_lateness], deterministic per (seed, round)).
+    straggler_max_lateness: int = 2
+    # Heterogeneous per-client local-step budgets: each sampled client runs
+    # a budget drawn uniformly from [min_local_steps, local_steps] (its
+    # remaining scheduled steps are frozen — gradients masked to zero,
+    # exact only under client_opt="sgd" and a gradient-driven algorithm).
+    # 0 = homogeneous budgets (today's behaviour).
+    min_local_steps: int = 0
     # --- per-client persistent state (core/client_state.py) ---
     # Where stateful algorithms' per-client state lives: "host" (numpy
     # store, gather/scatter at the round edges — one blocking device sync
@@ -255,6 +296,7 @@ class FedConfig:
     client_state_placement: str = "host"
 
     def __post_init__(self):
+        """Validate engine/fault knobs, then the algorithm-specific ones."""
         if self.round_placement not in ("parallel", "sequential", "chunked"):
             raise ValueError(
                 f"unknown round_placement {self.round_placement!r}")
@@ -274,11 +316,49 @@ class FedConfig:
             raise ValueError("staleness_discount must be in [0, 1]")
         if self.prefetch_rounds < 0:
             raise ValueError("prefetch_rounds must be >= 0")
+        if self.prefetch_backend not in ("process", "thread"):
+            raise ValueError(
+                f"unknown prefetch_backend {self.prefetch_backend!r}; "
+                f"known: ('process', 'thread')")
+        self._validate_faults()
         # algorithm-specific checks (and the unknown-algorithm error) live on
         # the registered FedAlgorithm; late import avoids a configs<->core
         # cycle, as does ModelConfig.param_count above
         from repro.algorithms import get_algorithm  # noqa: PLC0415
         get_algorithm(self).validate()
+
+    def _validate_faults(self):
+        """Range-check the fault-injection knobs (availability, dropout,
+        stragglers, step budgets)."""
+        if self.availability not in ("always", "diurnal"):
+            raise ValueError(
+                f"unknown availability {self.availability!r}; "
+                f"known: ('always', 'diurnal')")
+        if self.availability_period <= 0:
+            raise ValueError("availability_period must be >= 1")
+        if not 0.0 < self.availability_duty <= 1.0:
+            raise ValueError("availability_duty must be in (0, 1]")
+        if not 0.0 <= self.dropout_rate <= 1.0:
+            raise ValueError("dropout_rate must be in [0, 1]")
+        if not 0.0 <= self.straggler_rate <= 1.0:
+            raise ValueError("straggler_rate must be in [0, 1]")
+        if self.straggler_rate > 0 and not self.async_rounds:
+            raise ValueError(
+                "straggler_rate > 0 requires async_rounds=True: a straggling "
+                "cohort is handed to the async engine as an extra-stale "
+                "delta; the synchronous engine has no late-application path")
+        if self.straggler_max_lateness < 1:
+            raise ValueError("straggler_max_lateness must be >= 1")
+        if self.min_local_steps < 0 or self.min_local_steps > self.local_steps:
+            raise ValueError(
+                f"min_local_steps must be in [0, local_steps="
+                f"{self.local_steps}], got {self.min_local_steps}")
+        if self.min_local_steps and self.client_opt != "sgd":
+            raise ValueError(
+                "min_local_steps > 0 freezes a client's idle steps by "
+                "masking gradients, which is exact only under plain "
+                f"client_opt='sgd' (got {self.client_opt!r}: a stateful "
+                "optimizer would keep moving the params from its buffers)")
 
     @property
     def num_samples(self) -> int:
@@ -287,6 +367,14 @@ class FedConfig:
         from repro.algorithms import get_algorithm  # noqa: PLC0415
         return get_algorithm(self).num_samples
 
+    @property
+    def fault_injection(self) -> bool:
+        """Whether any fault-simulation knob is live. False means the
+        engines trace the exact mask-free round programs of a fault-free
+        config (zero-rate configs are bitwise-identical to today's)."""
+        return (self.availability != "always" or self.dropout_rate > 0
+                or self.straggler_rate > 0 or self.min_local_steps > 0)
+
 
 # ---------------------------------------------------------------------------
 # Mesh config
@@ -294,11 +382,14 @@ class FedConfig:
 
 @dataclass(frozen=True)
 class MeshConfig:
+    """Logical device mesh: per-axis extents and their axis names."""
+
     shape: Tuple[int, ...] = (16, 16)
     axes: Tuple[str, ...] = ("data", "model")
 
     @property
     def num_devices(self) -> int:
+        """Total devices in the mesh (product of axis extents)."""
         return math.prod(self.shape)
 
     @property
@@ -312,6 +403,7 @@ class MeshConfig:
 
     @property
     def model_extent(self) -> int:
+        """Extent of the "model" axis (1 if the mesh has none)."""
         for ax, s in zip(self.axes, self.shape):
             if ax == "model":
                 return s

@@ -11,6 +11,8 @@ from dataclasses import dataclass
 
 @dataclass(frozen=True)
 class CNNConfig:
+    """Shape of the EMNIST-62 CNN (conv channels, kernel, dense width)."""
+
     name: str = "emnist-cnn"
     image_size: int = 28
     in_channels: int = 1
@@ -22,9 +24,11 @@ class CNNConfig:
 
 
 def config() -> CNNConfig:
+    """Build the paper-faithful EMNIST-62 CNN config."""
     return CNNConfig()
 
 
 def smoke() -> CNNConfig:
+    """Build a tiny CNN config for fast tests (14x14 inputs, 10 classes)."""
     return CNNConfig(name="emnist-cnn-smoke", image_size=14, conv_channels=(8, 16),
                      hidden=32, num_classes=10)

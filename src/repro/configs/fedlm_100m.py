@@ -8,6 +8,7 @@ from repro.configs.base import LayerSpec, ModelConfig
 
 
 def config() -> ModelConfig:
+    """Build the the ~100M-param FedLM dense decoder ModelConfig."""
     return ModelConfig(
         name="fedlm-100m",
         arch_type="dense",

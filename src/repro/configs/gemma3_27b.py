@@ -12,6 +12,7 @@ WINDOW = 1024
 
 
 def config() -> ModelConfig:
+    """Build the Gemma 3 27B ModelConfig."""
     local = LayerSpec(mixer="swa", ffn="dense", window=WINDOW)
     return ModelConfig(
         name="gemma3-27b",

@@ -8,6 +8,7 @@ from repro.configs.base import LayerSpec, ModelConfig
 
 
 def config() -> ModelConfig:
+    """Build the Granite 34B ModelConfig."""
     return ModelConfig(
         name="granite-34b",
         arch_type="dense",

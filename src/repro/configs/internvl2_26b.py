@@ -11,6 +11,7 @@ from repro.configs.base import LayerSpec, ModelConfig
 
 
 def config() -> ModelConfig:
+    """Build the InternVL2 26B ModelConfig."""
     return ModelConfig(
         name="internvl2-26b",
         arch_type="vlm",

@@ -12,6 +12,7 @@ CHUNK_WINDOW = 8192
 
 
 def config() -> ModelConfig:
+    """Build the Llama 4 Scout 17B-A16E ModelConfig."""
     return ModelConfig(
         name="llama4-scout-17b-a16e",
         arch_type="moe",

@@ -7,6 +7,7 @@ from repro.configs.base import LayerSpec, ModelConfig
 
 
 def config() -> ModelConfig:
+    """Build the Minitron 4B ModelConfig."""
     return ModelConfig(
         name="minitron-4b",
         arch_type="dense",

@@ -10,6 +10,7 @@ from repro.configs.base import LayerSpec, ModelConfig
 
 
 def config() -> ModelConfig:
+    """Build the MusicGen Medium ModelConfig."""
     return ModelConfig(
         name="musicgen-medium",
         arch_type="audio",

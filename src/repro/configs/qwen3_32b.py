@@ -7,6 +7,7 @@ from repro.configs.base import LayerSpec, ModelConfig
 
 
 def config() -> ModelConfig:
+    """Build the Qwen3 32B ModelConfig."""
     return ModelConfig(
         name="qwen3-32b",
         arch_type="dense",

@@ -9,6 +9,7 @@ from repro.configs.base import LayerSpec, ModelConfig, MoEConfig
 
 
 def config() -> ModelConfig:
+    """Build the Qwen3-MoE 30B-A3B ModelConfig."""
     return ModelConfig(
         name="qwen3-moe-30b-a3b",
         arch_type="moe",

@@ -12,6 +12,7 @@ WINDOW = 2048
 
 
 def config() -> ModelConfig:
+    """Build the RecurrentGemma 9B ModelConfig."""
     return ModelConfig(
         name="recurrentgemma-9b",
         arch_type="hybrid",

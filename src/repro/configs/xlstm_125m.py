@@ -8,6 +8,7 @@ from repro.configs.base import LayerSpec, ModelConfig
 
 
 def config() -> ModelConfig:
+    """Build the xLSTM 125M ModelConfig."""
     return ModelConfig(
         name="xlstm-125m",
         arch_type="ssm",

@@ -40,7 +40,7 @@ from repro.core.client_state import (ClientStateStore, DeviceClientStateStore,
                                      device_scatter, jit_donating_store)
 from repro.core.history import json_scalar
 from repro.core.server import ServerState
-from repro.data.prefetch import Cohort, CohortPrefetcher, close_prefetcher
+from repro.data.prefetch import Cohort, close_prefetcher, make_prefetcher
 
 #: build_cohort(round_idx) -> Cohort (see data/prefetch.py)
 BuildCohort = Callable[[int], Cohort]
@@ -56,7 +56,11 @@ class _InFlight(NamedTuple):
     an already-applied one on the same client. With the device store the
     three are device arrays (the traced id vector, the cohort program's
     stacked state output, the on-device stamp snapshot) and the write-back
-    never touches the host.
+    never touches the host. ``survivors`` / ``extra_staleness`` /
+    ``dropped`` are the cohort's fault annotations (``data.cohort_source``):
+    the survivors mask was already threaded through the dispatched cohort
+    program and gates the state write-back; straggler lateness is added to
+    the staleness exponent at apply time.
     """
 
     agg: object
@@ -67,6 +71,9 @@ class _InFlight(NamedTuple):
     client_ids: object = None
     new_states: object = None
     stamps: object = None
+    survivors: object = None
+    extra_staleness: int = 0
+    dropped: int = 0
 
 
 @dataclasses.dataclass
@@ -111,10 +118,14 @@ class AsyncRoundEngine:
     burn_server_fn: Optional[Callable] = None
     burn_in_rounds: int = 0
     prefetch_rounds: int = 0
+    prefetch_backend: str = "thread"
     client_store: Optional[Union[ClientStateStore,
                                  DeviceClientStateStore]] = None
     stateful: bool = False
     burn_stateful: bool = False
+    #: Record per-round ``dropped`` / ``straggled`` counts in history
+    #: (``FedSim`` sets it from ``fed.fault_injection``).
+    record_faults: bool = False
 
     def __post_init__(self):
         """Validate knobs, normalize the burn-regime flags, jit the stages."""
@@ -143,6 +154,78 @@ class AsyncRoundEngine:
                              if self.burn_server_fn is not None
                              else self._server)
 
+    def _dispatch(self, state: ServerState, cohort: Cohort, t_next: int,
+                  version: int) -> _InFlight:
+        """Dispatch one cohort program and wrap its outputs as ``_InFlight``.
+
+        Stateful regimes also carry the per-client state write-back: with
+        the device store the gather happens inside the dispatched program
+        against the store's current device buffers (the returned stamps
+        snapshot tags the CAS); with the host store the gather is a host
+        numpy slice."""
+        is_burn = t_next < self.burn_in_rounds
+        fn = self._burn if is_burn else self._cohort
+        surv = cohort.survivors
+        fault = (surv, cohort.extra_staleness, cohort.dropped)
+        if not (self.burn_stateful if is_burn else self.stateful):
+            agg, metrics = fn(state, cohort.batches, cohort.weights, surv)
+            return _InFlight(agg, metrics, version, t_next, is_burn,
+                             None, None, None, *fault)
+        if self._device_store:
+            ids = self.client_store.prepare_ids(cohort.client_ids)
+            agg, metrics, new_states, stamps = fn(
+                state, cohort.batches, cohort.weights,
+                self.client_store.device_state(), ids, surv)
+            return _InFlight(agg, metrics, version, t_next, is_burn,
+                             ids, new_states, stamps, *fault)
+        cstates, stamps = self.client_store.gather(cohort.client_ids)
+        agg, metrics, new_states = fn(state, cohort.batches, cohort.weights,
+                                      cstates, surv)
+        return _InFlight(agg, metrics, version, t_next, is_burn,
+                         cohort.client_ids, new_states, stamps, *fault)
+
+    def _write_back_states(self, fl: _InFlight, rec: dict) -> None:
+        """Apply-order client-state write-back, tagged with the gather-time
+        stamps: a client already updated by an overlapping cohort keeps
+        that fresher value (stale write dropped); a dropped client's
+        half-finished state must not land."""
+        if fl.new_states is None:
+            return
+        if self._device_store:
+            # one jitted scatter, store buffers donated; the drop count
+            # stays a device scalar until the end-of-loop sync — no
+            # per-round host pull
+            new_store, drops = self._scatter(
+                self.client_store.device_state(), fl.client_ids,
+                fl.new_states, fl.stamps, fl.survivors)
+            self.client_store.set_device_state(new_store)
+            rec["state_drops"] = drops
+        else:
+            rec["state_drops"] = self.client_store.scatter(
+                fl.client_ids, fl.new_states, fl.stamps,
+                write_mask=fl.survivors)
+
+    @staticmethod
+    def _to_history(raw: List[dict]) -> List[dict]:
+        """Convert the on-device round records into JSON-safe history in one
+        end-of-loop sync (eval metrics and the device store's state_drops
+        counters convert with the losses)."""
+        history = []
+        for rec in raw:
+            entry = {"round": rec["round"], "staleness": rec["staleness"],
+                     "loss_first": float(rec["metrics"]["loss_first"]),
+                     "loss_last": float(rec["metrics"]["loss_last"])}
+            entry["client_loss"] = entry["loss_last"]
+            for k in ("dropped", "straggled"):
+                if k in rec:
+                    entry[k] = rec[k]
+            if "state_drops" in rec:
+                entry["state_drops"] = json_scalar(rec["state_drops"])
+            entry.update({k: json_scalar(v)
+                          for k, v in rec.get("eval", {}).items()})
+            history.append(entry)
+        return history
+
     def run(
         self,
         state: ServerState,
@@ -170,8 +253,8 @@ class AsyncRoundEngine:
                 f"eval_every must be >= 1 when eval_fn is set, got "
                 f"{eval_every} (evaluate every round with eval_every=1, or "
                 f"pass eval_fn=None to disable evaluation)")
-        source = (CohortPrefetcher(build_cohort, 0, num_rounds,
-                                   depth=self.prefetch_rounds)
+        source = (make_prefetcher(self.prefetch_backend, build_cohort, 0,
+                                  num_rounds, depth=self.prefetch_rounds)
                   if self.prefetch_rounds > 0 else None)
         get = source.get if source is not None else build_cohort
         pending: deque = deque()   # _InFlight, in dispatch (== apply) order
@@ -185,39 +268,16 @@ class AsyncRoundEngine:
                 # being applied; each remembers the params version it saw
                 while (t_next < num_rounds
                        and len(pending) <= self.max_staleness):
-                    cohort = get(t_next)
-                    is_burn = t_next < self.burn_in_rounds
-                    fn = self._burn if is_burn else self._cohort
-                    if not (self.burn_stateful if is_burn else self.stateful):
-                        agg, metrics = fn(state, cohort.batches,
-                                          cohort.weights)
-                        flight = _InFlight(agg, metrics, version, t_next,
-                                           is_burn)
-                    elif self._device_store:
-                        # gather happens inside the dispatched program
-                        # against the store's current device buffers; the
-                        # returned stamps snapshot (device) tags the CAS
-                        ids = self.client_store.prepare_ids(
-                            cohort.client_ids)
-                        agg, metrics, new_states, stamps = fn(
-                            state, cohort.batches, cohort.weights,
-                            self.client_store.device_state(), ids)
-                        flight = _InFlight(agg, metrics, version, t_next,
-                                           is_burn, ids, new_states, stamps)
-                    else:
-                        cstates, stamps = self.client_store.gather(
-                            cohort.client_ids)
-                        agg, metrics, new_states = fn(
-                            state, cohort.batches, cohort.weights, cstates)
-                        flight = _InFlight(agg, metrics, version, t_next,
-                                           is_burn, cohort.client_ids,
-                                           new_states, stamps)
-                    pending.append(flight)
+                    pending.append(self._dispatch(state, get(t_next),
+                                                  t_next, version))
                     t_next += 1
 
                 fl = pending.popleft()
                 assert fl.round_idx == t_apply, (fl.round_idx, t_apply)
-                staleness = version - fl.version
+                # a straggling cohort is applied at its slot but discounted
+                # as if it were extra_staleness rounds later — the late
+                # delta rides the existing staleness_discount**s path
+                staleness = version - fl.version + fl.extra_staleness
                 server = self._burn_server if fl.is_burn else self._server
                 state = server(state, fl.agg,
                                self.staleness_discount ** staleness)
@@ -225,22 +285,10 @@ class AsyncRoundEngine:
 
                 rec = {"round": t_apply, "staleness": staleness,
                        "metrics": fl.metrics}
-                if fl.new_states is not None:
-                    # write back in apply order, tagged with the gather-time
-                    # stamps: a client already updated by an overlapping
-                    # cohort keeps that fresher value (stale write dropped)
-                    if self._device_store:
-                        # one jitted scatter, store buffers donated; the
-                        # drop count stays a device scalar until the
-                        # end-of-loop sync — no per-round host pull
-                        new_store, drops = self._scatter(
-                            self.client_store.device_state(), fl.client_ids,
-                            fl.new_states, fl.stamps)
-                        self.client_store.set_device_state(new_store)
-                        rec["state_drops"] = drops
-                    else:
-                        rec["state_drops"] = self.client_store.scatter(
-                            fl.client_ids, fl.new_states, fl.stamps)
+                if self.record_faults:
+                    rec["dropped"] = int(fl.dropped)
+                    rec["straggled"] = int(fl.extra_staleness)
+                self._write_back_states(fl, rec)
                 if eval_fn is not None and (t_apply % eval_every == 0
                                             or t_apply == num_rounds - 1):
                     rec["eval"] = eval_fn(state.params)
@@ -254,19 +302,7 @@ class AsyncRoundEngine:
                 # must not mask an exception unwinding out of the loop
                 close_prefetcher(source, unwinding=not completed)
 
-        # one sync at the end instead of one per round; eval metrics (and
-        # the device store's state_drops counters) are converted with the
-        # losses — splicing raw device arrays into history broke JSON
-        # serialization and hid a sync on first access
-        history = []
-        for rec in raw:
-            entry = {"round": rec["round"], "staleness": rec["staleness"],
-                     "loss_first": float(rec["metrics"]["loss_first"]),
-                     "loss_last": float(rec["metrics"]["loss_last"])}
-            entry["client_loss"] = entry["loss_last"]
-            if "state_drops" in rec:
-                entry["state_drops"] = json_scalar(rec["state_drops"])
-            entry.update({k: json_scalar(v)
-                          for k, v in rec.get("eval", {}).items()})
-            history.append(entry)
-        return state, history
+        # one sync at the end instead of one per round — splicing raw
+        # device arrays into history broke JSON serialization and hid a
+        # sync on first access
+        return state, self._to_history(raw)

@@ -122,7 +122,8 @@ class ClientStateStore:
         return states, self._stamps[ids].copy()
 
     def scatter(self, client_ids, updates,
-                stamps: Optional[np.ndarray] = None) -> int:
+                stamps: Optional[np.ndarray] = None,
+                write_mask: Optional[np.ndarray] = None) -> int:
         """Write a cohort's state updates back; returns #clients dropped.
 
         ``updates`` is the stacked ``ClientResult.state_update`` pytree
@@ -131,6 +132,10 @@ class ClientStateStore:
         the matching :meth:`gather`), a client whose state was updated
         since that gather keeps its newer value and this cohort's stale
         write is dropped; ``stamps=None`` writes unconditionally.
+        ``write_mask`` (optional (C,) bool/0-1) suppresses the writes *and*
+        stamp bumps of masked-out clients (fault injection's mid-round
+        dropouts: their half-finished state must not land); masked-out
+        clients do not count as CAS drops.
         """
         self._require_initialized()
         ids = np.asarray(client_ids, np.int64)
@@ -140,11 +145,17 @@ class ClientStateStore:
             write = np.ones(ids.shape[0], bool)
         else:
             write = self._stamps[ids] == np.asarray(stamps)
+        if write_mask is None:
+            wanted = ids.shape[0]
+        else:
+            wm = np.asarray(write_mask).astype(bool)
+            write &= wm
+            wanted = int(wm.sum())
         rows = ids[write]
         jax.tree_util.tree_map(
             lambda b, u: b.__setitem__(rows, u[write]), self._buffers, updates)
         self._stamps[rows] += 1
-        return int(ids.shape[0] - rows.shape[0])
+        return int(wanted - rows.shape[0])
 
     # -- checkpointing -------------------------------------------------------
     def state_dict(self):
@@ -183,7 +194,8 @@ def device_gather(store_state, client_ids):
     return states, store_state["stamps"][client_ids]
 
 
-def device_scatter(store_state, client_ids, updates, stamps=None):
+def device_scatter(store_state, client_ids, updates, stamps=None,
+                   write_mask=None):
     """Traced CAS write-back: ``(new_store_state, drops)``.
 
     The device twin of :meth:`ClientStateStore.scatter`: a client whose
@@ -192,15 +204,24 @@ def device_scatter(store_state, client_ids, updates, stamps=None):
     back the value it would have overwritten), applied stamps are bumped
     on device, and ``drops`` (the number of dropped writes) stays a device
     scalar — the caller decides when, if ever, to sync it to the host.
-    ``stamps=None`` writes unconditionally. Duplicate ``client_ids`` must
-    be rejected host-side before tracing (``prepare_ids``): XLA's scatter
-    would pick an arbitrary winner silently.
+    ``stamps=None`` writes unconditionally. ``write_mask`` (optional traced
+    (C,) 0/1 vector) additionally suppresses masked-out clients' writes and
+    stamp bumps without counting them as CAS drops — the fault-injection
+    path's mid-round dropouts. Duplicate ``client_ids`` must be rejected
+    host-side before tracing (``prepare_ids``): XLA's scatter would pick an
+    arbitrary winner silently.
     """
     buffers, all_stamps = store_state["buffers"], store_state["stamps"]
     if stamps is None:
         ok = jnp.ones(client_ids.shape[0], bool)
     else:
         ok = all_stamps[client_ids] == stamps
+    if write_mask is None:
+        wanted = jnp.asarray(client_ids.shape[0], jnp.int32)
+    else:
+        wm = jnp.asarray(write_mask) > 0
+        ok = ok & wm
+        wanted = jnp.sum(wm.astype(jnp.int32))
 
     def write(b, u):
         mask = ok.reshape((-1,) + (1,) * (u.ndim - 1))
@@ -209,7 +230,7 @@ def device_scatter(store_state, client_ids, updates, stamps=None):
 
     new_buffers = jax.tree_util.tree_map(write, buffers, updates)
     new_stamps = all_stamps.at[client_ids].add(ok.astype(all_stamps.dtype))
-    drops = client_ids.shape[0] - jnp.sum(ok.astype(jnp.int32))
+    drops = wanted - jnp.sum(ok.astype(jnp.int32))
     return {"buffers": new_buffers, "stamps": new_stamps}, drops
 
 

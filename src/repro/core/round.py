@@ -33,11 +33,10 @@ from repro.core.history import json_scalar
 from repro.core.round_program import (make_cohort_program,
                                       make_round_program,
                                       make_server_program)
-from repro.core.server import (ServerState, check_weight_total,
-                               init_server_state)
-from repro.data.prefetch import (Cohort, CohortPrefetcher, close_prefetcher,
+from repro.core.server import ServerState, init_server_state
+from repro.data.cohort_source import CohortSource
+from repro.data.prefetch import (Cohort, close_prefetcher, make_prefetcher,
                                  stack_host)
-from repro.data.sampling import ClientSampler
 from repro.optim import get_optimizer
 
 
@@ -63,8 +62,12 @@ class FedSim:
 
     def __post_init__(self):
         """Build (and jit) the round programs and the client-state store."""
-        self.sampler = ClientSampler(self.num_clients,
-                                     self.fed.clients_per_round, self.seed)
+        self.source = CohortSource(self.fed, self.num_clients,
+                                   self.stack_cohort, self.client_weights,
+                                   self.seed)
+        # ClientSampler API parity (the source delegates to the same
+        # stream, so zero-fault cohorts are bitwise ClientSampler's)
+        self.sampler = self.source.sampler
         self.server_opt = get_optimizer(self.fed.server_opt,
                                         self.fed.server_lr,
                                         self.fed.server_momentum)
@@ -131,17 +134,10 @@ class FedSim:
 
     def cohort(self, round_idx: int) -> Cohort:
         """Sample and materialize one round's inputs (the host-side work the
-        prefetcher runs ahead of the round loop)."""
-        client_ids = self.sampler.sample(round_idx)
-        batches = self.stack_cohort(client_ids, round_idx)
-        if self.client_weights is None:
-            weights = None
-        else:
-            weights = np.asarray([self.client_weights[int(c)]
-                                  for c in client_ids], np.float32)
-            check_weight_total(float(weights.sum()), weights.shape,
-                               context=f"round {round_idx}: ")
-        return Cohort(round_idx, client_ids, batches, weights)
+        prefetcher runs ahead of the round loop) — delegated to the
+        fault-injecting ``CohortSource`` (fault-free configs reproduce the
+        old sampler's cohorts bitwise)."""
+        return self.source.cohort(round_idx)
 
     def round(self, state: ServerState, round_idx: int,
               cohort: Optional[Cohort] = None):
@@ -155,23 +151,30 @@ class FedSim:
         round_fn = self._burn_round if is_burn else self._round
         stateful = (self._burn_stateful
                     if is_burn and self._has_burn_regime else self._stateful)
+        survivors = cohort.survivors   # None traces the mask-free program
         if stateful and self._state_placement == "device":
             ids = self.client_store.prepare_ids(cohort.client_ids)
             state, metrics, new_store = round_fn(
                 state, cohort.batches, cohort.weights,
-                self.client_store.device_state(), ids)
+                self.client_store.device_state(), ids, survivors)
             self.client_store.set_device_state(new_store)
         elif stateful:
             cstates, stamps = self.client_store.gather(cohort.client_ids)
             state, metrics, new_states = round_fn(
-                state, cohort.batches, cohort.weights, cstates)
-            self.client_store.scatter(cohort.client_ids, new_states, stamps)
+                state, cohort.batches, cohort.weights, cstates, survivors)
+            # a dropped client's half-finished state must not land
+            self.client_store.scatter(cohort.client_ids, new_states, stamps,
+                                      write_mask=survivors)
         else:
-            state, metrics = round_fn(state, cohort.batches, cohort.weights)
+            state, metrics = round_fn(state, cohort.batches, cohort.weights,
+                                      survivors)
         loss_first = float(metrics["loss_first"])
         loss_last = float(metrics["loss_last"])
-        return state, {"client_loss": loss_last, "loss_first": loss_first,
-                       "loss_last": loss_last}
+        record = {"client_loss": loss_last, "loss_first": loss_first,
+                  "loss_last": loss_last}
+        if survivors is not None:
+            record["dropped"] = int(cohort.dropped)
+        return state, record
 
     def run(self, params, num_rounds: int,
             eval_fn: Optional[Callable] = None, eval_every: int = 1):
@@ -186,8 +189,9 @@ class FedSim:
         if self.fed.async_rounds:
             return self._run_async(state, num_rounds, eval_fn, eval_every)
 
-        prefetch = (CohortPrefetcher(self.cohort, 0, num_rounds,
-                                     depth=self.fed.prefetch_rounds)
+        prefetch = (make_prefetcher(self.fed.prefetch_backend, self.cohort,
+                                    0, num_rounds,
+                                    depth=self.fed.prefetch_rounds)
                     if self.fed.prefetch_rounds > 0 else None)
         history: List[dict] = []
         completed = False
@@ -247,7 +251,9 @@ class FedSim:
             max_staleness=self.fed.max_staleness,
             staleness_discount=self.fed.staleness_discount,
             prefetch_rounds=self.fed.prefetch_rounds,
+            prefetch_backend=self.fed.prefetch_backend,
             client_store=self.client_store,
             stateful=self._stateful,
             burn_stateful=self._burn_stateful,
+            record_faults=self.fed.fault_injection,
         )

@@ -34,7 +34,7 @@ to floating-point reduction order (tests/test_round_engine.py).
 """
 from __future__ import annotations
 
-from typing import Callable, Optional, Tuple
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -83,6 +83,165 @@ def _resolve_chunk(fed: FedConfig, chunk_size: Optional[int],
     return min(c, num_clients)
 
 
+class _CohortCtx(NamedTuple):
+    """Everything the placement runners need, resolved once at build time."""
+    alg: object
+    client_update: Callable
+    spmd_axes: Optional[Tuple[str, ...]]
+    stateful: bool
+    constrain_accum: Optional[Callable]
+    fed: FedConfig
+    place: str
+    chunk_size: Optional[int]
+    prepare_params: Optional[Callable]
+    server_opt: Optimizer
+
+
+def _budget_masked(grad_fn: Callable) -> Callable:
+    """Wrap ``grad_fn`` with the heterogeneous local-step budget mask.
+
+    A client past its budget runs "idle" steps — gradients masked to zero
+    so plain-SGD params freeze (exactness enforced by FedConfig:
+    client_opt="sgd" and a gradient-driven algorithm). The per-step 0/1
+    budget mask rides in the batch dict as the "_active" leaf, (C, K)
+    alongside the data's (C, K, ...) leaves — data/cohort_source.py
+    injects it."""
+    def masked_grad_fn(params, batch):
+        if not isinstance(batch, dict) or "_active" not in batch:
+            raise ValueError(
+                "min_local_steps > 0 needs dict batches carrying the "
+                "'_active' per-step budget mask "
+                "(data/cohort_source.py injects it)")
+        active = jnp.asarray(batch["_active"], jnp.float32)
+        data = {k: v for k, v in batch.items() if k != "_active"}
+        loss, grads = grad_fn(params, data)
+        return loss, tm.tmap(lambda g: g * active.astype(g.dtype), grads)
+
+    return masked_grad_fn
+
+
+def _client_axes(ctx: _CohortCtx, n_extra: int):
+    return (None, 0) + ((0,) if ctx.stateful else ()) + (None,) * n_extra
+
+
+def _run_parallel(ctx, params, client_batches, weights, extras, cstates):
+    vm = jax.vmap(ctx.client_update, in_axes=_client_axes(ctx, len(extras)),
+                  spmd_axis_name=ctx.spmd_axes)
+    res = vm(params, client_batches,
+             *((cstates,) if ctx.stateful else ()), *extras)
+    return (ctx.alg.reduce_stacked(res.payload, weights), res.metrics,
+            res.state_update)
+
+
+def _zero_accum(ctx, params):
+    acc = ctx.alg.init_accum(params)
+    if ctx.constrain_accum is not None:
+        acc = ctx.alg.map_components(
+            lambda z: ctx.constrain_accum(z, params), acc)
+    return acc
+
+
+def _run_sequential(ctx, params, client_batches, weights, extras, cstates):
+    def body(acc, xs):
+        batches, w, cs = xs
+        res = ctx.client_update(params, batches,
+                                *((cs,) if ctx.stateful else ()), *extras)
+        return (ctx.alg.accumulate(acc, res.payload, w),
+                (res.metrics, res.state_update))
+
+    agg, (metrics, new_states) = jax.lax.scan(
+        body, _zero_accum(ctx, params),
+        (client_batches, weights, cstates if ctx.stateful else ()))
+    return agg, metrics, new_states
+
+
+def _run_chunked(ctx, params, client_batches, weights, extras, cstates,
+                 chunk):
+    C = weights.shape[0]
+    n_chunks = -(-C // chunk)
+    pad = n_chunks * chunk - C
+
+    def pad_lead(x):
+        return jnp.concatenate([x, jnp.repeat(x[:1], pad, axis=0)],
+                               axis=0)
+
+    if pad:
+        # zero-weight duplicates of client 0 square off the last chunk
+        client_batches = tm.tmap(pad_lead, client_batches)
+        weights = jnp.concatenate([weights, jnp.zeros((pad,), weights.dtype)])
+        if ctx.stateful:
+            cstates = tm.tmap(pad_lead, cstates)
+
+    def to_chunks(x):
+        return x.reshape((n_chunks, chunk) + x.shape[1:])
+
+    chunked = tm.tmap(to_chunks, client_batches)
+    w_chunks = weights.reshape(n_chunks, chunk)
+    cs_chunks = tm.tmap(to_chunks, cstates) if ctx.stateful else ()
+
+    def body(acc, xs):
+        batches, w, cs = xs
+        vm = jax.vmap(ctx.client_update,
+                      in_axes=_client_axes(ctx, len(extras)),
+                      spmd_axis_name=ctx.spmd_axes)
+        res = vm(params, batches,
+                 *((cs,) if ctx.stateful else ()), *extras)
+        acc = tm.tmap(lambda a, c: a + c.astype(a.dtype),
+                      acc, ctx.alg.reduce_stacked(res.payload, w))
+        return acc, (res.metrics, res.state_update)
+
+    agg, (metrics, new_states) = jax.lax.scan(
+        body, _zero_accum(ctx, params), (chunked, w_chunks, cs_chunks))
+    # (n_chunks, chunk) -> (C,) with the padding sliced off
+    unpad = lambda x: x.reshape((n_chunks * chunk,) + x.shape[2:])[:C]
+    metrics = tm.tmap(unpad, metrics)
+    if ctx.stateful:
+        new_states = tm.tmap(unpad, new_states)
+    return agg, metrics, new_states
+
+
+def _run_cohort(ctx: _CohortCtx, state: ServerState, client_batches,
+                client_weights, client_states, survivor_mask=None):
+    """One cohort pass through the resolved placement runner."""
+    C = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
+    params = (state.params if ctx.prepare_params is None
+              else ctx.prepare_params(state.params))
+    extras = ctx.alg.broadcast(state, ctx.server_opt)
+    if survivor_mask is not None:
+        mask = jnp.asarray(survivor_mask, jnp.float32)
+        base = (jnp.ones((C,), jnp.float32) if client_weights is None
+                else jnp.asarray(client_weights, jnp.float32))
+        client_weights = base * mask
+    weights = normalized_weights(client_weights, C)
+
+    if ctx.place == "parallel":
+        agg, metrics, new_states = _run_parallel(
+            ctx, params, client_batches, weights, extras, client_states)
+    elif ctx.place == "sequential":
+        agg, metrics, new_states = _run_sequential(
+            ctx, params, client_batches, weights, extras, client_states)
+    else:
+        chunk = _resolve_chunk(ctx.fed, ctx.chunk_size, C)
+        agg, metrics, new_states = _run_chunked(
+            ctx, params, client_batches, weights, extras, client_states,
+            chunk)
+
+    if survivor_mask is None:
+        losses = {
+            "loss_first": jnp.mean(metrics["loss_first"]),
+            "loss_last": jnp.mean(metrics["loss_last"]),
+        }
+    else:
+        # survivor-only means; an all-dropped round reports 0.0 losses
+        mask = jnp.asarray(survivor_mask, jnp.float32)
+        n = jnp.maximum(jnp.sum(mask), 1.0)
+        losses = {
+            "loss_first": jnp.sum(metrics["loss_first"] * mask) / n,
+            "loss_last": jnp.sum(metrics["loss_last"] * mask) / n,
+        }
+    return agg, losses, new_states
+
+
 def make_cohort_program(
     grad_fn: Callable,
     fed: FedConfig,
@@ -109,6 +268,17 @@ def make_cohort_program(
     ``(agg, {"loss_first", "loss_last"})`` with the losses averaged
     (unweighted) over the cohort; ``agg`` feeds ``make_server_program``'s
     server stage, which finalizes it into the pseudo-gradient.
+
+    ``survivor_mask`` (optional trailing argument, shape (C,) float 0/1) is
+    the fault-injection path (``data/cohort_source.py``): a client whose
+    mask entry is 0 dropped out mid-round, so its weight is zeroed *before*
+    normalization — the survivors' weighted partial aggregation renormalizes
+    over the survivors only — and its losses are excluded from the cohort
+    means. An all-zero mask degrades to a zero aggregate (traced
+    ``normalized_weights`` yields zero weights, never NaN), i.e. the server
+    sees a zero pseudo-gradient for an all-dropped round. ``None`` (the
+    default) traces the exact mask-free program of the fault-free engine,
+    so zero-rate fault configs are bitwise-identical to today's rounds.
 
     For a *stateful* algorithm (``alg.stateful``) the signature depends on
     the client-state placement (``state_placement``, default
@@ -147,117 +317,24 @@ def make_cohort_program(
                                              eff.client_momentum)
     server_opt = server_opt or get_optimizer(fed.server_opt, fed.server_lr,
                                              fed.server_momentum)
+    if eff.min_local_steps:
+        grad_fn = _budget_masked(grad_fn)
+
     client_update = alg.make_client_update(grad_fn, client_opt)
     if wrap_client is not None:
         client_update = wrap_client(client_update)
-    place = resolve_placement(fed, placement)
     state_place = resolve_state_placement(fed, state_placement)
-    stateful = alg.stateful
+    ctx = _CohortCtx(
+        alg=alg, client_update=client_update, spmd_axes=spmd_axes,
+        stateful=alg.stateful, constrain_accum=constrain_accum, fed=fed,
+        place=resolve_placement(fed, placement), chunk_size=chunk_size,
+        prepare_params=prepare_params, server_opt=server_opt,
+    )
 
-    def _client_axes(n_extra: int):
-        return (None, 0) + ((0,) if stateful else ()) + (None,) * n_extra
-
-    def _run_parallel(params, client_batches, weights, extras, cstates):
-        vm = jax.vmap(client_update, in_axes=_client_axes(len(extras)),
-                      spmd_axis_name=spmd_axes)
-        res = vm(params, client_batches,
-                 *((cstates,) if stateful else ()), *extras)
-        return (alg.reduce_stacked(res.payload, weights), res.metrics,
-                res.state_update)
-
-    def _zero_accum(params):
-        acc = alg.init_accum(params)
-        if constrain_accum is not None:
-            acc = alg.map_components(lambda z: constrain_accum(z, params),
-                                     acc)
-        return acc
-
-    def _run_sequential(params, client_batches, weights, extras, cstates):
-        def body(acc, xs):
-            batches, w, cs = xs
-            res = client_update(params, batches,
-                                *((cs,) if stateful else ()), *extras)
-            return (alg.accumulate(acc, res.payload, w),
-                    (res.metrics, res.state_update))
-
-        agg, (metrics, new_states) = jax.lax.scan(
-            body, _zero_accum(params),
-            (client_batches, weights, cstates if stateful else ()))
-        return agg, metrics, new_states
-
-    def _run_chunked(params, client_batches, weights, extras, cstates,
-                     chunk):
-        C = weights.shape[0]
-        n_chunks = -(-C // chunk)
-        pad = n_chunks * chunk - C
-
-        def pad_lead(x):
-            return jnp.concatenate([x, jnp.repeat(x[:1], pad, axis=0)],
-                                   axis=0)
-
-        if pad:
-            # zero-weight duplicates of client 0 square off the last chunk
-            client_batches = tm.tmap(pad_lead, client_batches)
-            weights = jnp.concatenate([weights, jnp.zeros((pad,), weights.dtype)])
-            if stateful:
-                cstates = tm.tmap(pad_lead, cstates)
-
-        def to_chunks(x):
-            return x.reshape((n_chunks, chunk) + x.shape[1:])
-
-        chunked = tm.tmap(to_chunks, client_batches)
-        w_chunks = weights.reshape(n_chunks, chunk)
-        cs_chunks = tm.tmap(to_chunks, cstates) if stateful else ()
-
-        def body(acc, xs):
-            batches, w, cs = xs
-            vm = jax.vmap(client_update, in_axes=_client_axes(len(extras)),
-                          spmd_axis_name=spmd_axes)
-            res = vm(params, batches,
-                     *((cs,) if stateful else ()), *extras)
-            acc = tm.tmap(lambda a, c: a + c.astype(a.dtype),
-                          acc, alg.reduce_stacked(res.payload, w))
-            return acc, (res.metrics, res.state_update)
-
-        agg, (metrics, new_states) = jax.lax.scan(
-            body, _zero_accum(params), (chunked, w_chunks, cs_chunks))
-        # (n_chunks, chunk) -> (C,) with the padding sliced off
-        unpad = lambda x: x.reshape((n_chunks * chunk,) + x.shape[2:])[:C]
-        metrics = tm.tmap(unpad, metrics)
-        if stateful:
-            new_states = tm.tmap(unpad, new_states)
-        return agg, metrics, new_states
-
-    def _run_cohort(state: ServerState, client_batches, client_weights,
-                    client_states):
-        C = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
-        params = (state.params if prepare_params is None
-                  else prepare_params(state.params))
-        extras = alg.broadcast(state, server_opt)
-        weights = normalized_weights(client_weights, C)
-
-        if place == "parallel":
-            agg, metrics, new_states = _run_parallel(
-                params, client_batches, weights, extras, client_states)
-        elif place == "sequential":
-            agg, metrics, new_states = _run_sequential(
-                params, client_batches, weights, extras, client_states)
-        else:
-            chunk = _resolve_chunk(fed, chunk_size, C)
-            agg, metrics, new_states = _run_chunked(
-                params, client_batches, weights, extras, client_states,
-                chunk)
-
-        losses = {
-            "loss_first": jnp.mean(metrics["loss_first"]),
-            "loss_last": jnp.mean(metrics["loss_last"]),
-        }
-        return agg, losses, new_states
-
-    if stateful and state_place == "device":
+    if ctx.stateful and state_place == "device":
         def cohort_fn(state: ServerState, client_batches,
                       client_weights=None, store_state=None,
-                      client_ids=None):
+                      client_ids=None, survivor_mask=None):
             if store_state is None or client_ids is None:
                 raise ValueError(
                     f"algorithm {alg.name!r} is stateful with the device "
@@ -266,23 +343,25 @@ def make_cohort_program(
                     f"cohort's client_ids (prepare_ids)")
             cstates, stamps = device_gather(store_state, client_ids)
             agg, losses, new_states = _run_cohort(
-                state, client_batches, client_weights, cstates)
+                ctx, state, client_batches, client_weights, cstates,
+                survivor_mask)
             return agg, losses, new_states, stamps
-    elif stateful:
+    elif ctx.stateful:
         def cohort_fn(state: ServerState, client_batches,
-                      client_weights=None, client_states=None):
+                      client_weights=None, client_states=None,
+                      survivor_mask=None):
             if client_states is None:
                 raise ValueError(
                     f"algorithm {alg.name!r} is stateful: cohort_fn needs "
                     f"the gathered client_states slice "
                     f"(ClientStateStore.gather)")
-            return _run_cohort(state, client_batches, client_weights,
-                               client_states)
+            return _run_cohort(ctx, state, client_batches, client_weights,
+                               client_states, survivor_mask)
     else:
         def cohort_fn(state: ServerState, client_batches,
-                      client_weights=None):
-            agg, losses, _ = _run_cohort(state, client_batches,
-                                         client_weights, None)
+                      client_weights=None, survivor_mask=None):
+            agg, losses, _ = _run_cohort(ctx, state, client_batches,
+                                         client_weights, None, survivor_mask)
             return agg, losses
 
     return cohort_fn
@@ -400,25 +479,30 @@ def make_round_program(
 
     if stateful and state_place == "device":
         def round_fn(state: ServerState, client_batches, client_weights=None,
-                     store_state=None, client_ids=None):
+                     store_state=None, client_ids=None, survivor_mask=None):
             agg, metrics, new_states, stamps = cohort_fn(
                 state, client_batches, client_weights, store_state,
-                client_ids)
+                client_ids, survivor_mask)
             # within one program nothing can write between the gather and
             # this scatter, so the CAS always succeeds (drops == 0 by
-            # construction; discarded)
+            # construction; discarded). A survivor mask suppresses the
+            # dropped clients' writes: their state must not land.
             new_store, _ = device_scatter(store_state, client_ids,
-                                          new_states, stamps)
+                                          new_states, stamps,
+                                          write_mask=survivor_mask)
             return server_fn(state, agg), metrics, new_store
     elif stateful:
         def round_fn(state: ServerState, client_batches, client_weights=None,
-                     client_states=None):
+                     client_states=None, survivor_mask=None):
             agg, metrics, new_states = cohort_fn(
-                state, client_batches, client_weights, client_states)
+                state, client_batches, client_weights, client_states,
+                survivor_mask)
             return server_fn(state, agg), metrics, new_states
     else:
-        def round_fn(state: ServerState, client_batches, client_weights=None):
-            agg, metrics = cohort_fn(state, client_batches, client_weights)
+        def round_fn(state: ServerState, client_batches, client_weights=None,
+                     survivor_mask=None):
+            agg, metrics = cohort_fn(state, client_batches, client_weights,
+                                     survivor_mask)
             return server_fn(state, agg), metrics
 
     return round_fn

@@ -1,9 +1,12 @@
 """Data pipelines: synthetic federated problems, sampling, prefetching."""
+from repro.data.cohort_source import CohortSource, RoundFaults  # noqa: F401
 from repro.data.dirichlet import make_dirichlet_classification  # noqa: F401
 from repro.data.lm_synthetic import SyntheticLMData  # noqa: F401
 from repro.data.prefetch import (  # noqa: F401
     Cohort,
     CohortPrefetcher,
+    ProcessCohortPrefetcher,
+    make_prefetcher,
     stack_host,
 )
 from repro.data.sampling import ClientSampler  # noqa: F401

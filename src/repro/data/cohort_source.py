@@ -1,0 +1,232 @@
+"""Fault-injecting cohort source: the cross-device regime made unreliable.
+
+The paper's cross-device setting assumes the average client participates in
+roughly one round — but ``ClientSampler`` still draws from an always-on,
+always-finishing population, so none of the unreliable-participation
+conditions that motivated federated optimization in the first place
+(Konecny et al., arXiv:1610.02527) are ever exercised.
+:class:`CohortSource` is the streaming layer that injects them, strictly on
+the host side of the engine boundary:
+
+* **Diurnal availability** (``fed.availability="diurnal"``) — each client
+  is up for an ``availability_duty`` fraction of an
+  ``availability_period``-round cycle, with a per-client phase; cohorts
+  draw only from the currently-available set. If fewer than
+  ``clients_per_round`` clients are up, the cohort is topped up from the
+  unavailable set to keep the jitted round's shapes static, and the
+  conscripted clients are masked out as non-survivors (they were scheduled
+  but never report).
+* **Mid-round dropout** (``fed.dropout_rate``) — each sampled client drops
+  with probability ``dropout_rate``; the cohort ships with a (C,) float
+  0/1 ``survivors`` mask that the round programs thread through the
+  weighted aggregation (survivors renormalize; an all-dropped round
+  degrades to a zero delta) and the client-state stores honour as a write
+  mask (a dropped client's half-finished state never lands).
+* **Straggler timeouts** (``fed.straggler_rate``, async engine only) — a
+  whole cohort misses its round deadline with probability
+  ``straggler_rate`` and picks up ``extra_staleness`` in
+  ``[1, straggler_max_lateness]`` rounds of lateness; the async engine
+  adds it to the staleness exponent, so the late delta is discounted by
+  the existing ``staleness_discount ** s`` path.
+* **Heterogeneous local-step budgets** (``fed.min_local_steps``) — each
+  sampled client runs a budget drawn uniformly from
+  ``[min_local_steps, local_steps]``; the remaining scheduled steps are
+  frozen by the engine's gradient masking (see ``make_cohort_program``),
+  keyed off the ``"_active"`` (C, K) leaf this source injects into dict
+  batch trees.
+
+Every draw is a pure function of ``(seed, round_idx)``:
+:meth:`CohortSource.draw` replays a round's cohort ids and fault
+annotations bit-identically without materializing batches, which is what
+makes fault histories reproducible. With every fault knob at its default,
+:meth:`cohort` reproduces today's ``ClientSampler`` cohorts bitwise (same
+underlying rng stream) and ships ``survivors=None``, so the engines trace
+the exact mask-free round programs of a fault-free config.
+
+Deterministic stream layout under one run seed (``np.random.SeedSequence``
+spawn keys; keys of different lengths can never collide):
+
+* ``(round,)`` — the cohort draw (``ClientSampler``'s own stream,
+  delegated so the zero-fault path is bit-identical);
+* ``(round, k)`` — per-round fault streams (dropout / straggler /
+  budgets);
+* ``(0, 0, k)`` — run-static streams (the per-client diurnal phases).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import numpy as np
+
+from repro.configs.base import FedConfig
+from repro.data.prefetch import Cohort
+from repro.data.sampling import ClientSampler
+
+#: Per-round fault streams: spawn key ``(round_idx, k)``.
+_STREAM_DROPOUT = 1
+_STREAM_STRAGGLER = 2
+_STREAM_BUDGETS = 3
+#: Run-static streams: spawn key ``(0, 0, k)``.
+_STATIC_PHASES = 1
+
+
+def _rng(seed: int, *key: int) -> np.random.Generator:
+    """The deterministic generator for one ``(seed, *key)`` stream."""
+    return np.random.default_rng(
+        np.random.SeedSequence(entropy=seed, spawn_key=key))
+
+
+class RoundFaults(NamedTuple):
+    """One round's fault draw — a pure function of ``(seed, round_idx)``.
+
+    ``survivors`` is the (C,) float 0/1 mid-round mask (None when this run
+    has no mask faults, so the engines trace mask-free programs);
+    ``budgets`` the per-client local-step budgets (None = homogeneous);
+    ``extra_staleness`` the cohort's straggler lateness in rounds (0 = on
+    time); ``dropped`` the count of masked-out cohort slots.
+    """
+
+    survivors: Optional[np.ndarray]
+    budgets: Optional[np.ndarray]
+    extra_staleness: int
+    dropped: int
+
+
+class CohortSource:
+    """Streaming cohort source with deterministic fault injection.
+
+    ``stack_batches(client_ids, round_idx)`` materializes the cohort's
+    stacked (C, K, ...) batch tree (``FedSim.stack_cohort`` or the launch
+    scripts' equivalents); everything else — sampling, availability,
+    dropout, stragglers, budgets, per-client weights — lives here, so the
+    engines consume finished :class:`~repro.data.prefetch.Cohort` records
+    and ``CohortPrefetcher`` / the process-based prefetcher can build them
+    off the round loop.
+    """
+
+    def __init__(self, fed: FedConfig, num_clients: int,
+                 stack_batches: Callable[[np.ndarray, int], object],
+                 client_weights: Optional[np.ndarray] = None, seed: int = 0):
+        """Bind the config, population, batch builder, and run seed."""
+        self.fed = fed
+        self.num_clients = num_clients
+        self.stack_batches = stack_batches
+        self.client_weights = client_weights
+        self.seed = seed
+        # the zero-fault cohort draw IS ClientSampler's (same stream), so
+        # zero-rate configs reproduce its cohorts bitwise
+        self.sampler = ClientSampler(num_clients, fed.clients_per_round,
+                                     seed)
+        self._phases = (_rng(seed, 0, 0, _STATIC_PHASES).random(num_clients)
+                        if fed.availability == "diurnal" else None)
+        #: Whether cohorts carry a survivors mask at all — fixed per run so
+        #: every round traces the same jitted program (a per-round
+        #: None/array flip would recompile).
+        self.mask_faults = (fed.availability != "always"
+                            or fed.dropout_rate > 0)
+
+    def available(self, round_idx: int) -> np.ndarray:
+        """(N,) bool availability mask for round ``round_idx``.
+
+        Diurnal model: client ``i`` is up iff the fractional position of
+        ``round_idx / availability_period + phase_i`` within its cycle is
+        below ``availability_duty``. ``availability="always"`` is all-ones.
+        """
+        if self._phases is None:
+            return np.ones(self.num_clients, bool)
+        fed = self.fed
+        pos = (round_idx / fed.availability_period + self._phases) % 1.0
+        return pos < fed.availability_duty
+
+    def sample(self, round_idx: int) -> np.ndarray:
+        """Round ``round_idx``'s cohort ids (``ClientSampler`` API parity)."""
+        return self.draw(round_idx)[0]
+
+    def draw(self, round_idx: int):
+        """``(client_ids, RoundFaults)`` — the full replayable round draw.
+
+        No batches are materialized, so tests and history tooling can
+        replay a run's fault matrix from ``(seed, round)`` alone.
+        """
+        fed = self.fed
+        M = fed.clients_per_round
+        if self._phases is None:
+            ids = self.sampler.sample(round_idx)
+            conscripted = np.zeros(M, bool)
+        else:
+            avail = self.available(round_idx)
+            up = np.flatnonzero(avail)
+            rng = _rng(self.seed, round_idx)
+            if up.shape[0] >= M:
+                ids = up[rng.choice(up.shape[0], size=M, replace=False)]
+                conscripted = np.zeros(M, bool)
+            else:
+                # not enough clients up: conscript the shortfall from the
+                # unavailable set (masked out below) so the round program's
+                # cohort shape stays static
+                down = np.flatnonzero(~avail)
+                extra = down[rng.choice(down.shape[0],
+                                        size=M - up.shape[0],
+                                        replace=False)]
+                ids = np.concatenate([up, extra])
+                conscripted = np.concatenate(
+                    [np.zeros(up.shape[0], bool),
+                     np.ones(extra.shape[0], bool)])
+
+        dead = conscripted
+        if fed.dropout_rate > 0:
+            drops = (_rng(self.seed, round_idx, _STREAM_DROPOUT).random(M)
+                     < fed.dropout_rate)
+            dead = dead | drops
+        survivors = (1.0 - dead).astype(np.float32) if self.mask_faults \
+            else None
+
+        extra_staleness = 0
+        if fed.straggler_rate > 0:
+            srng = _rng(self.seed, round_idx, _STREAM_STRAGGLER)
+            if srng.random() < fed.straggler_rate:
+                extra_staleness = int(
+                    srng.integers(1, fed.straggler_max_lateness + 1))
+
+        budgets = None
+        if fed.min_local_steps:
+            budgets = _rng(self.seed, round_idx, _STREAM_BUDGETS).integers(
+                fed.min_local_steps, fed.local_steps + 1, size=M)
+
+        return ids, RoundFaults(survivors, budgets, extra_staleness,
+                                int(dead.sum()))
+
+    def cohort(self, round_idx: int) -> Cohort:
+        """Materialize round ``round_idx``: the prefetchers' build_fn.
+
+        Stacks the cohort's batches, injects the ``"_active"`` (C, K)
+        budget mask into dict batch trees when budgets are on, resolves
+        per-client weights (eagerly checked — the raw, pre-mask weights
+        must be positive; the survivor masking happens traced, inside the
+        round program, where an all-zero sum degrades to zero weights),
+        and attaches the round's fault annotations.
+        """
+        ids, faults = self.draw(round_idx)
+        batches = self.stack_batches(ids, round_idx)
+        if faults.budgets is not None:
+            if not isinstance(batches, dict):
+                raise TypeError(
+                    f"min_local_steps > 0 needs dict batch trees to carry "
+                    f"the '_active' per-step budget mask; got "
+                    f"{type(batches).__name__}")
+            K = self.fed.local_steps
+            active = np.arange(K)[None, :] < faults.budgets[:, None]
+            batches = dict(batches)
+            batches["_active"] = active.astype(np.float32)
+        if self.client_weights is None:
+            weights = None
+        else:
+            # late import: data -> core.server -> core/__init__ -> round ->
+            # data.cohort_source would cycle at module load
+            from repro.core.server import check_weight_total  # noqa: PLC0415
+            weights = np.asarray([self.client_weights[int(c)] for c in ids],
+                                 np.float32)
+            check_weight_total(float(weights.sum()), weights.shape,
+                               context=f"round {round_idx}: ")
+        return Cohort(round_idx, ids, batches, weights, faults.survivors,
+                      faults.extra_staleness, faults.dropped)

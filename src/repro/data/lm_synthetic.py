@@ -56,29 +56,35 @@ class SyntheticLMData:
         return np.concatenate([base[:1], nxt]).astype(np.int32)
 
     def client_batches(self, client_id: int, num_steps: int, batch: int,
-                       seq_len: int, salt: int = 0):
+                       seq_len: int, salt: int = 0, host: bool = False):
         """(num_steps, batch, seq_len+1) token ids: input = [:, :, :-1],
-        target = [:, :, 1:]."""
+        target = [:, :, 1:]. ``host=True`` returns the numpy array the
+        stream is generated as (required by the process-based cohort
+        prefetcher, whose forked builder must stay off the jax runtime)."""
         need = num_steps * batch * (seq_len + 1)
         toks = self.client_tokens(client_id, need, salt)
         arr = toks.reshape(num_steps, batch, seq_len + 1)
-        return jnp.asarray(arr)
+        return arr if host else jnp.asarray(arr)
 
     def round_batches(self, client_ids, num_steps: int, batch: int,
-                      seq_len: int, round_idx: int = 0):
+                      seq_len: int, round_idx: int = 0, host: bool = False):
         """Stacked per-client batches for one federated round:
-        (num_clients, num_steps, batch, seq_len+1)."""
+        (num_clients, num_steps, batch, seq_len+1); ``host=True`` keeps the
+        stack in numpy (process-prefetcher-safe)."""
         per = [
-            self.client_batches(cid, num_steps, batch, seq_len, salt=round_idx)
+            self.client_batches(cid, num_steps, batch, seq_len,
+                                salt=round_idx, host=host)
             for cid in client_ids
         ]
-        return jnp.stack(per)
+        return np.stack(per) if host else jnp.stack(per)
 
     def frontend_embeddings(self, client_id: int, batch: int, tokens: int,
-                            d_model: int, salt: int = 0):
+                            d_model: int, salt: int = 0, host: bool = False):
         """Stub modality-frontend output: deterministic pseudo-embeddings of
         the right shape (B, tokens, d_model) standing in for ViT patches /
-        EnCodec conditioning frames."""
+        EnCodec conditioning frames. ``host=True`` stays in numpy float32
+        (process-prefetcher-safe; the consumer casts on device)."""
         rng = _client_rng(self.seed, client_id, salt + 10_000)
         e = rng.standard_normal((batch, tokens, d_model)).astype(np.float32)
-        return jnp.asarray(e / np.sqrt(d_model))
+        scaled = (e / np.sqrt(d_model)).astype(np.float32)
+        return scaled if host else jnp.asarray(scaled)

@@ -1,20 +1,37 @@
-"""Host-side cohort prefetcher.
+"""Host-side cohort prefetchers: thread- and process-based backends.
 
 ``FedSim.stack_cohort`` stacks per-client batch trees in Python each round
 (~10ms at 16 clients on the EMNIST CNN config) — serialized with device
-compute when done inline in the round loop. ``CohortPrefetcher`` moves that
-work to a background thread that samples client ids and stacks/pads cohort
-batch trees up to ``depth`` rounds ahead, so round t's host-side input
-pipeline overlaps round t-1's device compute. The thread only *builds*
-cohorts; ordering, staleness, and server updates stay with the consumer
-(``FedSim`` / ``core.async_engine``).
+compute when done inline in the round loop. Two backends move that work off
+the round loop, building cohorts up to ``depth`` rounds ahead
+(``make_prefetcher`` picks one by ``FedConfig.prefetch_backend``):
+
+* :class:`ProcessCohortPrefetcher` (``"process"``, the default) — a forked
+  child process builds cohorts and hands the numpy leaves to the consumer
+  through a ring of shared-memory arena slots, so decode-bound builders
+  (numpy unpack/copy that holds the GIL) genuinely overlap the round
+  loop's Python. ``get`` copies the leaves out of the arena (one memcpy;
+  the decode work is what overlaps) and recycles the slot immediately.
+  Restricted to numpy-leaf batch trees (a jax-computing ``build_fn`` must
+  use the thread backend: the forked child must never touch the runtime;
+  ``make_prefetcher`` probes and falls back with a warning).
+* :class:`CohortPrefetcher` (``"thread"``) — the in-process fallback; any
+  leaf types (including device arrays), but a builder that holds the GIL
+  serializes with the round loop instead of overlapping it.
+
+Both only *build* cohorts; ordering, staleness, and server updates stay
+with the consumer (``FedSim`` / ``core.async_engine``).
 """
 from __future__ import annotations
 
+import multiprocessing as mp
+import pickle
 import queue
 import threading
 import time
+import traceback
 import warnings
+from multiprocessing import resource_tracker, shared_memory
 from typing import Callable, NamedTuple, Optional
 
 import jax
@@ -44,12 +61,25 @@ def stack_host(trees):
 
 class Cohort(NamedTuple):
     """One round's materialized inputs: ids are informational, ``batches``
-    carries the (C, K, ...) stacked trees, ``weights`` is None for uniform."""
+    carries the (C, K, ...) stacked trees, ``weights`` is None for uniform.
+
+    The trailing fields are the fault-injection annotations produced by
+    ``data.cohort_source.CohortSource`` (all defaulted so fault-free
+    construction is unchanged): ``survivors`` is the (C,) float 0/1
+    mid-round-dropout mask the engines thread into the round programs
+    (None = no mask faults this run), ``extra_staleness`` the straggler
+    lateness in rounds the async engine adds to the discount exponent, and
+    ``dropped`` the host-side count of masked-out cohort slots (for round
+    history).
+    """
 
     round_idx: int
     client_ids: object
     batches: object
     weights: Optional[object] = None
+    survivors: Optional[object] = None
+    extra_staleness: int = 0
+    dropped: int = 0
 
 
 #: build_fn(round_idx) -> Cohort
@@ -153,6 +183,341 @@ class CohortPrefetcher:
         own exception."""
         close_prefetcher(self, unwinding=exc[0] is not None)
         return False
+
+
+# ---------------------------------------------------------------------------
+# Process-based backend: forked builder + shared-memory arena ring
+# ---------------------------------------------------------------------------
+
+#: Arena slot offsets are aligned so consumer views keep numpy's preferred
+#: alignment (and cache lines don't straddle leaves).
+_ALIGN = 64
+
+
+class _ArenaLeaf:
+    """Placeholder for one numpy leaf shipped through the arena; the pickled
+    cohort skeleton carries these where the arrays were. A plain class, NOT
+    a NamedTuple: tree_map must treat it as an opaque leaf, and jax's
+    pytree registry traverses NamedTuples as containers."""
+
+    __slots__ = ("index",)
+
+    def __init__(self, index: int):
+        """Bind the position in the slot's ordered leaf list."""
+        self.index = index
+
+    def __getstate__(self):
+        """Pickle as the bare slot index (sent over the worker pipe)."""
+        return self.index
+
+    def __setstate__(self, index):
+        """Rebuild from the bare slot index."""
+        self.index = index
+
+
+def _align(n: int) -> int:
+    return (n + _ALIGN - 1) // _ALIGN * _ALIGN
+
+
+def _untrack(shm: shared_memory.SharedMemory) -> None:
+    """Detach a freshly *created* ``shm`` from the child's resource tracker.
+
+    Creating a ``SharedMemory`` registers it with the creating process's
+    resource tracker — and the forked child spawns its own tracker, which
+    at child exit warns about (and tries to unlink) every arena segment as
+    "leaked", racing the parent that still reads them (bpo-39959 family).
+    Segment lifetime is owned explicitly instead: the parent's ``close()``
+    (or ``__del__``) unlinks every segment it has seen. Attaching in the
+    parent registers nothing, so only the create path calls this.
+    """
+    try:
+        resource_tracker.unregister(shm._name, "shared_memory")  # noqa: SLF001
+    except Exception:  # noqa: BLE001 — tracker layout is stdlib-internal
+        pass
+
+
+def _strip_cohort(cohort: Cohort):
+    """Split a cohort into (pickled skeleton, ordered numpy leaves).
+
+    Containers and small Python leaves (ints, None, strings) stay in the
+    skeleton; every ``np.ndarray`` leaf is replaced by an :class:`_ArenaLeaf`
+    token and shipped through shared memory. Device arrays are refused —
+    the forked child must never touch the jax runtime.
+    """
+    leaves = []
+
+    def strip(x):
+        if isinstance(x, np.ndarray):
+            leaves.append(np.ascontiguousarray(x))
+            return _ArenaLeaf(len(leaves) - 1)
+        if isinstance(x, jax.Array):
+            raise TypeError(
+                "the process-based cohort prefetcher requires numpy-leaf "
+                "batch trees (the forked child must never touch the jax "
+                "runtime); this build_fn produced a jax array — use "
+                "prefetch_backend='thread'")
+        return x
+
+    skeleton = jax.tree_util.tree_map(strip, cohort)
+    return pickle.dumps(skeleton), leaves
+
+
+def _fill_cohort(skeleton_bytes: bytes, views):
+    """Rebuild a cohort from its pickled skeleton + arena leaf views."""
+    skeleton = pickle.loads(skeleton_bytes)
+    return jax.tree_util.tree_map(
+        lambda x: views[x.index] if isinstance(x, _ArenaLeaf) else x,
+        skeleton)
+
+
+def _arena_worker(build_fn: BuildFn, start: int, stop: int, free_r, meta_w,
+                  base_name: str) -> None:
+    """Child-process loop: build cohorts into shared-memory arena slots.
+
+    Waits for a free slot index (``None`` = stop), builds the round's
+    cohort, writes its numpy leaves into the slot's segment (re-created
+    larger under a fresh name when a cohort outgrows it), and sends the
+    slot's metadata. The channels are raw ``Pipe`` connections, not
+    ``mp.Queue``s: a queue ships every ``put`` through a per-process
+    feeder thread, and the parent-side feeder would contend for the
+    parent's GIL — the very contention this backend exists to remove.
+    Segments are only ever *unlinked* by the parent's ``close()`` — the
+    child exiting must not invalidate names the parent has yet to attach.
+    """
+    slots = {}          # slot idx -> SharedMemory
+    gen = 0
+    try:
+        for r in range(start, stop):
+            slot = free_r.recv()
+            if slot is None:
+                return
+            cohort = build_fn(r)
+            skeleton, leaves = _strip_cohort(cohort)
+            descs, total = [], 0
+            for x in leaves:
+                off = _align(total)
+                # the dtype OBJECT, not dtype.str: extension dtypes like
+                # ml_dtypes' bfloat16 stringify to a bare void ('<V2') that
+                # cannot be reconstructed; the object pickles fine through
+                # the meta queue
+                descs.append((off, x.shape, x.dtype))
+                total = off + x.nbytes
+            shm = slots.get(slot)
+            if shm is None or shm.size < total:
+                if shm is not None:
+                    shm.close()
+                gen += 1
+                shm = shared_memory.SharedMemory(
+                    name=f"{base_name}-{slot}-{gen}", create=True,
+                    size=max(total, 1))
+                _untrack(shm)
+                slots[slot] = shm
+            for x, (off, shape, dtype) in zip(leaves, descs):
+                dst = np.ndarray(shape, dtype, buffer=shm.buf, offset=off)
+                dst[...] = x
+            meta_w.send(("item", r, (slot, shm.name, skeleton, descs)))
+        meta_w.send(("done", None, None))
+    except BaseException:  # noqa: BLE001 — re-raised in the parent's get()
+        meta_w.send(("error", None, traceback.format_exc()))
+    finally:
+        for shm in slots.values():
+            shm.close()
+
+
+class ProcessCohortPrefetcher:
+    """Builds rounds ``[start, stop)`` in a forked child process, handing
+    cohorts to the consumer through a ring of ``depth`` shared-memory
+    arena slots.
+
+    Same consumer contract as :class:`CohortPrefetcher` — strictly in-order
+    ``get(round_idx)``, builder exceptions re-raised at the next ``get``,
+    and the returned cohort owns its leaves (copied out of the arena — see
+    :meth:`get` for why views would be unsafe under jax's CPU-backend
+    zero-copy aliasing).
+
+    The child is forked, so ``build_fn`` closures need no pickling — but
+    the child must stay off the jax runtime (forked XLA locks can
+    deadlock): build_fns must produce numpy-leaf trees, enforced loudly in
+    the child. Use the thread backend for jax-computing builders.
+    """
+
+    def __init__(self, build_fn: BuildFn, start_round: int, stop_round: int,
+                 depth: int = 2, close_timeout: float = 5.0):
+        """Fork the arena worker building rounds ``[start, stop)``."""
+        if depth < 1:
+            raise ValueError(f"prefetch depth must be >= 1, got {depth}")
+        self._close_timeout = close_timeout
+        ctx = mp.get_context("fork")
+        # raw pipes, not mp.Queues: queues route every put through a feeder
+        # thread, and the parent's feeder would contend for the parent GIL
+        # (the contention this backend removes); the parent keeps all four
+        # connection ends open for the prefetcher's lifetime so sends never
+        # see a broken pipe and recvs never EOF mid-protocol
+        self._free_r, self._free_w = ctx.Pipe(duplex=False)
+        self._meta_r, self._meta_w = ctx.Pipe(duplex=False)
+        self._attached = {}        # shm name -> SharedMemory (parent side)
+        self._closed = False
+        base = f"coharena-{mp.current_process().pid}-{id(self):x}"
+        for slot in range(depth):
+            self._free_w.send(slot)
+        self._proc = ctx.Process(
+            target=_arena_worker,
+            args=(build_fn, start_round, stop_round, self._free_r,
+                  self._meta_w, base),
+            daemon=True, name="cohort-arena")
+        with warnings.catch_warnings():
+            # jax registers an at-fork hook warning that a forked child of a
+            # multithreaded process may deadlock; this child stays strictly
+            # on numpy (enforced in _strip_cohort), so the condition the
+            # warning guards against cannot occur
+            warnings.filterwarnings(
+                "ignore", message=r"os\.fork\(\) was called",
+                category=RuntimeWarning)
+            self._proc.start()
+
+    def get(self, round_idx: int) -> Cohort:
+        """Blocking in-order fetch; leaves are COPIED out of the arena.
+
+        The copy is what makes the returned cohort unconditionally safe:
+        jax's CPU backend may alias a numpy buffer zero-copy at dispatch,
+        and the async engine fetches the next cohort before the previous
+        round's compute has consumed its inputs — handing out live views
+        of a slot that is about to be recycled corrupted in-flight rounds
+        (the overwriting cohort's survivor mask bled into the dispatched
+        one). The slot is recycled to the child immediately after the
+        copy, so the ring pipelines at full depth.
+        """
+        while True:
+            if self._meta_r.poll(0.2):
+                kind, r, payload = self._meta_r.recv()
+                break
+            if not self._proc.is_alive():
+                if self._meta_r.poll(0):   # reported, then exited: drain it
+                    continue
+                raise RuntimeError(
+                    "cohort-arena process died without reporting an "
+                    "error (killed?)")
+        if kind == "error":
+            raise RuntimeError(
+                f"cohort-arena build_fn failed:\n{payload}")
+        if kind == "done":
+            raise RuntimeError(f"prefetcher exhausted before round "
+                               f"{round_idx}")
+        if r != round_idx:
+            raise RuntimeError(
+                f"prefetcher out of order: expected round {round_idx}, "
+                f"got {r}")
+        slot, name, skeleton, descs = payload
+        shm = self._attached.get(name)
+        if shm is None:
+            shm = shared_memory.SharedMemory(name=name)
+            self._attached[name] = shm
+        leaves = [np.ndarray(shape, dtype, buffer=shm.buf,
+                             offset=off).copy()
+                  for off, shape, dtype in descs]
+        self._free_w.send(slot)
+        return _fill_cohort(skeleton, leaves)
+
+    def close(self):
+        """Stop the child, detach, and unlink every arena segment
+        (idempotent; raises if the child outlives ``close_timeout``)."""
+        if self._closed:
+            return
+        self._closed = True
+        try:
+            self._free_w.send(None)          # poison: wake a waiting child
+        except (OSError, ValueError):
+            pass
+        self._proc.join(timeout=self._close_timeout)
+        hung = self._proc.is_alive()
+        if hung:
+            self._proc.terminate()
+            self._proc.join(timeout=1.0)
+        # collect segment names still in flight, then destroy everything
+        while True:
+            try:
+                if not self._meta_r.poll(0):
+                    break
+                kind, _, payload = self._meta_r.recv()
+            except (EOFError, OSError):
+                break
+            if kind == "item":
+                slot, name, *_ = payload
+                if name not in self._attached:
+                    try:
+                        shm = shared_memory.SharedMemory(name=name)
+                        self._attached[name] = shm
+                    except FileNotFoundError:
+                        pass
+        for shm in self._attached.values():
+            shm.close()
+            try:
+                shm.unlink()
+            except FileNotFoundError:
+                pass
+        self._attached = {}
+        for conn in (self._free_r, self._free_w, self._meta_r, self._meta_w):
+            conn.close()
+        if hung:
+            raise RuntimeError(
+                f"cohort-arena process did not exit within "
+                f"{self._close_timeout}s of close() — build_fn is likely "
+                f"hung (terminated)")
+
+    def __del__(self):
+        """Best-effort cleanup for consumers that crashed before
+        ``close()`` (the resource tracker covers anything left)."""
+        try:
+            self.close()
+        except Exception:  # noqa: BLE001 — never raise from a finalizer
+            pass
+
+    def __enter__(self):
+        """Context-manager entry: the prefetcher itself."""
+        return self
+
+    def __exit__(self, *exc):
+        """Close on exit without masking the with-body's own exception."""
+        close_prefetcher(self, unwinding=exc[0] is not None)
+        return False
+
+
+#: Prefetcher backends by ``FedConfig.prefetch_backend`` value.
+PREFETCHERS = {"thread": CohortPrefetcher, "process": ProcessCohortPrefetcher}
+
+
+def make_prefetcher(backend: str, build_fn: BuildFn, start_round: int,
+                    stop_round: int, depth: int = 2,
+                    close_timeout: float = 5.0):
+    """Instantiate the prefetcher for a ``prefetch_backend`` value.
+
+    The process backend is probed before forking: one cohort is built in
+    the parent, and if any leaf is a device array the call falls back to
+    the thread backend with a warning instead of failing on the first
+    ``get`` (the forked child must never touch the jax runtime, so it
+    cannot ship device arrays through the arena). The probe cohort is
+    discarded — ``build_fn`` is deterministic per round, so the chosen
+    backend rebuilds it identically.
+    """
+    try:
+        cls = PREFETCHERS[backend]
+    except KeyError:
+        raise ValueError(
+            f"unknown prefetch_backend {backend!r}; "
+            f"known: {tuple(PREFETCHERS)}") from None
+    if cls is ProcessCohortPrefetcher and stop_round > start_round:
+        probe = build_fn(start_round)
+        if any(isinstance(leaf, jax.Array)
+               for leaf in jax.tree_util.tree_leaves(probe)):
+            warnings.warn(
+                "prefetch_backend='process' needs numpy-leaf batch trees, "
+                "but this build_fn produces jax arrays — falling back to "
+                "the thread backend (set prefetch_backend='thread' to "
+                "silence, or return numpy leaves from batch_fn to use the "
+                "shared-memory arena)", RuntimeWarning, stacklevel=2)
+            cls = CohortPrefetcher
+    return cls(build_fn, start_round, stop_round, depth=depth,
+               close_timeout=close_timeout)
 
 
 def close_prefetcher(prefetcher: "CohortPrefetcher", unwinding: bool) -> None:

@@ -57,6 +57,113 @@ def should_skip(cfg, shape) -> str:
     return ""
 
 
+def _apply_knobs(cfg, fed, rec, *, delta_dtype, client_state_placement,
+                 dropout_rate, moe_chunk, moe_routing, cache_shard,
+                 tp_boundary, remat):
+    """Fold the perf/fault knob overrides into (cfg, fed), recording every
+    non-default on the result record."""
+    if delta_dtype != "float32":
+        fed = dataclasses.replace(fed, delta_dtype=delta_dtype)
+        rec["delta_dtype"] = delta_dtype
+    if client_state_placement != "host":
+        fed = dataclasses.replace(
+            fed, client_state_placement=client_state_placement)
+        rec["client_state_placement"] = client_state_placement
+    if dropout_rate:
+        # fault-injecting round variant: threads the (C,) survivor mask
+        # through the weighted aggregation (round_program)
+        fed = dataclasses.replace(fed, dropout_rate=dropout_rate)
+        rec["dropout_rate"] = dropout_rate
+    if remat != "full":
+        rec["remat"] = remat
+    if moe_chunk and cfg.moe.enabled:  # §Perf knob
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, chunk_tokens=moe_chunk))
+        rec["moe_chunk"] = moe_chunk
+    if moe_routing != "onehot" and cfg.moe.enabled:  # §Perf knob
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, routing=moe_routing))
+        rec["moe_routing"] = moe_routing
+    if cache_shard != "greedy":
+        rec["cache_shard"] = cache_shard
+    if tp_boundary:
+        cfg = dataclasses.replace(cfg, tp_out_constraint=True)
+        rec["tp_boundary"] = True
+    return cfg, fed
+
+
+def _lower_step(cfg, fed, shape, spec, mesh, placement, q_chunk, remat):
+    """Lower the shape's step (train round / prefill / decode) against the
+    mesh; returns ``(lowered, local_steps)``."""
+    if shape.kind == "train":
+        caxes = client_axes(mesh)
+        round_fn = make_fed_round(
+            cfg, fed, placement=placement,
+            spmd_axes=(caxes if len(caxes) > 1 else caxes[0])
+            if placement == "parallel" else None,
+            q_chunk=q_chunk, remat=remat,
+        )
+        rules = ({"batch": (), "clients": caxes}
+                 if placement == "parallel" else None)
+        # stateful rounds return (state, metrics, new_client_states) — or
+        # (state, metrics, new_store_state) with the device store; either
+        # way the third output's sharding sits at args index 3 (keyed off
+        # the explicit flag: a fault-injecting stateless round also has
+        # extra args, so arity is not a statefulness signal)
+        out_sh = ((spec["shardings"][0], None, spec["shardings"][3])
+                  if spec["stateful"] else (spec["shardings"][0], None))
+        with axis_rules(mesh, rules):
+            lowered = jax.jit(
+                round_fn,
+                in_shardings=spec["shardings"],
+                out_shardings=out_sh,
+            ).lower(*spec["args"])
+        return lowered, fed.local_steps
+    if shape.kind == "prefill":
+        def step(params, batch):
+            return prefill_step(params, batch["tokens"], cfg, shape.seq_len,
+                                frontend=batch.get("frontend"),
+                                q_chunk=q_chunk)
+        with axis_rules(mesh):
+            lowered = jax.jit(
+                step, in_shardings=spec["shardings"], out_shardings=None
+            ).lower(*spec["args"])
+        return lowered, 1
+    # decode
+    def step(params, token, state):
+        return serve_step(params, token, state, cfg)
+    with axis_rules(mesh):
+        lowered = jax.jit(
+            step, in_shardings=spec["shardings"],
+            out_shardings=(None, None, spec["shardings"][2]),
+        ).lower(*spec["args"])
+    return lowered, 1
+
+
+def _save_hlo_text(save_hlo, hlo_text, rec, arch, shape_name, *,
+                   cache_shard, moe_chunk, moe_routing, tp_boundary,
+                   delta_dtype):
+    """Dump compiled HLO text (gzip) under a knob-variant filename."""
+    import gzip
+    os.makedirs(save_hlo, exist_ok=True)
+    variant = ""
+    if cache_shard != "greedy":
+        variant += f"__cache-{cache_shard}"
+    if moe_chunk:
+        variant += f"__chunk-{moe_chunk}"
+    if moe_routing != "onehot":
+        variant += f"__route-{moe_routing}"
+    if tp_boundary:
+        variant += "__tpb"
+    if delta_dtype != "float32":
+        variant += "__delta-bf16"
+    fn = os.path.join(save_hlo,
+                      f"{arch}__{shape_name}__{rec['mesh']}{variant}.hlo.gz")
+    with gzip.open(fn, "wt") as f:
+        f.write(hlo_text)
+    rec["hlo_file"] = fn
+
+
 def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
               algorithm: str = "fedpa", placement: str = "auto",
               remat: str = "full", q_chunk: int = 1024,
@@ -66,7 +173,8 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
               tp_boundary: bool = False, moe_routing: str = "onehot",
               delta_dtype: str = "float32",
               client_state_placement: str = "host",
-              num_clients: int = 64) -> dict:
+              num_clients: int = 64,
+              dropout_rate: float = 0.0) -> dict:
     """Lower (and optionally compile) one (arch, shape, mesh) combination;
     returns the record dict (roofline terms, memory, collectives, or the
     skip/error status). ``client_state_placement="device"`` lowers the
@@ -88,79 +196,22 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     # same display-name helper as launch.train; the dry-run lowers the
     # sampling-regime round, so label it with the first post-burn-in round
     rec["algorithm"] = phase_name(fed, fed.burn_in_rounds)
-    if delta_dtype != "float32":
-        fed = dataclasses.replace(fed, delta_dtype=delta_dtype)
-        rec["delta_dtype"] = delta_dtype
-    if client_state_placement != "host":
-        fed = dataclasses.replace(
-            fed, client_state_placement=client_state_placement)
-        rec["client_state_placement"] = client_state_placement
+    cfg, fed = _apply_knobs(
+        cfg, fed, rec, delta_dtype=delta_dtype,
+        client_state_placement=client_state_placement,
+        dropout_rate=dropout_rate, moe_chunk=moe_chunk,
+        moe_routing=moe_routing, cache_shard=cache_shard,
+        tp_boundary=tp_boundary, remat=remat)
     if placement == "auto":
         placement = default_placement(cfg)
     rec["placement"] = placement if shape.kind == "train" else "-"
     rec["chips"] = chips
-    if remat != "full":
-        rec["remat"] = remat
-    if moe_chunk and cfg.moe.enabled:  # §Perf knob
-        cfg = dataclasses.replace(
-            cfg, moe=dataclasses.replace(cfg.moe, chunk_tokens=moe_chunk))
-        rec["moe_chunk"] = moe_chunk
-    if moe_routing != "onehot" and cfg.moe.enabled:  # §Perf knob
-        cfg = dataclasses.replace(
-            cfg, moe=dataclasses.replace(cfg.moe, routing=moe_routing))
-        rec["moe_routing"] = moe_routing
-    if cache_shard != "greedy":
-        rec["cache_shard"] = cache_shard
-    if tp_boundary:
-        cfg = dataclasses.replace(cfg, tp_out_constraint=True)
-        rec["tp_boundary"] = True
 
     spec = input_specs(cfg, shape, fed, mesh, placement,
                        cache_shard=cache_shard, num_clients=num_clients)
     t0 = time.time()
-
-    if shape.kind == "train":
-        caxes = client_axes(mesh)
-        round_fn = make_fed_round(
-            cfg, fed, placement=placement,
-            spmd_axes=(caxes if len(caxes) > 1 else caxes[0])
-            if placement == "parallel" else None,
-            q_chunk=q_chunk, remat=remat,
-        )
-        rules = ({"batch": (), "clients": caxes}
-                 if placement == "parallel" else None)
-        # stateful rounds return (state, metrics, new_client_states) — or
-        # (state, metrics, new_store_state) with the device store, whose
-        # sharding also sits at args index 3
-        out_sh = ((spec["shardings"][0], None, spec["shardings"][3])
-                  if len(spec["args"]) > 2 else (spec["shardings"][0], None))
-        with axis_rules(mesh, rules):
-            lowered = jax.jit(
-                round_fn,
-                in_shardings=spec["shardings"],
-                out_shardings=out_sh,
-            ).lower(*spec["args"])
-        local_steps = fed.local_steps
-    elif shape.kind == "prefill":
-        def step(params, batch):
-            return prefill_step(params, batch["tokens"], cfg, shape.seq_len,
-                                frontend=batch.get("frontend"),
-                                q_chunk=q_chunk)
-        with axis_rules(mesh):
-            lowered = jax.jit(
-                step, in_shardings=spec["shardings"], out_shardings=None
-            ).lower(*spec["args"])
-        local_steps = 1
-    else:  # decode
-        def step(params, token, state):
-            return serve_step(params, token, state, cfg)
-        with axis_rules(mesh):
-            lowered = jax.jit(
-                step, in_shardings=spec["shardings"],
-                out_shardings=(None, None, spec["shardings"][2]),
-            ).lower(*spec["args"])
-        local_steps = 1
-
+    lowered, local_steps = _lower_step(cfg, fed, shape, spec, mesh,
+                                       placement, q_chunk, remat)
     rec["lower_s"] = round(time.time() - t0, 2)
     if not compile_:
         rec["status"] = "lowered"
@@ -185,24 +236,10 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                            if k in raw_cost}
     hlo_text = compiled.as_text()
     if save_hlo:
-        import gzip
-        os.makedirs(save_hlo, exist_ok=True)
-        variant = ""
-        if cache_shard != "greedy":
-            variant += f"__cache-{cache_shard}"
-        if moe_chunk:
-            variant += f"__chunk-{moe_chunk}"
-        if moe_routing != "onehot":
-            variant += f"__route-{moe_routing}"
-        if tp_boundary:
-            variant += "__tpb"
-        if delta_dtype != "float32":
-            variant += "__delta-bf16"
-        fn = os.path.join(save_hlo,
-                          f"{arch}__{shape_name}__{rec['mesh']}{variant}.hlo.gz")
-        with gzip.open(fn, "wt") as f:
-            f.write(hlo_text)
-        rec["hlo_file"] = fn
+        _save_hlo_text(save_hlo, hlo_text, rec, arch, shape_name,
+                       cache_shard=cache_shard, moe_chunk=moe_chunk,
+                       moe_routing=moe_routing, tp_boundary=tp_boundary,
+                       delta_dtype=delta_dtype)
     hlo = hlo_analyze(hlo_text)
     cost = {"flops": hlo["flops"], "bytes accessed": hlo["bytes"]}
     rec["cost"] = cost
@@ -253,6 +290,10 @@ def main():
     ap.add_argument("--num-clients", type=int, default=64,
                     help="population size of the device-resident "
                          "client-state store (device placement only)")
+    ap.add_argument("--dropout-rate", type=float, default=0.0,
+                    help="lower the fault-injecting round variant: a (C,) "
+                         "survivor mask threads through the aggregation "
+                         "(data/cohort_source.py)")
     ap.add_argument("--moe-routing", default="onehot",
                     choices=("onehot", "sort"),
                     help="MoE dispatch implementation (§Perf)")
@@ -283,6 +324,7 @@ def main():
                         delta_dtype=args.delta_dtype,
                         client_state_placement=args.client_state_placement,
                         num_clients=args.num_clients,
+                        dropout_rate=args.dropout_rate,
                     )
                 except Exception as e:  # noqa: BLE001 — record and continue
                     rec = {"arch": arch, "shape": shape,

@@ -85,6 +85,13 @@ def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig, fed: FedConfig,
             if placement == "parallel"
             else P(None, None, client_axes(mesh), None, ma),
         )
+    if fed.min_local_steps:
+        # heterogeneous step budgets ride as a (C, K) 0/1 leaf the engine's
+        # grad wrapper strips (data/cohort_source.py injects it)
+        specs["_active"] = jax.ShapeDtypeStruct((C, K), jnp.float32)
+        shardings["_active"] = NamedSharding(
+            mesh, P(*lead_spec, None) if placement == "parallel"
+            else P(None, None))
     return specs, shardings
 
 
@@ -317,31 +324,53 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig, fed: FedConfig,
     """Every input the lowered step needs, as ShapeDtypeStructs, plus
     matching shardings: {"args": (...), "shardings": (...)} keyed by kind.
     ``num_clients`` sizes the device-resident client-state store's
-    population axis for ``fed.client_state_placement="device"`` rounds."""
+    population axis for ``fed.client_state_placement="device"`` rounds.
+
+    Train records also carry an explicit ``"stateful"`` flag ("device",
+    "host", or None) — consumers key output shardings off it, never off
+    positional arity (a fault-injecting config appends a (C,) survivor
+    mask as the trailing round argument, so arity alone is ambiguous).
+    """
     from repro.core.sharded_round import default_placement  # late: cycle-free
 
     placement = placement or default_placement(cfg)
     if shape.kind == "train":
         state, state_sh = server_state_specs(cfg, fed, mesh, placement)
         batches, batch_sh = train_batch_specs(cfg, shape, fed, mesh, placement)
+        mask_args, mask_sh = (), ()
+        if fed.fault_injection:
+            # the (C,) survivor mask: O(C) scalars, replicated
+            C = (_client_extent(mesh) if placement == "parallel"
+                 else fed.clients_per_round)
+            mask_args = (jax.ShapeDtypeStruct((C,), jnp.float32),)
+            mask_sh = (NamedSharding(mesh, P()),)
         if fed.client_state_placement == "device":
             store, store_sh, ids, ids_sh = device_store_specs(
                 cfg, fed, mesh, placement, num_clients)
             if store is not None:
                 # device-stateful round:
-                # fn(state, batches, weights=None, store_state, client_ids)
-                # -> (state, losses, new_store_state)
+                # fn(state, batches, weights=None, store_state, client_ids
+                #    [, survivor_mask]) -> (state, losses, new_store_state)
                 return {"kind": "train", "placement": placement,
-                        "args": (state, batches, None, store, ids),
+                        "stateful": "device",
+                        "args": (state, batches, None, store, ids)
+                        + mask_args,
                         "shardings": (state_sh, batch_sh, None, store_sh,
-                                      ids_sh)}
+                                      ids_sh) + mask_sh}
         cstates, cstate_sh = client_state_specs(cfg, fed, mesh, placement)
         if cstates is not None:
-            # stateful round: fn(state, batches, weights=None, client_states)
+            # stateful round: fn(state, batches, weights=None, client_states
+            #                    [, survivor_mask])
             return {"kind": "train", "placement": placement,
-                    "args": (state, batches, None, cstates),
-                    "shardings": (state_sh, batch_sh, None, cstate_sh)}
-        return {"kind": "train", "placement": placement,
+                    "stateful": "host",
+                    "args": (state, batches, None, cstates) + mask_args,
+                    "shardings": (state_sh, batch_sh, None, cstate_sh)
+                    + mask_sh}
+        if mask_args:
+            return {"kind": "train", "placement": placement, "stateful": None,
+                    "args": (state, batches, None) + mask_args,
+                    "shardings": (state_sh, batch_sh, None) + mask_sh}
+        return {"kind": "train", "placement": placement, "stateful": None,
                 "args": (state, batches), "shardings": (state_sh, batch_sh)}
     params = abstract_params(cfg, jnp.bfloat16)
     params_sh = param_shardings(params, mesh)

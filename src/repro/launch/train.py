@@ -27,8 +27,8 @@ from repro.core.client_state import jit_donating_store, make_client_store
 from repro.core.server import init_server_state
 from repro.core.sharded_round import make_fed_round, make_fed_round_split
 from repro.data import SyntheticLMData
-from repro.data.prefetch import Cohort
-from repro.data.sampling import ClientSampler
+from repro.data.cohort_source import CohortSource
+from repro.data.prefetch import close_prefetcher, make_prefetcher
 from repro.models import init_params, lm_loss
 from repro.optim import get_optimizer
 
@@ -49,12 +49,20 @@ def build_fed(args) -> FedConfig:
         max_staleness=args.max_staleness,
         staleness_discount=args.staleness_discount,
         prefetch_rounds=args.prefetch_rounds,
+        prefetch_backend=args.prefetch_backend,
         client_state_placement=args.client_state_placement,
+        availability=args.availability,
+        availability_period=args.availability_period,
+        availability_duty=args.availability_duty,
+        dropout_rate=args.dropout_rate,
+        straggler_rate=args.straggler_rate,
+        straggler_max_lateness=args.straggler_max_lateness,
+        min_local_steps=args.min_local_steps,
     )
 
 
-def main():
-    """Parse flags, build the round programs, drive the training loop."""
+def parse_args(argv=None):
+    """CLI flags for the training driver."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="fedlm-100m",
                     choices=configs.ALL_ARCHS)
@@ -92,6 +100,34 @@ def main():
     ap.add_argument("--prefetch-rounds", type=int, default=2,
                     help="cohort batches stacked ahead by a host thread "
                          "(0 = inline)")
+    ap.add_argument("--prefetch-backend", default="process",
+                    choices=("process", "thread"),
+                    help="cohort prefetcher: forked shared-memory arena "
+                         "builder (overlaps GIL-bound decode) or in-process "
+                         "thread (data/prefetch.py)")
+    ap.add_argument("--availability", default="always",
+                    choices=("always", "diurnal"),
+                    help="client availability trace; 'diurnal' samples "
+                         "cohorts only from currently-up clients "
+                         "(data/cohort_source.py)")
+    ap.add_argument("--availability-period", type=int, default=24,
+                    help="diurnal cycle length in rounds")
+    ap.add_argument("--availability-duty", type=float, default=0.5,
+                    help="fraction of the cycle each client is up")
+    ap.add_argument("--dropout-rate", type=float, default=0.0,
+                    help="per-client mid-round dropout probability; "
+                         "survivors' partial aggregate is renormalized and "
+                         "dropped clients' state writes are masked")
+    ap.add_argument("--straggler-rate", type=float, default=0.0,
+                    help="probability a cohort misses its round deadline "
+                         "(requires --async-rounds; late deltas are "
+                         "discounted by staleness_discount**s)")
+    ap.add_argument("--straggler-max-lateness", type=int, default=2,
+                    help="max extra rounds of straggler lateness")
+    ap.add_argument("--min-local-steps", type=int, default=0,
+                    help="heterogeneous per-client step budgets in "
+                         "[min, local_steps]; 0 = homogeneous (requires "
+                         "--client-opt sgd on a gradient-pure algorithm)")
     ap.add_argument("--client-state-placement", default="host",
                     choices=("host", "device"),
                     help="where stateful algorithms' per-client state "
@@ -103,8 +139,76 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--log", default=None, help="JSONL metrics path")
-    args = ap.parse_args()
+    return ap.parse_args(argv)
 
+
+def make_round_batches(args, cfg, fed, data, s_text):
+    """Cohort batch builder ``(round, ids) -> batches`` for the round fns.
+
+    The process prefetcher's forked builder must stay off the jax runtime,
+    so its cohorts are assembled as numpy (bf16 is a numpy dtype via
+    ml_dtypes; the jitted round casts on transfer)."""
+    host_batches = fed.prefetch_backend == "process"
+
+    def round_batches(r, ids):
+        toks = data.round_batches(ids, fed.local_steps, args.batch, s_text,
+                                  round_idx=r, host=host_batches)
+        batches = {"tokens": toks}
+        if cfg.frontend:
+            fe = np.stack([
+                np.stack([
+                    data.frontend_embeddings(
+                        int(c), args.batch, cfg.frontend_tokens, cfg.d_model,
+                        salt=r * 1000 + k, host=True)
+                    for k in range(fed.local_steps)
+                ]) for c in ids
+            ])
+            batches["frontend"] = (fe.astype(jnp.bfloat16) if host_batches
+                                   else jnp.asarray(fe, jnp.bfloat16))
+        return batches
+
+    return round_batches
+
+
+def make_eval_fn(args, cfg, data, s_text, q_chunk):
+    """Jitted held-out eval loss on a batch from an unseen client id."""
+    eval_batch = {
+        "tokens": data.client_batches(args.num_clients + 1, 1, args.batch,
+                                      s_text)[0]
+    }
+    if cfg.frontend:
+        eval_batch["frontend"] = jnp.asarray(
+            data.frontend_embeddings(args.num_clients + 1, args.batch,
+                                     cfg.frontend_tokens, cfg.d_model),
+            jnp.bfloat16)
+    return jax.jit(lambda p: lm_loss(p, eval_batch, cfg,
+                                     q_chunk=q_chunk)[0])
+
+
+def restore_if_present(args, state, store, ckpt_tree):
+    """Resume from ``--ckpt-dir`` when a checkpoint exists.
+
+    Returns ``(state, start_round)``; client state is loaded back into the
+    store in place."""
+    start_round = 0
+    if args.ckpt_dir and os.path.isdir(args.ckpt_dir):
+        try:
+            restored, start_round, _ = restore_checkpoint(args.ckpt_dir,
+                                                          ckpt_tree(state))
+            if store is None:
+                state = restored
+            else:
+                state = restored["server"]
+                store.load_state_dict(restored["clients"])
+            print(f"restored checkpoint at round {start_round}")
+        except FileNotFoundError:
+            pass
+    return state, start_round
+
+
+def main():
+    """Parse flags, build the round programs, drive the training loop."""
+    args = parse_args()
     cfg = configs.get_smoke(args.arch) if args.smoke \
         else configs.get_config(args.arch)
     fed = build_fed(args)
@@ -113,7 +217,6 @@ def main():
 
     data = SyntheticLMData(vocab_size=cfg.vocab_size,
                            num_clients=args.num_clients, seed=args.seed)
-    sampler = ClientSampler(args.num_clients, args.clients, args.seed)
     s_text = args.seq_len - (cfg.frontend_tokens if cfg.frontend else 0)
 
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
@@ -142,19 +245,7 @@ def main():
             return round_state
         return {"server": round_state, "clients": store.state_dict()}
 
-    start_round = 0
-    if args.ckpt_dir and os.path.isdir(args.ckpt_dir):
-        try:
-            restored, start_round, _ = restore_checkpoint(args.ckpt_dir,
-                                                          ckpt_tree(state))
-            if store is None:
-                state = restored
-            else:
-                state = restored["server"]
-                store.load_state_dict(restored["clients"])
-            print(f"restored checkpoint at round {start_round}")
-        except FileNotFoundError:
-            pass
+    state, start_round = restore_if_present(args, state, store, ckpt_tree)
 
     q_chunk = min(64, s_text)
 
@@ -171,34 +262,15 @@ def main():
                                           q_chunk=q_chunk,
                                           use_sampling=False), burn_stateful)
 
-    def round_batches(r, ids):
-        toks = data.round_batches(ids, fed.local_steps, args.batch, s_text,
-                                  round_idx=r)
-        batches = {"tokens": toks}
-        if cfg.frontend:
-            fe = np.stack([
-                np.stack([
-                    np.asarray(data.frontend_embeddings(
-                        int(c), args.batch, cfg.frontend_tokens, cfg.d_model,
-                        salt=r * 1000 + k))
-                    for k in range(fed.local_steps)
-                ]) for c in ids
-            ])
-            batches["frontend"] = jnp.asarray(fe, jnp.bfloat16)
-        return batches
+    # faults + sampling + weights live in the cohort source; its draws key
+    # off the ABSOLUTE round index, so a checkpoint restart replays the
+    # same fault matrix
+    round_batches = make_round_batches(args, cfg, fed, data, s_text)
+    source = CohortSource(fed, args.num_clients,
+                          lambda ids, r: round_batches(r, ids),
+                          seed=args.seed)
 
-    # held-out eval batch from unseen client ids
-    eval_batch = {
-        "tokens": data.client_batches(args.num_clients + 1, 1, args.batch,
-                                      s_text)[0]
-    }
-    if cfg.frontend:
-        eval_batch["frontend"] = jnp.asarray(
-            data.frontend_embeddings(args.num_clients + 1, args.batch,
-                                     cfg.frontend_tokens, cfg.d_model),
-            jnp.bfloat16)
-    eval_fn = jax.jit(lambda p: lm_loss(p, eval_batch, cfg,
-                                        q_chunk=q_chunk)[0])
+    eval_fn = make_eval_fn(args, cfg, data, s_text, q_chunk)
 
     logf = open(args.log, "a") if args.log else None
 
@@ -215,89 +287,138 @@ def main():
                             {"arch": cfg.name, "algorithm": fed.algorithm})
 
     if fed.async_rounds:
-        # double-buffered rounds: cohort t+1 is dispatched before round t's
-        # server update lands; deltas discounted by staleness_discount**s
-        cohort_fn, server_fn = make_fed_round_split(
-            cfg, fed, placement="parallel", q_chunk=q_chunk)
-        burn_cohort_fn = burn_server_fn = None
-        if alg.has_burn_regime and fed.burn_in_rounds:
-            burn_cohort_fn, burn_server_fn = make_fed_round_split(
-                cfg, fed, placement="parallel", q_chunk=q_chunk,
-                use_sampling=False)
-        engine = AsyncRoundEngine(
-            cohort_fn=cohort_fn,
-            server_fn=server_fn,
-            burn_cohort_fn=burn_cohort_fn,
-            burn_server_fn=burn_server_fn,
-            burn_in_rounds=max(0, fed.burn_in_rounds - start_round),
-            max_staleness=fed.max_staleness,
-            staleness_discount=fed.staleness_discount,
-            prefetch_rounds=fed.prefetch_rounds,
-            client_store=store,
-            stateful=alg.stateful,
-            burn_stateful=burn_stateful,
-        )
-
-        def build_cohort(i):
-            r = start_round + i
-            ids = sampler.sample(r)
-            return Cohort(i, ids, round_batches(r, ids), None)
-
-        last_t = time.time()
-
-        def on_round(rec, round_state):
-            # live per-round logging + periodic checkpoints, as in the sync
-            # loop; forcing the metrics here costs one sync per round, but
-            # the next cohorts are already dispatched on device
-            nonlocal last_t
-            r = start_round + rec["round"]
-            emit({"round": r,
-                  "eval_loss": (float(rec["eval"]["eval_loss"])
-                                if "eval" in rec else None),
-                  "client_loss_last": float(rec["metrics"]["loss_last"]),
-                  "client_loss_first": float(rec["metrics"]["loss_first"]),
-                  "staleness": rec["staleness"],
-                  "phase": phase_name(fed, r),
-                  "sec": round(time.time() - last_t, 2)})
-            last_t = time.time()
-            maybe_checkpoint(round_state, r)
-
-        state, _ = engine.run(
-            state, build_cohort, args.rounds - start_round,
-            eval_fn=lambda p: {"eval_loss": float(eval_fn(p))},
-            on_round=on_round)
+        state = run_async(args, cfg, fed, alg, state, store, burn_stateful,
+                          start_round, source, eval_fn, emit,
+                          maybe_checkpoint, q_chunk)
     else:
+        state = run_sync(args, fed, alg, state, store, burn_stateful,
+                         device_store, start_round, source, round_sample,
+                         round_burn, eval_fn, emit, maybe_checkpoint)
+    if logf:
+        logf.close()
+
+
+def run_async(args, cfg, fed, alg, state, store, burn_stateful, start_round,
+              source, eval_fn, emit, maybe_checkpoint, q_chunk):
+    """Drive the double-buffered async engine; returns the final state.
+
+    Cohort t+1 is dispatched before round t's server update lands; deltas
+    are discounted by ``staleness_discount**s``."""
+    cohort_fn, server_fn = make_fed_round_split(
+        cfg, fed, placement="parallel", q_chunk=q_chunk)
+    burn_cohort_fn = burn_server_fn = None
+    if alg.has_burn_regime and fed.burn_in_rounds:
+        burn_cohort_fn, burn_server_fn = make_fed_round_split(
+            cfg, fed, placement="parallel", q_chunk=q_chunk,
+            use_sampling=False)
+    engine = AsyncRoundEngine(
+        cohort_fn=cohort_fn,
+        server_fn=server_fn,
+        burn_cohort_fn=burn_cohort_fn,
+        burn_server_fn=burn_server_fn,
+        burn_in_rounds=max(0, fed.burn_in_rounds - start_round),
+        max_staleness=fed.max_staleness,
+        staleness_discount=fed.staleness_discount,
+        prefetch_rounds=fed.prefetch_rounds,
+        prefetch_backend=fed.prefetch_backend,
+        client_store=store,
+        stateful=alg.stateful,
+        burn_stateful=burn_stateful,
+        record_faults=fed.fault_injection,
+    )
+
+    def build_cohort(i):
+        # the engine orders by its own 0-based index; the draw (and its
+        # faults) stays keyed to the absolute round
+        return source.cohort(start_round + i)._replace(round_idx=i)
+
+    last_t = time.time()
+
+    def on_round(rec, round_state):
+        # live per-round logging + periodic checkpoints, as in the sync
+        # loop; forcing the metrics here costs one sync per round, but
+        # the next cohorts are already dispatched on device
+        nonlocal last_t
+        r = start_round + rec["round"]
+        out = {"round": r,
+               "eval_loss": (float(rec["eval"]["eval_loss"])
+                             if "eval" in rec else None),
+               "client_loss_last": float(rec["metrics"]["loss_last"]),
+               "client_loss_first": float(rec["metrics"]["loss_first"]),
+               "staleness": rec["staleness"],
+               "phase": phase_name(fed, r),
+               "sec": round(time.time() - last_t, 2)}
+        for k in ("dropped", "straggled"):
+            if k in rec:
+                out[k] = rec[k]
+        emit(out)
+        last_t = time.time()
+        maybe_checkpoint(round_state, r)
+
+    state, _ = engine.run(
+        state, build_cohort, args.rounds - start_round,
+        eval_fn=lambda p: {"eval_loss": float(eval_fn(p))},
+        on_round=on_round)
+    return state
+
+
+def _sync_round(state, fn, cohort, store, device_store, stateful_round):
+    """Apply one synchronous round, routing per client-state placement.
+
+    A dropped client's half-finished state must not land: ``survivors``
+    doubles as the state-store write mask."""
+    survivors = cohort.survivors  # None = mask-free program
+    ids, batches = cohort.client_ids, cohort.batches
+    if stateful_round and device_store:
+        state, metrics, new_ss = fn(state, batches, None,
+                                    store.device_state(),
+                                    store.prepare_ids(ids), survivors)
+        store.set_device_state(new_ss)
+    elif stateful_round:
+        cstates, stamps = store.gather(ids)
+        state, metrics, new_states = fn(state, batches, None, cstates,
+                                        survivors)
+        store.scatter(ids, new_states, stamps, write_mask=survivors)
+    else:
+        state, metrics = fn(state, batches, None, survivors)
+    return state, metrics
+
+
+def run_sync(args, fed, alg, state, store, burn_stateful, device_store,
+             start_round, source, round_sample, round_burn, eval_fn, emit,
+             maybe_checkpoint):
+    """Drive the synchronous round loop; returns the final state."""
+    prefetch = (make_prefetcher(fed.prefetch_backend, source.cohort,
+                                start_round, args.rounds,
+                                depth=fed.prefetch_rounds)
+                if fed.prefetch_rounds > 0 else None)
+    completed = False
+    try:
         for r in range(start_round, args.rounds):
             t0 = time.time()
             is_burn = r < fed.burn_in_rounds
             fn = round_burn if is_burn else round_sample
-            ids = sampler.sample(r)
-            batches = round_batches(r, ids)
+            cohort = (prefetch.get(r) if prefetch is not None
+                      else source.cohort(r))
             stateful_round = (store is not None
                               and (burn_stateful if is_burn
                                    else alg.stateful))
-            if stateful_round and device_store:
-                state, metrics, new_ss = fn(state, batches, None,
-                                            store.device_state(),
-                                            store.prepare_ids(ids))
-                store.set_device_state(new_ss)
-            elif stateful_round:
-                cstates, stamps = store.gather(ids)
-                state, metrics, new_states = fn(state, batches, None,
-                                                cstates)
-                store.scatter(ids, new_states, stamps)
-            else:
-                state, metrics = fn(state, batches)
-            ev = float(eval_fn(state.params))
-            rec = {"round": r, "eval_loss": ev,
+            state, metrics = _sync_round(state, fn, cohort, store,
+                                         device_store, stateful_round)
+            rec = {"round": r, "eval_loss": float(eval_fn(state.params)),
                    "client_loss_last": float(metrics["loss_last"]),
                    "client_loss_first": float(metrics["loss_first"]),
                    "phase": phase_name(fed, r),
                    "sec": round(time.time() - t0, 2)}
+            if cohort.survivors is not None:
+                rec["dropped"] = int(cohort.dropped)
             emit(rec)
             maybe_checkpoint(state, r)
-    if logf:
-        logf.close()
+        completed = True
+    finally:
+        if prefetch is not None:
+            close_prefetcher(prefetch, unwinding=not completed)
+    return state
 
 
 if __name__ == "__main__":

@@ -1,3 +1,4 @@
+"""Model zoo: transformer/recurrent/MoE blocks and the shared LM API."""
 from repro.models.model import (  # noqa: F401
     DecodeState,
     abstract_decode_state,

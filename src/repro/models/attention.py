@@ -24,12 +24,15 @@ NEG_INF = -2.0e38
 
 
 class AttnCache(NamedTuple):
+    """Per-layer KV decode cache plus the token position held by each slot."""
+
     k: jnp.ndarray          # (B, L, KV, dh)
     v: jnp.ndarray          # (B, L, KV, dh)
     slot_pos: jnp.ndarray   # (L,) int32 token position held by each slot (-1 empty)
 
 
 def init_attn_params(rng, cfg: ModelConfig, dtype=jnp.float32):
+    """Init q/k/v/o projections (plus qk-norm scales when enabled)."""
     d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
     ks = jax.random.split(rng, 4)
     s = lambda fan_in: 1.0 / jnp.sqrt(fan_in)
@@ -133,6 +136,7 @@ def attn_forward(p, x, cfg: ModelConfig, spec: LayerSpec, pos0: int = 0,
 # ---------------------------------------------------------------------------
 
 def attn_cache_len(cfg: ModelConfig, spec: LayerSpec, max_len: int) -> int:
+    """Cache slots a layer needs: its window if sliding, else ``max_len``."""
     if spec.mixer == "swa" and spec.window < max_len:
         return spec.window
     return max_len
@@ -140,6 +144,7 @@ def attn_cache_len(cfg: ModelConfig, spec: LayerSpec, max_len: int) -> int:
 
 def init_attn_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
                     max_len: int, dtype=jnp.bfloat16) -> AttnCache:
+    """Allocate an empty KV cache (slot positions start at -1)."""
     L = attn_cache_len(cfg, spec, max_len)
     KV, dh = cfg.num_kv_heads, cfg.head_dim
     return AttnCache(

@@ -10,6 +10,7 @@ from repro.configs.emnist_cnn import CNNConfig
 
 
 def init_cnn_params(rng, cfg: CNNConfig, dtype=jnp.float32):
+    """Init the two conv layers and two dense layers of the EMNIST CNN."""
     ks = jax.random.split(rng, 4)
     c0, c1 = cfg.conv_channels
     k = cfg.kernel_size
@@ -55,6 +56,7 @@ def cnn_forward(params, x, cfg: CNNConfig):
 
 
 def cnn_loss(params, batch, cfg: CNNConfig):
+    """Mean softmax cross-entropy over a {"x", "y"} batch."""
     logits = cnn_forward(params, batch["x"], cfg)
     labels = batch["y"]
     logz = jax.scipy.special.logsumexp(logits, axis=-1)
@@ -63,4 +65,5 @@ def cnn_loss(params, batch, cfg: CNNConfig):
 
 
 def cnn_accuracy(params, x, y, cfg: CNNConfig):
+    """Top-1 accuracy of the CNN on (x, y)."""
     return jnp.mean(jnp.argmax(cnn_forward(params, x, cfg), axis=-1) == y)

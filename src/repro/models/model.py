@@ -72,6 +72,7 @@ def _init_layer(rng, cfg: ModelConfig, spec: LayerSpec, dtype):
 
 
 def init_params(rng, cfg: ModelConfig, dtype=jnp.float32) -> Dict[str, Any]:
+    """Init the full decoder: embed + stacked pattern/tail layers + norms."""
     k_embed, k_pat, k_tail, k_un = jax.random.split(rng, 4)
     V, d = cfg.padded_vocab, cfg.d_model
     params: Dict[str, Any] = {
@@ -107,6 +108,7 @@ def abstract_params(cfg: ModelConfig, dtype=jnp.float32):
 
 
 def count_params(cfg: ModelConfig) -> int:
+    """Exact parameter count via abstract shapes (no allocation)."""
     leaves = jax.tree_util.tree_leaves(abstract_params(cfg))
     return sum(x.size for x in leaves)
 
@@ -226,6 +228,8 @@ def _unembed(cparams, x):
 # ---------------------------------------------------------------------------
 
 class DecodeState(NamedTuple):
+    """All per-layer decode caches plus the current token position."""
+
     pattern: Dict[str, Any]   # per pattern position: cache stacked over repeats
     tail: Dict[str, Any]
     pos: jnp.ndarray          # scalar int32: number of tokens already consumed
@@ -246,6 +250,7 @@ def _init_layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
 
 def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
                       cache_dtype=jnp.bfloat16) -> DecodeState:
+    """Allocate empty decode caches for every layer (stacked over repeats)."""
     pattern = {}
     for i, spec in enumerate(cfg.pattern):
         one = _init_layer_cache(cfg, spec, batch, max_len, cache_dtype)
@@ -261,6 +266,7 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
 
 def abstract_decode_state(cfg: ModelConfig, batch: int, max_len: int,
                           cache_dtype=jnp.bfloat16):
+    """Shape/dtype tree of init_decode_state without allocating."""
     return jax.eval_shape(
         functools.partial(init_decode_state, cfg, batch, max_len, cache_dtype)
     )

@@ -20,6 +20,7 @@ from repro.sharding import constrain
 
 
 def init_moe_params(rng, cfg: ModelConfig, dtype=jnp.float32):
+    """Init router + per-expert FFN stacks (and shared expert if any)."""
     m = cfg.moe
     d, eff = cfg.d_model, m.expert_d_ff
     ks = jax.random.split(rng, 7)
@@ -39,6 +40,7 @@ def init_moe_params(rng, cfg: ModelConfig, dtype=jnp.float32):
 
 
 def capacity(m: MoEConfig, chunk_tokens: int) -> int:
+    """Per-expert token capacity for a chunk, rounded up to a multiple of 4."""
     c = int(chunk_tokens * m.top_k * m.capacity_factor / m.num_experts)
     return max(4, ((c + 3) // 4) * 4)
 

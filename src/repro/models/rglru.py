@@ -27,6 +27,8 @@ _NB = 8           # gate projection block-diagonal blocks
 
 
 class RGLRUState(NamedTuple):
+    """RG-LRU decode state: recurrent vector + streaming-conv tail."""
+
     h: jnp.ndarray      # (B, e) recurrent state
     conv: jnp.ndarray   # (B, cw-1, e) streaming conv state
 
@@ -36,6 +38,7 @@ def _e(cfg: ModelConfig) -> int:
 
 
 def init_rglru_params(rng, cfg: ModelConfig, dtype=jnp.float32):
+    """Init the Griffin RG-LRU block (gates, block-diag recurrences, conv)."""
     d, e = cfg.d_model, _e(cfg)
     eb = e // _NB
     ks = jax.random.split(rng, 6)
@@ -55,6 +58,7 @@ def init_rglru_params(rng, cfg: ModelConfig, dtype=jnp.float32):
 
 
 def init_rglru_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> RGLRUState:
+    """Zero-initialise the RG-LRU decode state."""
     e = _e(cfg)
     return RGLRUState(
         h=jnp.zeros((batch, e), dtype),

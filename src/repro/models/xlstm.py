@@ -38,6 +38,8 @@ def _slstm_ff(cfg: ModelConfig) -> int:
 # ===========================================================================
 
 class MLSTMState(NamedTuple):
+    """mLSTM decode state: matrix memory, normalizer, stabilizer, conv tail."""
+
     C: jnp.ndarray       # (B, H, dh, dh) matrix memory (k-major)
     n: jnp.ndarray       # (B, H, dh) normalizer state
     m: jnp.ndarray       # (B, H) log stabilizer
@@ -45,6 +47,7 @@ class MLSTMState(NamedTuple):
 
 
 def init_mlstm_params(rng, cfg: ModelConfig, dtype=jnp.float32):
+    """Init the mLSTM block (up-proj, conv, q/k/v, gates, down-proj)."""
     d, e, H = cfg.d_model, _e(cfg), cfg.num_heads
     ks = jax.random.split(rng, 6)
     s = lambda fan: 1.0 / jnp.sqrt(fan)
@@ -65,6 +68,7 @@ def init_mlstm_params(rng, cfg: ModelConfig, dtype=jnp.float32):
 
 
 def init_mlstm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> MLSTMState:
+    """Zero-initialise the mLSTM decode state."""
     e, H = _e(cfg), cfg.num_heads
     dh = e // H
     return MLSTMState(
@@ -206,6 +210,8 @@ def mlstm_decode(p, x, state: MLSTMState, cfg: ModelConfig):
 # ===========================================================================
 
 class SLSTMState(NamedTuple):
+    """sLSTM decode state: cell, normalizer, hidden, stabilizer, conv tail."""
+
     c: jnp.ndarray       # (B, d)
     n: jnp.ndarray       # (B, d)
     h: jnp.ndarray       # (B, d)
@@ -214,6 +220,7 @@ class SLSTMState(NamedTuple):
 
 
 def init_slstm_params(rng, cfg: ModelConfig, dtype=jnp.float32):
+    """Init the sLSTM block (conv, input/recurrent gate stacks, MLP)."""
     d, H = cfg.d_model, cfg.num_heads
     dh = d // H
     ff = _slstm_ff(cfg)
@@ -236,6 +243,7 @@ def init_slstm_params(rng, cfg: ModelConfig, dtype=jnp.float32):
 
 
 def init_slstm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> SLSTMState:
+    """Zero-initialise the sLSTM decode state (stabilizer at -inf)."""
     d = cfg.d_model
     z = lambda: jnp.zeros((batch, d), dtype)
     return SLSTMState(c=z(), n=z(), h=z(),
@@ -276,6 +284,7 @@ def _slstm_out(p, h, cfg: ModelConfig):
 
 
 def slstm_forward(p, x, cfg: ModelConfig, return_cache: bool = False):
+    """Run the sLSTM over a full sequence via lax.scan over time."""
     B, S, d = x.shape
     xc, conv_state = causal_conv1d(x, p["conv"])
     xc = jax.nn.silu(xc)
@@ -295,6 +304,7 @@ def slstm_forward(p, x, cfg: ModelConfig, return_cache: bool = False):
 
 
 def slstm_decode(p, x, state: SLSTMState, cfg: ModelConfig):
+    """Advance the sLSTM one token from cached state."""
     xc, conv_state = causal_conv1d(x, p["conv"], state.conv)
     xc = jax.nn.silu(xc)
     wx = (xc @ p["w"] + p["b"])[:, 0]

@@ -1,3 +1,4 @@
+"""Server/client optimizers and learning-rate schedules."""
 from repro.optim.optimizers import (  # noqa: F401
     Optimizer,
     adagrad,

@@ -31,6 +31,8 @@ def _state_momentum(state, params):
 
 
 class Optimizer(NamedTuple):
+    """A stateless optimizer triple: init, update, and a momentum accessor."""
+
     init: Callable[[Any], Any]
     update: Callable[[Any, Any, Any], tuple]   # (grads, state, params) -> (updates, state)
     # momentum(opt_state, params) -> the first-moment buffer (zeros for
@@ -44,10 +46,12 @@ def _lr_at(lr: Schedule, step):
 
 
 def apply_updates(params, updates):
+    """Add updates to params, casting each update to its param's dtype."""
     return tm.tmap(lambda p, u: p + u.astype(p.dtype), params, updates)
 
 
 def sgd(lr: Schedule) -> Optimizer:
+    """Plain SGD: update = -lr * grad."""
     def init(params):
         return {"step": jnp.zeros((), jnp.int32)}
 
@@ -59,6 +63,7 @@ def sgd(lr: Schedule) -> Optimizer:
 
 
 def sgdm(lr: Schedule, momentum: float = 0.9, nesterov: bool = False) -> Optimizer:
+    """SGD with (optionally Nesterov) momentum."""
     def init(params):
         return {"step": jnp.zeros((), jnp.int32), "m": tm.tzeros_like(params)}
 
@@ -97,6 +102,7 @@ def adam(lr: Schedule, b1: float = 0.9, b2: float = 0.99,
 
 
 def adagrad(lr: Schedule, eps: float = 1e-5) -> Optimizer:
+    """Adagrad: per-parameter lr scaled by accumulated squared grads."""
     def init(params):
         return {"step": jnp.zeros((), jnp.int32),
                 "v": tm.tzeros_like(params, jnp.float32)}
@@ -112,6 +118,7 @@ def adagrad(lr: Schedule, eps: float = 1e-5) -> Optimizer:
 
 def yogi(lr: Schedule, b1: float = 0.9, b2: float = 0.99,
          eps: float = 1e-3) -> Optimizer:
+    """Yogi (Zaheer et al. 2018): Adam with sign-controlled v updates."""
     def init(params):
         return {
             "step": jnp.zeros((), jnp.int32),
@@ -138,6 +145,7 @@ _REGISTRY = {"sgd": sgd, "sgdm": sgdm, "adam": adam, "adagrad": adagrad,
 
 
 def get_optimizer(name: str, lr: Schedule, momentum: float = 0.9) -> Optimizer:
+    """Look up an optimizer by registry name (momentum only used by sgdm)."""
     if name == "sgdm":
         return sgdm(lr, momentum)
     if name not in _REGISTRY:

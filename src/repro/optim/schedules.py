@@ -7,6 +7,7 @@ import jax.numpy as jnp
 
 
 def constant(lr: float):
+    """Flat schedule: lr at every step."""
     return lambda step: jnp.asarray(lr, jnp.float32)
 
 
@@ -16,10 +17,12 @@ def inverse_time_decay(lr: float, decay: float = 1.0):
 
 
 def exponential_decay(lr: float, rate: float, every: int):
+    """lr * rate^(t/every) — the AFO-style exponential client decay."""
     return lambda step: lr * rate ** (step.astype(jnp.float32) / every)
 
 
 def cosine_decay(lr: float, total_steps: int, floor: float = 0.0):
+    """Cosine anneal from lr to floor over total_steps."""
     def fn(step):
         frac = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
         return floor + (lr - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
@@ -27,6 +30,7 @@ def cosine_decay(lr: float, total_steps: int, floor: float = 0.0):
 
 
 def warmup_cosine(lr: float, warmup: int, total_steps: int, floor: float = 0.0):
+    """Linear warmup for ``warmup`` steps, then cosine decay to floor."""
     cos = cosine_decay(lr, max(total_steps - warmup, 1), floor)
     def fn(step):
         s = step.astype(jnp.float32)

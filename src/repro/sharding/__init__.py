@@ -1,3 +1,4 @@
+"""Mesh axis rules, HLO cost analysis, and roofline estimates."""
 from repro.sharding.rules import (  # noqa: F401
     axis_rules,
     constrain,

@@ -65,6 +65,8 @@ _ARRAY = re.compile(r"(\w+)\[([\d,]*)\]")
 
 
 class Instr(NamedTuple):
+    """One parsed HLO instruction: name, result shape, opcode, operand text."""
+
     name: str
     shape: str
     op: str
@@ -87,6 +89,7 @@ def _shape_numel_bytes(shape_str: str) -> Tuple[int, int]:
 
 
 def parse_module(hlo: str) -> Dict[str, List[Instr]]:
+    """Split HLO text into computations, each a list of parsed Instrs."""
     comps: Dict[str, List[Instr]] = {}
     name: Optional[str] = None
     entry: Optional[str] = None
@@ -216,24 +219,18 @@ def _operand_names(ins: Instr) -> List[str]:
     return re.findall(r"%([\w.\-]+)", head)
 
 
-def _param_read_bytes(pidx: int, full_bytes: float,
-                      callee: List[Instr]) -> float:
-    """Bytes a fused computation actually reads of its ``pidx``-th parameter.
-
-    Scan bodies receive whole stacked arrays and dynamic-slice one step's
-    worth inside the fusion; charging the full operand per iteration
-    overcounted memory traffic ~1000x. If every use of the parameter is a
-    slicing op, charge the slice sizes; otherwise the full buffer.
-    """
-    pname = None
+def _param_instr_name(pidx: int, callee: List[Instr]) -> Optional[str]:
+    """Name of the callee's ``pidx``-th parameter instruction, if present."""
     for ins in callee:
         if ins.op == "parameter" and ins.rest.startswith(f"{pidx})"):
-            pname = ins.name
-            break
-    if pname is None:
-        return full_bytes
-    # follow same-size alias chains (bitcast/reshape/copy/convert/transpose):
-    # a scan body often bitcasts the stacked buffer before slicing it
+            return ins.name
+    return None
+
+
+def _alias_chain(pname: str, callee: List[Instr]) -> set:
+    """Names reachable from ``pname`` through same-size alias ops
+    (bitcast/reshape/copy/convert/transpose): a scan body often bitcasts
+    the stacked buffer before slicing it."""
     aliases = {pname}
     for _ in range(4):
         grew = False
@@ -245,25 +242,45 @@ def _param_read_bytes(pidx: int, full_bytes: float,
                     grew = True
         if not grew:
             break
+    return aliases
+
+
+def _dus_update_bytes(ops_: List[str], callee: List[Instr]) -> float:
+    """Update-extent bytes of a dynamic-update-slice's second operand."""
+    if len(ops_) >= 2:
+        for cand in callee:
+            if cand.name == ops_[1]:
+                _, ub = _shape_numel_bytes(cand.shape)
+                return ub
+    return 0.0
+
+
+def _param_read_bytes(pidx: int, full_bytes: float,
+                      callee: List[Instr]) -> float:
+    """Bytes a fused computation actually reads of its ``pidx``-th parameter.
+
+    Scan bodies receive whole stacked arrays and dynamic-slice one step's
+    worth inside the fusion; charging the full operand per iteration
+    overcounted memory traffic ~1000x. If every use of the parameter is a
+    slicing op, charge the slice sizes; otherwise the full buffer.
+    """
+    pname = _param_instr_name(pidx, callee)
+    if pname is None:
+        return full_bytes
+    aliases = _alias_chain(pname, callee)
     read = 0.0
     for ins in callee:
         if ins.op == "parameter" or ins.name in aliases:
             continue
         ops_ = _operand_names(ins)
-        hit = aliases & set(ops_)
-        if not hit:
+        if not (aliases & set(ops_)):
             continue
         if ins.op in ("dynamic-slice", "slice", "gather"):
             _, rb = _shape_numel_bytes(ins.shape)
             read += rb
         elif ins.op == "dynamic-update-slice" and ops_ and ops_[0] in aliases:
             # in-place update of the buffer: reads ~the update extent
-            ub = 0.0
-            if len(ops_) >= 2:
-                for cand in callee:
-                    if cand.name == ops_[1]:
-                        _, ub = _shape_numel_bytes(cand.shape)
-                        break
+            ub = _dus_update_bytes(ops_, callee)
             read += ub if ub else full_bytes
         else:
             return full_bytes

@@ -29,6 +29,8 @@ from repro.configs.base import ModelConfig, ShapeConfig
 
 @dataclass(frozen=True)
 class Hardware:
+    """Peak per-chip numbers the roofline terms divide by."""
+
     name: str = "tpu-v5e"
     peak_flops: float = 197e12      # bf16 FLOP/s per chip
     hbm_bw: float = 819e9           # bytes/s per chip
@@ -40,6 +42,8 @@ V5E = Hardware()
 
 @dataclass
 class RooflineReport:
+    """Per-(arch, shape, mesh) roofline breakdown and derived time terms."""
+
     arch: str
     shape: str
     mesh: str
@@ -60,6 +64,7 @@ class RooflineReport:
     notes: str = ""
 
     def as_row(self) -> dict:
+        """Flatten to a plain dict for tables/JSON."""
         return {
             "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
             "chips": self.chips,
@@ -91,6 +96,7 @@ def model_flops(cfg: ModelConfig, shape: ShapeConfig,
 
 
 def step_tokens(shape: ShapeConfig, local_steps: int = 1) -> int:
+    """Tokens processed by one step of this shape (decode: one per row)."""
     if shape.kind == "train":
         return shape.global_batch * shape.seq_len * max(local_steps, 1)
     if shape.kind == "prefill":
@@ -134,6 +140,7 @@ def derive(arch: str, shape_cfg: ShapeConfig, cfg: ModelConfig, mesh_name: str,
 def format_table(reports, keys=("arch", "shape", "mesh", "compute_s",
                                 "memory_s", "collective_s", "dominant",
                                 "useful_ratio")) -> str:
+    """Render reports as an aligned fixed-width text table."""
     rows = [r.as_row() if isinstance(r, RooflineReport) else r
             for r in reports]
     widths = {k: max(len(k), *(len(_fmt(row.get(k))) for row in rows))

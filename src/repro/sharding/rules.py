@@ -51,10 +51,12 @@ def make_mesh_compat(axis_shapes, axis_names, *, devices=None,
 
 
 def current_mesh() -> Optional[Mesh]:
+    """The mesh installed by the innermost axis_rules (None outside one)."""
     return getattr(_STATE, "mesh", None)
 
 
 def current_rules() -> dict:
+    """The logical-axis rule map currently in effect."""
     return getattr(_STATE, "rules", DEFAULT_RULES)
 
 
@@ -82,6 +84,7 @@ def _resolve(name: Optional[str], mesh: Mesh, rules: dict):
 
 def logical_spec(names: Tuple[Optional[str], ...], mesh: Optional[Mesh] = None,
                  rules: Optional[dict] = None) -> P:
+    """Map logical axis names to a PartitionSpec under the current rules."""
     mesh = mesh or current_mesh()
     rules = rules or current_rules()
     if mesh is None:

@@ -14,18 +14,22 @@ import jax.numpy as jnp
 
 
 def tmap(fn, *trees):
+    """Alias for jax.tree_util.tree_map."""
     return jax.tree_util.tree_map(fn, *trees)
 
 
 def tadd(a, b):
+    """a + b, leafwise."""
     return tmap(jnp.add, a, b)
 
 
 def tsub(a, b):
+    """a - b, leafwise."""
     return tmap(jnp.subtract, a, b)
 
 
 def tscale(s, a):
+    """s * a, leafwise."""
     return tmap(lambda x: s * x, a)
 
 
@@ -50,14 +54,17 @@ def tvdot(a, b, dtype=None):
 
 
 def tnorm(a):
+    """Global L2 norm across all leaves."""
     return jnp.sqrt(tvdot(a, a))
 
 
 def tzeros_like(a, dtype=None):
+    """Zeros with each leaf's shape (and dtype unless overridden)."""
     return tmap(lambda x: jnp.zeros_like(x, dtype=dtype or x.dtype), a)
 
 
 def tcast(a, dtype):
+    """Cast every leaf to ``dtype``."""
     return tmap(lambda x: x.astype(dtype), a)
 
 
@@ -88,8 +95,10 @@ def tdynamic_update(tree, update, i):
 
 
 def tree_size(a) -> int:
+    """Total element count across all leaves."""
     return sum(x.size for x in jax.tree_util.tree_leaves(a))
 
 
 def tree_bytes(a) -> int:
+    """Total bytes across all leaves."""
     return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(a))

@@ -1,0 +1,457 @@
+"""Fault-injecting cohort subsystem: zero-rate configs reproduce the
+fault-free engine bitwise; fault draws replay deterministically; the
+survivor-masked partial aggregation matches an eager survivor-subset
+reference across all placements and the async staleness=0 path; an
+all-dropped round degrades to a zero delta; dropped clients' persistent
+state never lands; heterogeneous step budgets are exact under plain SGD;
+and the process-based shared-memory prefetcher honours the thread
+backend's contract."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FedConfig
+from repro.core import FedSim
+from repro.data import make_federated_lsq
+from repro.data.cohort_source import CohortSource
+from repro.data.prefetch import (Cohort, ProcessCohortPrefetcher,
+                                 make_prefetcher)
+from repro.data.sampling import ClientSampler
+from repro.data.synthetic_lsq import lsq_batches
+
+C, D, K, N = 4, 3, 8, 12
+
+BASE = dict(clients_per_round=C, local_steps=K, server_opt="sgd",
+            server_lr=0.5, client_opt="sgd", client_lr=0.01)
+
+
+def _fed(**kw):
+    return FedConfig(algorithm="fedavg", **{**BASE, **kw})
+
+
+@pytest.fixture(scope="module")
+def problem():
+    clients, data = make_federated_lsq(N, 40, D, heterogeneity=10.0, seed=0)
+
+    def grad_fn(params, batch):
+        def loss(p):
+            r = batch["x"] @ p - batch["y"]
+            return 0.5 * jnp.mean(r * r) * 40
+        return jax.value_and_grad(loss)(params)
+
+    def batch_fn(cid, r, steps):
+        X, y = data[cid]
+        return lsq_batches(X, y, 10, steps, seed=r * 131 + cid)
+
+    return grad_fn, batch_fn
+
+
+def _sim(problem, fed, **kw):
+    grad_fn, batch_fn = problem
+    return FedSim(fed=fed, grad_fn=grad_fn, batch_fn=batch_fn,
+                  num_clients=N, seed=7, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic draws
+# ---------------------------------------------------------------------------
+
+def test_zero_fault_cohorts_are_bitwise_client_sampler():
+    """With every fault knob at its default the source replays
+    ClientSampler's stream bitwise and ships no survivors mask."""
+    src = CohortSource(_fed(), N, lambda ids, r: {"x": np.zeros(1)}, seed=3)
+    ref = ClientSampler(N, C, seed=3)
+    for r in range(10):
+        np.testing.assert_array_equal(src.sample(r), ref.sample(r))
+        ids, faults = src.draw(r)
+        assert faults.survivors is None
+        assert faults.budgets is None
+        assert faults.extra_staleness == 0 and faults.dropped == 0
+    assert not src.mask_faults
+
+
+def test_fault_draws_replay_bitwise():
+    """draw(r) is a pure function of (seed, round): a fresh source replays
+    the full fault matrix identically."""
+    fed = _fed(availability="diurnal", availability_period=6,
+               availability_duty=0.6, dropout_rate=0.3, min_local_steps=2,
+               straggler_rate=0.5, async_rounds=True)
+    a = CohortSource(fed, N, lambda ids, r: {}, seed=11)
+    b = CohortSource(fed, N, lambda ids, r: {}, seed=11)
+    saw_fault = False
+    for r in range(12):
+        ia, fa = a.draw(r)
+        ib, fb = b.draw(r)
+        np.testing.assert_array_equal(ia, ib)
+        np.testing.assert_array_equal(fa.survivors, fb.survivors)
+        np.testing.assert_array_equal(fa.budgets, fb.budgets)
+        assert fa.extra_staleness == fb.extra_staleness
+        assert fa.dropped == fb.dropped
+        assert fa.budgets.min() >= 2 and fa.budgets.max() <= K
+        saw_fault |= fa.dropped > 0 or fa.extra_staleness > 0
+    assert saw_fault  # the rates above make an all-clean run implausible
+
+
+def test_different_seeds_draw_different_faults():
+    fed = _fed(dropout_rate=0.5)
+    a = CohortSource(fed, N, lambda ids, r: {}, seed=0)
+    b = CohortSource(fed, N, lambda ids, r: {}, seed=1)
+    masks_a = [tuple(a.draw(r)[1].survivors) for r in range(8)]
+    masks_b = [tuple(b.draw(r)[1].survivors) for r in range(8)]
+    assert masks_a != masks_b
+
+
+def test_diurnal_availability_and_conscription():
+    """Cohorts draw from the currently-up set; a shortfall is conscripted
+    from the down set and masked out (shapes stay static)."""
+    fed = _fed(availability="diurnal", availability_period=5,
+               availability_duty=0.5)
+    src = CohortSource(fed, 6, lambda ids, r: {}, seed=2)  # n_up spans 1..4
+    saw_full, saw_shortfall = False, False
+    for r in range(15):
+        avail = src.available(r)
+        ids, faults = src.draw(r)
+        assert ids.shape == (C,) and len(set(ids.tolist())) == C
+        n_up = int(avail.sum())
+        assert faults.dropped == max(0, C - n_up)
+        # every survivor was genuinely available; every conscript is dead
+        up_ids = ids[faults.survivors > 0]
+        assert avail[up_ids].all()
+        if n_up >= C:
+            saw_full = True
+            np.testing.assert_array_equal(faults.survivors, np.ones(C))
+        else:
+            saw_shortfall = True
+    assert saw_full and saw_shortfall
+
+
+# ---------------------------------------------------------------------------
+# Survivor-masked aggregation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("placement", ["parallel", "sequential", "chunked"])
+def test_masked_round_matches_survivor_subset(problem, placement):
+    """One masked round == the same round run on just the survivors: the
+    weighted partial aggregation renormalizes over the survivor subset
+    (weights and losses), for every placement."""
+    mask = np.array([1.0, 0.0, 1.0, 1.0], np.float32)
+    weights = np.array([0.5, 1.5, 2.0, 1.0], np.float32)
+    ids = np.arange(C)
+    params = jnp.zeros(D)
+
+    sim_m = _sim(problem, _fed(dropout_rate=0.5), placement=placement)
+    batches = sim_m.stack_cohort(ids, 0)
+    cohort = Cohort(0, ids, batches, weights, mask, 0, dropped=1)
+    state_m, rec_m = sim_m.round(sim_m.init(params), 0, cohort)
+    assert rec_m["dropped"] == 1
+
+    sim_r = _sim(problem, _fed(), placement=placement)
+    keep = mask > 0
+    sub = Cohort(0, ids[keep],
+                 jax.tree_util.tree_map(lambda x: x[keep], batches),
+                 weights[keep], None, 0, 0)
+    state_r, rec_r = sim_r.round(sim_r.init(params), 0, sub)
+
+    np.testing.assert_allclose(np.asarray(state_m.params),
+                               np.asarray(state_r.params), rtol=1e-5)
+    assert rec_m["loss_first"] == pytest.approx(rec_r["loss_first"],
+                                                rel=1e-5)
+    assert rec_m["loss_last"] == pytest.approx(rec_r["loss_last"], rel=1e-5)
+
+
+@pytest.mark.parametrize("placement", ["parallel", "sequential", "chunked"])
+def test_placements_agree_under_dropout(problem, placement):
+    """The fault-injected run is placement-invariant (same fault stream,
+    same numbers)."""
+    fed = _fed(dropout_rate=0.4)
+    ref_state, ref_hist = _sim(problem, fed, placement="parallel").run(
+        jnp.zeros(D), 3)
+    state, hist = _sim(problem, fed, placement=placement).run(
+        jnp.zeros(D), 3)
+    np.testing.assert_allclose(np.asarray(ref_state.params),
+                               np.asarray(state.params), rtol=1e-5)
+    assert [h["dropped"] for h in hist] == [h["dropped"] for h in ref_hist]
+
+
+def test_async_staleness_zero_matches_sync_under_dropout(problem):
+    """max_staleness=0 still reproduces the sync path when rounds carry a
+    survivors mask (same draws, same masked aggregation)."""
+    st_s, h_s = _sim(problem, _fed(dropout_rate=0.4)).run(jnp.zeros(D), 4)
+    st_a, h_a = _sim(problem, _fed(dropout_rate=0.4, async_rounds=True,
+                                   max_staleness=0)).run(jnp.zeros(D), 4)
+    np.testing.assert_array_equal(np.asarray(st_s.params),
+                                  np.asarray(st_a.params))
+    assert [h["dropped"] for h in h_s] == [h["dropped"] for h in h_a]
+
+
+def test_all_dropped_round_is_zero_delta(problem):
+    """dropout_rate=1: every round degrades to a zero pseudo-gradient (no
+    NaN) and history reports full-cohort drops and 0.0 survivor losses."""
+    state, hist = _sim(problem, _fed(dropout_rate=1.0)).run(jnp.zeros(D), 2)
+    np.testing.assert_array_equal(np.asarray(state.params), np.zeros(D))
+    assert [h["dropped"] for h in hist] == [C, C]
+    assert all(h["loss_last"] == 0.0 for h in hist)
+
+
+def test_fault_history_replays_identically(problem):
+    """Two runs of the same faulty config produce identical params and
+    identical per-round fault counts (sync and async)."""
+    fed = _fed(dropout_rate=0.3, straggler_rate=0.5, async_rounds=True,
+               max_staleness=1, staleness_discount=0.7)
+    st1, h1 = _sim(problem, fed).run(jnp.zeros(D), 5)
+    st2, h2 = _sim(problem, fed).run(jnp.zeros(D), 5)
+    np.testing.assert_array_equal(np.asarray(st1.params),
+                                  np.asarray(st2.params))
+    keys = ("dropped", "straggled", "staleness")
+    assert [[h[k] for k in keys] for h in h1] == \
+        [[h[k] for k in keys] for h in h2]
+    assert any(h["straggled"] > 0 for h in h1)
+
+
+def test_straggler_lateness_rides_the_discount_path(problem):
+    """A cohort that is always exactly one round late under max_staleness=0
+    equals the on-time run with the delta pre-scaled by the discount: the
+    lateness only enters through staleness_discount**s."""
+    discount = 0.5
+    late = _fed(async_rounds=True, max_staleness=0,
+                staleness_discount=discount, straggler_rate=1.0,
+                straggler_max_lateness=1)
+    st_late, h_late = _sim(problem, late).run(jnp.zeros(D), 3)
+    assert all(h["straggled"] == 1 and h["staleness"] == 1 for h in h_late)
+    # sgd server: lr * (discount * delta) == (lr * discount) * delta
+    ontime = _fed(async_rounds=True, max_staleness=0,
+                  server_lr=BASE["server_lr"] * discount)
+    st_ref, _ = _sim(problem, ontime).run(jnp.zeros(D), 3)
+    np.testing.assert_allclose(np.asarray(st_late.params),
+                               np.asarray(st_ref.params), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Dropped clients' persistent state must not land
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("store_placement", ["host", "device"])
+@pytest.mark.parametrize("algorithm,extra", [
+    ("scaffold", {}),
+    ("fedep", dict(burn_in_steps=4, steps_per_sample=2, shrinkage_rho=0.5,
+                   fedep_damping=0.7)),
+])
+def test_dropped_client_state_not_written(problem, algorithm, extra,
+                                          store_placement):
+    """After a masked stateful round the dropped clients' store rows are
+    still the zero init with unbumped stamps; survivors' rows landed."""
+    fed = FedConfig(algorithm=algorithm, **{**BASE, **extra},
+                    dropout_rate=0.5,
+                    client_state_placement=store_placement)
+    sim = _sim(problem, fed)
+    mask = np.array([1.0, 0.0, 0.0, 1.0], np.float32)
+    ids = np.array([1, 4, 6, 9])
+    batches = sim.stack_cohort(ids, 0)
+    cohort = Cohort(0, ids, batches, None, mask, 0, dropped=2)
+    sim.round(sim.init(jnp.zeros(D)), 0, cohort)
+
+    sd = sim.client_store.state_dict()
+    stamps = np.asarray(sd["stamps"])
+    np.testing.assert_array_equal(stamps[ids], mask.astype(stamps.dtype))
+    leaves = [np.asarray(leaf)
+              for leaf in jax.tree_util.tree_leaves(sd["buffers"])]
+    for cid, m in zip(ids, mask):
+        if m == 0:
+            for leaf in leaves:
+                np.testing.assert_array_equal(leaf[cid],
+                                              np.zeros_like(leaf[cid]))
+        else:
+            assert any(np.any(leaf[cid] != 0) for leaf in leaves)
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous local-step budgets
+# ---------------------------------------------------------------------------
+
+def test_budget_masking_is_exact_under_sgd(problem):
+    """A client budgeted b steps out of K produces EXACTLY the delta of a
+    b-step run: past the budget, gradients are masked and plain SGD params
+    freeze."""
+    grad_fn, batch_fn = problem
+    b = 3
+    params = jnp.zeros(D)
+    ids = np.array([5])
+
+    fed_b = _fed(clients_per_round=1, min_local_steps=b)
+    sim_b = _sim(problem, fed_b)
+    full = sim_b.stack_cohort(ids, 0)
+    full = dict(full)
+    full["_active"] = (np.arange(K)[None, :] < b).astype(np.float32)
+    st_b, _ = sim_b.round(sim_b.init(params),
+                          0, Cohort(0, ids, full, None, None, 0, 0))
+
+    fed_r = _fed(clients_per_round=1, local_steps=b)
+    sim_r = _sim(problem, fed_r)
+    short = {k: v[:, :b] for k, v in sim_b.stack_cohort(ids, 0).items()}
+    st_r, _ = sim_r.round(sim_r.init(params),
+                          0, Cohort(0, ids, short, None, None, 0, 0))
+    np.testing.assert_array_equal(np.asarray(st_b.params),
+                                  np.asarray(st_r.params))
+
+
+def test_full_budgets_match_unbudgeted_run(problem):
+    """min_local_steps == local_steps draws every budget at K, and the
+    budget-masked program reproduces the plain run bitwise."""
+    st_p, _ = _sim(problem, _fed()).run(jnp.zeros(D), 3)
+    st_b, _ = _sim(problem, _fed(min_local_steps=K)).run(jnp.zeros(D), 3)
+    np.testing.assert_array_equal(np.asarray(st_p.params),
+                                  np.asarray(st_b.params))
+
+
+def test_budgets_require_dict_batches():
+    fed = _fed(min_local_steps=2)
+    src = CohortSource(fed, N, lambda ids, r: np.zeros((C, K, 2)), seed=0)
+    with pytest.raises(TypeError, match="_active"):
+        src.cohort(0)
+
+
+# ---------------------------------------------------------------------------
+# Config validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw,match", [
+    (dict(availability="sometimes"), "availability"),
+    (dict(availability="diurnal", availability_period=0), "period"),
+    (dict(availability="diurnal", availability_duty=0.0), "duty"),
+    (dict(availability="diurnal", availability_duty=1.5), "duty"),
+    (dict(dropout_rate=-0.1), "dropout_rate"),
+    (dict(dropout_rate=1.5), "dropout_rate"),
+    (dict(straggler_rate=0.5), "async_rounds"),
+    (dict(straggler_rate=0.5, async_rounds=True,
+          straggler_max_lateness=0), "lateness"),
+    (dict(min_local_steps=-1), "min_local_steps"),
+    (dict(min_local_steps=99), "min_local_steps"),
+    (dict(min_local_steps=2, client_opt="sgdm"), "sgd"),
+    (dict(prefetch_backend="greenlet"), "prefetch_backend"),
+])
+def test_fault_knob_validation(kw, match):
+    with pytest.raises(ValueError, match=match):
+        _fed(**kw)
+
+
+def test_budgets_require_step_budget_support():
+    """Algorithms whose client step mixes non-gradient terms (scaffold's
+    control variates) cannot freeze exactly via grad masking: rejected."""
+    with pytest.raises(ValueError, match="budget"):
+        FedConfig(algorithm="scaffold", **{**BASE, "min_local_steps": 2})
+
+
+def test_fault_injection_flag():
+    assert not _fed().fault_injection
+    for kw in (dict(dropout_rate=0.1), dict(availability="diurnal"),
+               dict(straggler_rate=0.1, async_rounds=True),
+               dict(min_local_steps=1)):
+        assert _fed(**kw).fault_injection
+
+
+# ---------------------------------------------------------------------------
+# Process-based shared-memory prefetcher
+# ---------------------------------------------------------------------------
+
+def _np_cohort(r):
+    n = 3 + r  # growing leaves force arena slot regrowth
+    return Cohort(r, np.arange(n), {"x": np.full((n, 2), r, np.float32)},
+                  None, np.ones(n, np.float32), 0, 0)
+
+
+def test_process_prefetcher_order_and_copy_stability():
+    """In-order delivery; returned leaves are owned copies that survive the
+    arena slot being recycled and rewritten by later rounds."""
+    with ProcessCohortPrefetcher(_np_cohort, 0, 4, depth=1) as p:
+        first = p.get(0)
+        for r in range(1, 4):
+            c = p.get(r)
+            assert c.round_idx == r
+            np.testing.assert_array_equal(
+                c.batches["x"], np.full((3 + r, 2), r, np.float32))
+            np.testing.assert_array_equal(c.survivors,
+                                          np.ones(3 + r, np.float32))
+        # round 0's leaves must be unaffected by the slot reuse above
+        np.testing.assert_array_equal(first.batches["x"],
+                                      np.zeros((3, 2), np.float32))
+
+
+def test_process_prefetcher_propagates_builder_errors():
+    def build(r):
+        if r == 1:
+            raise ValueError("boom-1")
+        return _np_cohort(r)
+
+    with ProcessCohortPrefetcher(build, 0, 3, depth=2) as p:
+        p.get(0)
+        with pytest.raises(RuntimeError, match="boom-1"):
+            p.get(1)
+
+
+def test_process_prefetcher_close_is_idempotent():
+    p = ProcessCohortPrefetcher(_np_cohort, 0, 100, depth=2)
+    p.get(0)
+    p.close()
+    p.close()
+
+
+def test_make_prefetcher_rejects_unknown_backend():
+    with pytest.raises(ValueError, match="prefetch_backend"):
+        make_prefetcher("greenlet", _np_cohort, 0, 1)
+
+
+def test_make_prefetcher_falls_back_on_jax_leaves():
+    """A jax-computing build_fn cannot cross the fork: the factory probes
+    one cohort and falls back to the thread backend with a warning."""
+    def build(r):
+        return Cohort(r, np.arange(2), {"x": jnp.zeros((2, 2))}, None)
+
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        p = make_prefetcher("process", build, 0, 2)
+    try:
+        assert type(p).__name__ == "CohortPrefetcher"
+        assert p.get(0).round_idx == 0
+    finally:
+        p.close()
+
+
+def test_process_backend_run_matches_thread_backend(problem):
+    """FedSim end-to-end: numpy-leaf cohorts through the shared-memory
+    arena reproduce the thread backend's run bitwise."""
+    grad_fn, batch_fn = problem
+
+    def np_batch_fn(cid, r, steps):
+        return {k: np.asarray(v) for k, v in batch_fn(cid, r, steps).items()}
+
+    params = jnp.zeros(D)
+    runs = {}
+    for backend in ("thread", "process"):
+        fed = _fed(dropout_rate=0.3, prefetch_rounds=2,
+                   prefetch_backend=backend)
+        sim = FedSim(fed=fed, grad_fn=grad_fn, batch_fn=np_batch_fn,
+                     num_clients=N, seed=7)
+        runs[backend] = sim.run(params, 4)
+    np.testing.assert_array_equal(np.asarray(runs["thread"][0].params),
+                                  np.asarray(runs["process"][0].params))
+    assert [h["dropped"] for h in runs["thread"][1]] == \
+        [h["dropped"] for h in runs["process"][1]]
+
+
+def test_cohort_source_weights_ride_the_cohort(problem):
+    """Per-client population weights resolve to the cohort slice (and the
+    eager positivity check still fires on the raw, pre-mask weights)."""
+    fed = _fed(dropout_rate=0.5)
+    w = np.linspace(1.0, 2.0, N)
+    sim = _sim(problem, fed)
+    src = CohortSource(fed, N, sim.stack_cohort, client_weights=w, seed=7)
+    cohort = src.cohort(0)
+    np.testing.assert_allclose(
+        cohort.weights, w[cohort.client_ids].astype(np.float32))
+
+    bad = CohortSource(fed, N, sim.stack_cohort,
+                       client_weights=np.zeros(N), seed=7)
+    with pytest.raises(ValueError, match="round 0"):
+        bad.cohort(0)

@@ -89,3 +89,12 @@ def test_client_sampler():
     assert counts.sum() == 2000
     with pytest.raises(ValueError):
         ClientSampler(5, 10)
+
+
+def test_client_sampler_names_the_bad_knob():
+    with pytest.raises(ValueError, match="num_clients must be >= 1"):
+        ClientSampler(0, 1)
+    with pytest.raises(ValueError, match="clients_per_round must be >= 1"):
+        ClientSampler(5, 0)
+    with pytest.raises(ValueError, match=r"clients_per_round \(10\)"):
+        ClientSampler(5, 10)
