@@ -1,15 +1,16 @@
 """Bench regression gate: compare fresh ``BENCH_*.json`` reports against
 the committed baselines in ``benchmarks/baselines/``.
 
-Only dimensionless ratio metrics — keys containing ``speedup`` or
-``overhead`` — are gated; absolute ``*_ms``/``*_us`` timings vary too
-much across runners to fail CI on. For ``speedup`` keys higher is
-better, for ``overhead`` keys lower is better; either direction fails
-when it regresses by more than ``--tolerance`` (default 20%).
+Only dimensionless ratio metrics — keys containing ``speedup``,
+``overhead``, or ``mem_ratio`` — are gated; absolute ``*_ms``/``*_us``
+timings vary too much across runners to fail CI on. For ``speedup`` keys
+higher is better, for ``overhead`` and ``mem_ratio`` keys lower is
+better; either direction fails when it regresses by more than
+``--tolerance`` (default 20%).
 
 Typical CI usage, after the bench lane has produced the reports::
 
-  PYTHONPATH=src python -m benchmarks.run --only round_engine,async_engine,cohort_source
+  PYTHONPATH=src python -m benchmarks.run --only round_engine,async_engine,cohort_source,client_store
   python -m benchmarks.check_regression
 
 To refresh the baselines after an intentional perf change, rerun the
@@ -32,9 +33,10 @@ DEFAULT_TOLERANCE = 0.20
 REFRESH_HINT = (
     "To refresh after an intentional perf change:\n"
     "  PYTHONPATH=src python -m benchmarks.run "
-    "--only round_engine,async_engine,cohort_source\n"
+    "--only round_engine,async_engine,cohort_source,client_store\n"
     "  cp BENCH_round_engine.json BENCH_async_engine.json "
-    "BENCH_cohort_source.json benchmarks/baselines/"
+    "BENCH_cohort_source.json BENCH_client_store.json "
+    "benchmarks/baselines/"
 )
 
 
@@ -56,7 +58,7 @@ def gated_keys(report: dict) -> list[str]:
     return sorted(
         k for k, v in flatten(report).items()
         if isinstance(v, (int, float))
-        and ("speedup" in k or "overhead" in k)
+        and ("speedup" in k or "overhead" in k or "mem_ratio" in k)
     )
 
 
@@ -74,8 +76,8 @@ def check_report(name: str, current: dict, baseline: dict,
         cur = float(flat_cur[key])
         if base <= 0:
             continue  # degenerate baseline: nothing meaningful to gate
-        if "overhead" in key:
-            worse = (cur - base) / base       # overhead: higher is worse
+        if "overhead" in key or "mem_ratio" in key:
+            worse = (cur - base) / base       # overhead/mem: higher is worse
         else:
             worse = (base - cur) / base       # speedup: lower is worse
         if worse > tolerance:

@@ -10,8 +10,9 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_async_engine, bench_cohort_source,
-                        bench_roofline, bench_round_engine, fig1_quadratic,
+from benchmarks import (bench_async_engine, bench_client_store,
+                        bench_cohort_source, bench_roofline,
+                        bench_round_engine, fig1_quadratic,
                         fig3_bias_variance, fig4_ess, table1_client_cost,
                         table3_benchmark_sim, table3_lr_sim)
 
@@ -26,6 +27,7 @@ BENCHES = {
     "round_engine": bench_round_engine,
     "async_engine": bench_async_engine,
     "cohort_source": bench_cohort_source,
+    "client_store": bench_client_store,
 }
 
 

@@ -1,6 +1,10 @@
 """Checkpoint save/restore for server state (checkpoint.io)."""
 from repro.checkpoint.io import (  # noqa: F401
     latest_checkpoint,
+    latest_sharded_checkpoint,
     restore_checkpoint,
+    restore_store_sharded,
     save_checkpoint,
+    save_checkpoint_shard,
+    save_store_sharded,
 )

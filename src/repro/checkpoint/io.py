@@ -4,6 +4,14 @@ Leaves are addressed by their tree keypath so a checkpoint is readable
 without unpickling arbitrary objects, restores are structure-checked, and
 dtype/shape mismatches fail loudly. Used for federated server state
 (params + server-opt state + round counter).
+
+The sharded family (``save_store_sharded`` / ``restore_store_sharded``)
+checkpoints a population-sharded client-state store shard-locally: each
+host writes only the rows its devices own, as
+``ckpt_<step>.shard<k>of<n>.npz`` next to the (process-0-only) server
+checkpoint. Restore prefers the matching shard (same row span) and falls
+back to a replicated read — every shard loaded and concatenated — when
+the process topology changed between save and restore.
 """
 from __future__ import annotations
 
@@ -20,10 +28,8 @@ def _keystr(path) -> str:
     return jax.tree_util.keystr(path) or "<root>"
 
 
-def save_checkpoint(ckpt_dir: str, state: Any, step: int,
-                    metadata: Optional[dict] = None) -> str:
-    """Write ``state`` as ckpt_<step>.npz + a .json path/dtype manifest."""
-    os.makedirs(ckpt_dir, exist_ok=True)
+def _pack_leaves(state: Any):
+    """Flatten ``state`` into npz-storable arrays + a keypath manifest."""
     leaves_with_paths = jax.tree_util.tree_flatten_with_path(state)[0]
     arrays = {}
     manifest = []
@@ -40,12 +46,25 @@ def save_checkpoint(ckpt_dir: str, state: Any, step: int,
         arrays[key] = arr
         manifest.append({"key": key, "path": _keystr(path),
                          "shape": list(arr.shape), "dtype": dtype})
-    base = os.path.join(ckpt_dir, f"ckpt_{step:08d}")
+    return arrays, manifest
+
+
+def _write_base(base: str, arrays: dict, payload: dict) -> str:
     np.savez(base + ".npz", **arrays)
     with open(base + ".json", "w") as f:
-        json.dump({"step": step, "metadata": metadata or {},
-                   "manifest": manifest}, f, indent=1)
+        json.dump(payload, f, indent=1)
     return base + ".npz"
+
+
+def save_checkpoint(ckpt_dir: str, state: Any, step: int,
+                    metadata: Optional[dict] = None) -> str:
+    """Write ``state`` as ckpt_<step>.npz + a .json path/dtype manifest."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    arrays, manifest = _pack_leaves(state)
+    base = os.path.join(ckpt_dir, f"ckpt_{step:08d}")
+    return _write_base(base, arrays, {"step": step,
+                                      "metadata": metadata or {},
+                                      "manifest": manifest})
 
 
 def latest_checkpoint(ckpt_dir: str) -> Optional[int]:
@@ -60,17 +79,14 @@ def latest_checkpoint(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
-def restore_checkpoint(ckpt_dir: str, like: Any,
-                       step: Optional[int] = None) -> Tuple[Any, int, dict]:
-    """Restore into the structure of ``like`` (shape/dtype verified)."""
-    if step is None:
-        step = latest_checkpoint(ckpt_dir)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
-    base = os.path.join(ckpt_dir, f"ckpt_{step:08d}")
-    with open(base + ".json") as f:
-        meta = json.load(f)
-    data = np.load(base + ".npz")
+def _restore_leaves(like: Any, meta: dict, data, *,
+                    rows_free: bool = False) -> Any:
+    """Rebuild ``like``'s structure from a manifest + npz payload.
+
+    Shapes are verified against the template; with ``rows_free`` the
+    leading (row) dimension is exempt — the shard-concatenation path loads
+    slices whose row counts depend on the saving topology.
+    """
     leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
     if len(leaves_with_paths) != len(meta["manifest"]):
         raise ValueError(
@@ -86,7 +102,190 @@ def restore_checkpoint(ckpt_dir: str, like: Any,
         m = by_path[ks]
         arr = data[m["key"]]
         want = np.asarray(leaf)
-        if list(arr.shape) != list(want.shape):
+        got, exp = list(arr.shape), list(want.shape)
+        if rows_free:
+            got, exp = got[1:], exp[1:]
+        if got != exp:
             raise ValueError(f"{ks}: shape {arr.shape} != template {want.shape}")
         out.append(arr.astype(want.dtype))
-    return treedef.unflatten(out), meta["step"], meta["metadata"]
+    return treedef.unflatten(out)
+
+
+def restore_checkpoint(ckpt_dir: str, like: Any,
+                       step: Optional[int] = None) -> Tuple[Any, int, dict]:
+    """Restore into the structure of ``like`` (shape/dtype verified)."""
+    if step is None:
+        step = latest_checkpoint(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    base = os.path.join(ckpt_dir, f"ckpt_{step:08d}")
+    with open(base + ".json") as f:
+        meta = json.load(f)
+    data = np.load(base + ".npz")
+    tree = _restore_leaves(like, meta, data)
+    return tree, meta["step"], meta["metadata"]
+
+
+# ---------------------------------------------------------------------------
+# Shard-local client-store checkpoints
+# ---------------------------------------------------------------------------
+
+_SHARD_RE = re.compile(r"ckpt_(\d+)\.shard(\d+)of(\d+)\.npz$")
+
+
+def _shard_base(ckpt_dir: str, step: int, index: int, count: int) -> str:
+    return os.path.join(ckpt_dir,
+                        f"ckpt_{step:08d}.shard{index}of{count}")
+
+
+def save_checkpoint_shard(ckpt_dir: str, state: Any, step: int, *,
+                          row_offset: int, shard_index: int,
+                          num_shards: int,
+                          metadata: Optional[dict] = None) -> str:
+    """Write one host's slice of a row-sharded state tree.
+
+    The file name (``ckpt_<step>.shard<k>of<n>.npz``) is disjoint from the
+    plain ``ckpt_<step>.npz`` family, so ``latest_checkpoint`` never picks
+    up a shard. The json records ``row_offset`` — where this shard's rows
+    sit in the global population — which is what restore matches against.
+    """
+    if not 0 <= shard_index < num_shards:
+        raise ValueError(f"shard_index {shard_index} out of range for "
+                         f"{num_shards} shards")
+    os.makedirs(ckpt_dir, exist_ok=True)
+    arrays, manifest = _pack_leaves(state)
+    base = _shard_base(ckpt_dir, step, shard_index, num_shards)
+    return _write_base(base, arrays, {
+        "step": step, "metadata": metadata or {}, "manifest": manifest,
+        "shard": {"index": shard_index, "count": num_shards,
+                  "row_offset": row_offset},
+    })
+
+
+def latest_sharded_checkpoint(ckpt_dir: str) -> Optional[int]:
+    """Highest step with a *complete* shard set (all n of n files).
+
+    An in-progress save (some hosts finished, some not) is skipped so a
+    restore racing a crash lands on the last complete step.
+    """
+    if not os.path.isdir(ckpt_dir):
+        return None
+    found: dict = {}
+    for fn in os.listdir(ckpt_dir):
+        m = _SHARD_RE.match(fn)
+        if m:
+            step, idx, count = (int(g) for g in m.groups())
+            found.setdefault((step, count), set()).add(idx)
+    complete = [step for (step, count), idxs in found.items()
+                if len(idxs) == count]
+    return max(complete) if complete else None
+
+
+def _read_shard(ckpt_dir: str, step: int, index: int, count: int):
+    base = _shard_base(ckpt_dir, step, index, count)
+    with open(base + ".json") as f:
+        meta = json.load(f)
+    return meta, np.load(base + ".npz")
+
+
+def _shard_metas(ckpt_dir: str, step: int):
+    """All shard manifests for ``step`` (json only — npz stays unread)."""
+    metas = []
+    for fn in sorted(os.listdir(ckpt_dir)):
+        m = _SHARD_RE.match(fn)
+        if m and int(m.group(1)) == step:
+            base = os.path.join(ckpt_dir, fn[:-len(".npz")])
+            with open(base + ".json") as f:
+                metas.append(json.load(f))
+    if not metas:
+        raise FileNotFoundError(
+            f"no shard checkpoints for step {step} in {ckpt_dir}")
+    count = metas[0]["shard"]["count"]
+    if len(metas) != count:
+        raise FileNotFoundError(
+            f"step {step} has {len(metas)}/{count} shards in {ckpt_dir}")
+    return metas
+
+
+def save_store_sharded(ckpt_dir: str, store, step: int,
+                       metadata: Optional[dict] = None) -> str:
+    """Checkpoint a client-state store shard-locally.
+
+    Every process calls this; each writes only the rows its devices own
+    (via the store's ``local_state_dict``). A store without the sharded
+    API (the host store) writes its full state as the single shard of 1 —
+    same file family, so restore is uniform.
+    """
+    if hasattr(store, "local_state_dict"):
+        state, row_offset = store.local_state_dict()
+    else:
+        state, row_offset = store.state_dict(), 0
+    index = jax.process_index()
+    count = jax.process_count()
+    return save_checkpoint_shard(ckpt_dir, state, step,
+                                 row_offset=row_offset, shard_index=index,
+                                 num_shards=count, metadata=metadata)
+
+
+def restore_store_sharded(ckpt_dir: str, store,
+                          step: Optional[int] = None) -> int:
+    """Restore a client-state store from its shard files (in place).
+
+    Fast path: a shard whose row span matches the rows this process's
+    devices own is loaded alone and written back with
+    ``load_local_state_dict`` — nothing crosses the host boundary. When
+    the topology changed between save and restore (different process
+    count or mesh layout) every shard is read and concatenated in row
+    order — the replicated-read fallback — and loaded through the full
+    ``load_state_dict``. Returns the restored step.
+    """
+    if step is None:
+        step = latest_sharded_checkpoint(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no shard checkpoints in {ckpt_dir}")
+    metas = _shard_metas(ckpt_dir, step)
+    count = metas[0]["shard"]["count"]
+    sharded = hasattr(store, "local_state_dict")
+    if sharded:
+        local, row_offset = store.local_state_dict()
+    else:
+        local, row_offset = store.state_dict(), 0
+    local_rows = int(np.asarray(local["stamps"]).shape[0])
+    match = next(
+        (m for m in metas
+         if m["shard"]["row_offset"] == row_offset
+         and m["manifest"] and m["manifest"][0]["shape"][0] == local_rows),
+        None)
+    if match is not None:
+        meta, data = _read_shard(ckpt_dir, step, match["shard"]["index"],
+                                 count)
+        tree = _restore_leaves(local, meta, data)
+        if sharded:
+            store.load_local_state_dict(tree, row_offset)
+        else:
+            store.load_state_dict(tree)
+        return step
+    # replicated read: concatenate every shard's rows in population order
+    parts = []
+    for m in sorted(metas, key=lambda m: m["shard"]["row_offset"]):
+        meta, data = _read_shard(ckpt_dir, step, m["shard"]["index"], count)
+        parts.append((m["shard"]["row_offset"],
+                      _restore_leaves(local, meta, data, rows_free=True)))
+    offsets = [off for off, _ in parts]
+    rows = [np.asarray(t["stamps"]).shape[0] for _, t in parts]
+    if offsets[0] != 0:
+        raise ValueError(f"first shard starts at row {offsets[0]}, not 0")
+    for (off, r), nxt in zip(zip(offsets, rows), offsets[1:] + [None]):
+        if nxt is not None and off + r != nxt:
+            raise ValueError(
+                f"shard rows are not contiguous: [{off}, {off + r}) then "
+                f"{nxt} — cannot reassemble the population")
+    full = jax.tree_util.tree_map(
+        lambda *xs: np.concatenate(xs, axis=0), *[t for _, t in parts])
+    total = int(np.asarray(full["stamps"]).shape[0])
+    if total != store.num_clients:
+        raise ValueError(
+            f"reassembled population has {total} rows, store expects "
+            f"{store.num_clients}")
+    store.load_state_dict(full)
+    return step

@@ -10,12 +10,15 @@ sharded_round (multi-pod SPMD), both thin frontends over the engine.
 from repro.core.async_engine import AsyncRoundEngine  # noqa: F401
 from repro.core.client import make_client_update  # noqa: F401
 from repro.core.client_state import (  # noqa: F401
+    BaseClientStateStore,
     ClientStateStore,
     DeviceClientStateStore,
+    PopulationLayout,
     device_gather,
     device_scatter,
     jit_donating_store,
     make_client_store,
+    population_layout,
 )
 from repro.core.diagnostics import (  # noqa: F401
     bias_variance,

@@ -143,9 +143,15 @@ class AsyncRoundEngine:
         self._device_store = isinstance(self.client_store,
                                         DeviceClientStateStore)
         # the device write-back stage: donate the store so the (N, ...)
-        # buffers alias in place instead of doubling per-client state
-        self._scatter = (jit_donating_store(device_scatter, 0)
-                         if self._device_store else None)
+        # buffers alias in place instead of doubling per-client state;
+        # a population-sharded store additionally pins the scatter's store
+        # output to its own placement so the alias is shard-for-shard
+        self._scatter = None
+        if self._device_store:
+            pop_sh = self.client_store.population_sharding
+            self._scatter = jit_donating_store(
+                device_scatter, 0,
+                out_shardings=None if pop_sh is None else (pop_sh, None))
         self._cohort = jax.jit(self.cohort_fn)
         self._burn = (jax.jit(self.burn_cohort_fn)
                       if self.burn_cohort_fn is not None else self._cohort)

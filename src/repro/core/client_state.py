@@ -4,7 +4,9 @@ The paper's template assumes stateless clients, but its stateful cousins —
 SCAFFOLD-style control variates and the per-client site parameters of
 EP-based posterior inference (Guo et al. 2023) — need a statistic that
 persists *on the server, per client, across rounds*. Two interchangeable
-stores give that statistic a home (``FedConfig.client_state_placement``):
+stores give that statistic a home (``FedConfig.client_state_placement``),
+both subclasses of :class:`BaseClientStateStore` (shared population
+validation, lazy ``ensure`` allocation, write-stamp CAS contract):
 
   * :class:`ClientStateStore` (``"host"``, the default) — dense numpy
     buffers with a leading ``num_clients`` axis, mirroring one per-client
@@ -34,6 +36,22 @@ stores give that statistic a home (``FedConfig.client_state_placement``):
     crosses to the host in :meth:`DeviceClientStateStore.state_dict`
     (checkpointing).
 
+Population sharding: the device store optionally takes a ``mesh`` and a
+population :class:`~jax.sharding.PartitionSpec` (see
+:func:`population_layout`). Its buffers and stamps are then
+``NamedSharding``-placed with the leading ``N`` axis sharded over the
+client mesh axes, padded up to the next multiple of the axis extent
+(padding rows carry a ``-1`` stamp and are unreachable — ids are
+range-checked against the *logical* population). Under GSPMD the same
+traced :func:`device_gather` / :func:`device_scatter` become
+collective-aware: the gather pulls a cohort's rows from whichever shard
+owns them, and the CAS scatter's masked writes land only on the owning
+shard — nothing about the round program changes. ``shardings()`` exposes
+the store's placement so engines can pin ``out_shardings`` and keep
+donation aliasing exact. On a multi-process (multi-host) mesh the store
+additionally checkpoints shard-locally: :meth:`local_state_dict` /
+:meth:`load_local_state_dict` move only the rows this host owns.
+
 Both stores share the write-stamp CAS contract, refuse duplicate client
 ids in one cohort (numpy's buffered fancy indexing and XLA's scatter would
 both silently make an arbitrary write win), and expose the same
@@ -42,11 +60,17 @@ from one placement restore into the other through ``checkpoint/io.py``.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+import abc
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+#: Mesh axis names that may carry the population/client dimension, in
+#: precedence order (mirrors sharding.rules.DEFAULT_RULES["clients"]).
+CLIENT_AXES = ("pod", "data")
 
 
 def _require_unique_ids(client_ids: np.ndarray, op: str) -> None:
@@ -68,32 +92,165 @@ def _require_unique_ids(client_ids: np.ndarray, op: str) -> None:
             f"silently drop all but one update)")
 
 
-class ClientStateStore:
-    """Per-client persistent state: dense host buffers + write stamps."""
+class PopulationLayout(NamedTuple):
+    """How a population of ``num_clients`` lays out over a mesh.
+
+    ``padded_num_clients`` is ``num_clients`` rounded up to the next
+    multiple of ``extent`` (the product of the sharded axis sizes) so the
+    leading axis always divides evenly — the padding rows are dead weight
+    (masked ``-1`` stamps, unreachable by range-checked ids) instead of
+    the silent full replication a non-divisible spec used to cause.
+    """
+
+    num_clients: int
+    padded_num_clients: int
+    spec: P          # PartitionSpec for the leading population axis
+    extent: int      # product of the sharded mesh axis sizes (1 = unsharded)
+
+    @property
+    def padding(self) -> int:
+        """Number of dead tail rows added to make N divisible."""
+        return self.padded_num_clients - self.num_clients
+
+
+def _spec_axes(population_spec) -> tuple:
+    """Flatten a leading-axis PartitionSpec entry into mesh axis names."""
+    if population_spec is None:
+        return ()
+    parts = tuple(population_spec)
+    if not parts or parts[0] is None:
+        return ()
+    head = parts[0]
+    return tuple(head) if isinstance(head, (tuple, list)) else (head,)
+
+
+def population_layout(mesh, num_clients: int,
+                      population_spec: Optional[P] = None) -> PopulationLayout:
+    """The padded population layout for ``num_clients`` over ``mesh``.
+
+    With ``population_spec=None`` the leading axis shards over whichever of
+    the canonical client axes (``("pod", "data")``) the mesh has; pass an
+    explicit spec (e.g. ``P("data")``) to override. ``mesh`` may be a real
+    ``Mesh``, an ``AbstractMesh``, or anything exposing ``shape`` /
+    ``axis_names`` — only the axis sizes are consulted here, so layout
+    arithmetic is testable without devices. ``mesh=None`` (or no matching
+    axes) yields the unsharded identity layout.
+    """
+    if num_clients <= 0:
+        raise ValueError(f"num_clients must be >= 1, got {num_clients}")
+    if mesh is None:
+        return PopulationLayout(num_clients, num_clients, P(), 1)
+    if population_spec is None:
+        axes = tuple(a for a in CLIENT_AXES if a in mesh.axis_names)
+    else:
+        axes = _spec_axes(population_spec)
+        missing = [a for a in axes if a not in mesh.axis_names]
+        if missing:
+            raise ValueError(
+                f"population_spec names mesh axes {missing} not in mesh "
+                f"{tuple(mesh.axis_names)}")
+    extent = 1
+    for a in axes:
+        extent *= mesh.shape[a]
+    if extent <= 1:
+        return PopulationLayout(num_clients, num_clients, P(), 1)
+    padded = -(-num_clients // extent) * extent
+    spec = P(axes if len(axes) > 1 else axes[0])
+    return PopulationLayout(num_clients, padded, spec, extent)
+
+
+# ---------------------------------------------------------------------------
+# Shared store contract
+# ---------------------------------------------------------------------------
+
+class BaseClientStateStore(abc.ABC):
+    """Shared contract of the host and device per-client state stores.
+
+    Owns everything placement-independent: population validation, lazy
+    ``ensure`` allocation from a single client's state template, the
+    ``initialized`` guard, and the checkpoint population check. Subclasses
+    provide ``_allocate`` (where the dense ``(N, ...)`` buffers live) plus
+    the placement-specific gather/scatter/reset/state-dict operations; all
+    of them honor the write-stamp CAS contract documented on the module.
+    """
+
+    #: Whether the subclass accepts mesh/population_spec sharding kwargs.
+    shardable = False
 
     def __init__(self, num_clients: int):
         """Create an empty store for a population of ``num_clients``."""
         if num_clients <= 0:
             raise ValueError(f"num_clients must be >= 1, got {num_clients}")
         self.num_clients = num_clients
-        self._buffers = None                  # pytree of (N, ...) np arrays
-        self._stamps = np.zeros(num_clients, np.int64)
+        self._buffers = None              # pytree of (N, ...) arrays
 
     @property
     def initialized(self) -> bool:
         """Whether the dense buffers have been allocated."""
         return self._buffers is not None
 
-    def ensure(self, template) -> "ClientStateStore":
+    def ensure(self, template):
         """Allocate the ``(num_clients, ...)`` buffers from one client's
         state template (idempotent; zeros, matching leaf dtypes)."""
         if self._buffers is None:
-            n = self.num_clients
-            self._buffers = jax.tree_util.tree_map(
-                lambda x: np.zeros((n,) + tuple(np.shape(x)),
-                                   np.asarray(x).dtype),
-                template)
+            self._buffers = self._allocate(template)
         return self
+
+    def _require_initialized(self):
+        if self._buffers is None:
+            raise RuntimeError(
+                f"{type(self).__name__} is uninitialized; call "
+                f"ensure(template) with one client's state pytree first")
+
+    def _check_restore_stamps(self, state) -> np.ndarray:
+        """Validate a ``state_dict`` payload's population size; returns the
+        stamps as int64 (both placements checkpoint stamps at int64)."""
+        stamps = np.asarray(state["stamps"], np.int64)
+        if stamps.shape != (self.num_clients,):
+            raise ValueError(
+                f"stamps shape {stamps.shape} != ({self.num_clients},) — "
+                f"checkpoint was written for a different population size")
+        return stamps
+
+    @abc.abstractmethod
+    def _allocate(self, template):
+        """Allocate and return the zeroed ``(N, ...)`` buffer pytree."""
+
+    @abc.abstractmethod
+    def reset(self):
+        """Zero every client's state and write stamp (keeps the buffers)."""
+
+    @abc.abstractmethod
+    def gather(self, client_ids):
+        """One cohort's state slice: ``(stacked_states, stamps)``."""
+
+    @abc.abstractmethod
+    def scatter(self, client_ids, updates, stamps=None):
+        """CAS write-back of a cohort's updates; returns #clients dropped."""
+
+    @abc.abstractmethod
+    def state_dict(self):
+        """Checkpointable pytree: the dense buffers + write stamps."""
+
+    @abc.abstractmethod
+    def load_state_dict(self, state):
+        """Restore from :meth:`state_dict` output."""
+
+
+class ClientStateStore(BaseClientStateStore):
+    """Per-client persistent state: dense host buffers + write stamps."""
+
+    def __init__(self, num_clients: int):
+        """Create an empty host store for ``num_clients`` clients."""
+        super().__init__(num_clients)
+        self._stamps = np.zeros(num_clients, np.int64)
+
+    def _allocate(self, template):
+        n = self.num_clients
+        return jax.tree_util.tree_map(
+            lambda x: np.zeros((n,) + tuple(np.shape(x)),
+                               np.asarray(x).dtype),
+            template)
 
     def reset(self) -> "ClientStateStore":
         """Zero every client's state and write stamp (keeps the buffers)."""
@@ -101,12 +258,6 @@ class ClientStateStore:
             jax.tree_util.tree_map(lambda b: b.fill(0), self._buffers)
         self._stamps[:] = 0
         return self
-
-    def _require_initialized(self):
-        if self._buffers is None:
-            raise RuntimeError(
-                "ClientStateStore is uninitialized; call ensure(template) "
-                "with one client's state pytree first")
 
     def gather(self, client_ids):
         """One cohort's state slice: ``(stacked_states, stamps)``.
@@ -166,11 +317,7 @@ class ClientStateStore:
     def load_state_dict(self, state) -> "ClientStateStore":
         """Restore from :meth:`state_dict` output (leaf-count checked by
         ``checkpoint.restore_checkpoint`` when loading from disk)."""
-        stamps = np.asarray(state["stamps"], np.int64)
-        if stamps.shape != (self.num_clients,):
-            raise ValueError(
-                f"stamps shape {stamps.shape} != ({self.num_clients},) — "
-                f"checkpoint was written for a different population size")
+        stamps = self._check_restore_stamps(state)
         self._buffers = jax.tree_util.tree_map(np.asarray, state["buffers"])
         self._stamps = stamps.copy()
         return self
@@ -186,7 +333,9 @@ def device_gather(store_state, client_ids):
     ``store_state`` is :meth:`DeviceClientStateStore.device_state` (the
     dense ``(N, ...)`` buffers + ``(N,)`` write stamps) and ``client_ids``
     a traced ``(C,)`` int vector; the slice happens on device, inside
-    whatever jitted program calls this. The stamps snapshot must be handed
+    whatever jitted program calls this. When the store is population-
+    sharded, GSPMD lowers this gather collectively — each cohort row is
+    pulled from the shard that owns it. The stamps snapshot must be handed
     back to :func:`device_scatter` for the CAS check.
     """
     states = jax.tree_util.tree_map(lambda b: b[client_ids],
@@ -204,12 +353,15 @@ def device_scatter(store_state, client_ids, updates, stamps=None,
     back the value it would have overwritten), applied stamps are bumped
     on device, and ``drops`` (the number of dropped writes) stays a device
     scalar — the caller decides when, if ever, to sync it to the host.
-    ``stamps=None`` writes unconditionally. ``write_mask`` (optional traced
-    (C,) 0/1 vector) additionally suppresses masked-out clients' writes and
-    stamp bumps without counting them as CAS drops — the fault-injection
-    path's mid-round dropouts. Duplicate ``client_ids`` must be rejected
-    host-side before tracing (``prepare_ids``): XLA's scatter would pick an
-    arbitrary winner silently.
+    When the store is population-sharded, GSPMD masks each write to the
+    shard that owns the row — the update never materializes a replicated
+    ``(N, ...)`` copy. ``stamps=None`` writes unconditionally.
+    ``write_mask`` (optional traced (C,) 0/1 vector) additionally
+    suppresses masked-out clients' writes and stamp bumps without counting
+    them as CAS drops — the fault-injection path's mid-round dropouts.
+    Duplicate ``client_ids`` must be rejected host-side before tracing
+    (``prepare_ids``): XLA's scatter would pick an arbitrary winner
+    silently.
     """
     buffers, all_stamps = store_state["buffers"], store_state["stamps"]
     if stamps is None:
@@ -234,7 +386,8 @@ def device_scatter(store_state, client_ids, updates, stamps=None,
     return {"buffers": new_buffers, "stamps": new_stamps}, drops
 
 
-def jit_donating_store(fn: Callable, store_argnum: int) -> Callable:
+def jit_donating_store(fn: Callable, store_argnum: int,
+                       out_shardings=None) -> Callable:
     """``jax.jit(fn)`` with the store-state argument donated when possible.
 
     Donation lets XLA alias the store's ``(N, ...)`` input buffers to the
@@ -242,14 +395,18 @@ def jit_donating_store(fn: Callable, store_argnum: int) -> Callable:
     instead of holding two copies of ``N x`` per-client state in HBM. The
     CPU backend does not implement donation (it would warn on every
     compile), so this degrades to a plain ``jit`` there — purely a memory
-    optimization either way; numerics are identical.
+    optimization either way; numerics are identical. ``out_shardings``
+    (optional; a pytree prefix matching ``fn``'s outputs, ``None`` leaves
+    = compiler's choice) pins the returned store to the store's own
+    placement so donation aliases shard-for-shard on a sharded store.
     """
+    kw = {} if out_shardings is None else {"out_shardings": out_shardings}
     if jax.default_backend() == "cpu":
-        return jax.jit(fn)
-    return jax.jit(fn, donate_argnums=(store_argnum,))
+        return jax.jit(fn, **kw)
+    return jax.jit(fn, donate_argnums=(store_argnum,), **kw)
 
 
-class DeviceClientStateStore:
+class DeviceClientStateStore(BaseClientStateStore):
     """Per-client persistent state as device-resident buffers.
 
     Same population/``ensure``/``reset``/``state_dict`` API and CAS
@@ -265,48 +422,84 @@ class DeviceClientStateStore:
     count, which forces one sync) for tests and interactive use; the
     engines never call them.
 
+    With a ``mesh`` the population axis is a first-class sharded dimension:
+    buffers and stamps are ``NamedSharding``-placed with the leading ``N``
+    axis split per ``population_spec`` (default: the mesh's client axes,
+    via :func:`population_layout`), padded up to the axis extent — so a
+    1M-client store on 8 devices holds ~1/8 of the rows per device instead
+    of 8 full replicas. ``shardings()`` mirrors :meth:`device_state` for
+    pinning ``out_shardings``. On a multi-process mesh use
+    :meth:`local_state_dict` / :meth:`load_local_state_dict` to checkpoint
+    shard-locally (each host moves only the rows it owns).
+
     Stamps are int32 on device (jax default-int under disabled x64);
     :meth:`state_dict` widens them to the host store's int64 so checkpoints
-    are interchangeable between placements.
+    are interchangeable between placements. Padding rows carry a ``-1``
+    stamp and are invisible to every public method — ids are range-checked
+    against the logical ``num_clients`` and checkpoints slice the padding
+    off, so checkpoints are layout-independent.
     """
 
-    def __init__(self, num_clients: int):
-        """Create an empty device store for ``num_clients`` clients."""
-        if num_clients <= 0:
-            raise ValueError(f"num_clients must be >= 1, got {num_clients}")
-        self.num_clients = num_clients
-        self._buffers = None                  # pytree of (N, ...) jnp arrays
-        self._stamps = jnp.zeros(num_clients, jnp.int32)
+    shardable = True
+
+    def __init__(self, num_clients: int, *, mesh=None, population_spec=None):
+        """Create an empty device store for ``num_clients`` clients,
+        optionally population-sharded over ``mesh`` per ``population_spec``
+        (default: the mesh's client axes)."""
+        super().__init__(num_clients)
+        if mesh is None and population_spec is not None:
+            raise ValueError("population_spec requires a mesh")
+        self.mesh = mesh
+        self.layout = population_layout(mesh, num_clients, population_spec)
+        self._stamps = self._fresh_stamps()
 
     @property
-    def initialized(self) -> bool:
-        """Whether the dense device buffers have been allocated."""
-        return self._buffers is not None
+    def padded_num_clients(self) -> int:
+        """The on-device leading-axis extent (num_clients + padding)."""
+        return self.layout.padded_num_clients
 
-    def ensure(self, template) -> "DeviceClientStateStore":
-        """Allocate the ``(num_clients, ...)`` device buffers from one
-        client's state template (idempotent; zeros, matching leaf dtypes)."""
-        if self._buffers is None:
-            n = self.num_clients
-            self._buffers = jax.tree_util.tree_map(
-                lambda x: jnp.zeros((n,) + tuple(np.shape(x)),
-                                    jnp.asarray(x).dtype),
-                template)
-        return self
+    def _sharding(self, tail_ndim: int) -> Optional[NamedSharding]:
+        """NamedSharding for a ``(N_padded, *tail)`` leaf (None = no mesh)."""
+        if self.mesh is None:
+            return None
+        return NamedSharding(
+            self.mesh, P(*self.layout.spec, *(None,) * tail_ndim))
+
+    def _device_zeros(self, shape, dtype):
+        """Sharded zeros built inside a jit — no host-side materialization
+        and, on a multi-process mesh, no cross-host transfer."""
+        sh = self._sharding(len(shape) - 1)
+        make = lambda: jnp.zeros(shape, dtype)  # noqa: E731
+        if sh is None:
+            return make()
+        return jax.jit(make, out_shardings=sh)()
+
+    def _fresh_stamps(self):
+        n, live = self.layout.padded_num_clients, self.num_clients
+        sh = self._sharding(0)
+
+        def make():
+            idx = jnp.arange(n, dtype=jnp.int32)
+            return jnp.where(idx < live, jnp.int32(0), jnp.int32(-1))
+
+        if sh is None:
+            return make()
+        return jax.jit(make, out_shardings=sh)()
+
+    def _allocate(self, template):
+        n = self.layout.padded_num_clients
+        return jax.tree_util.tree_map(
+            lambda x: self._device_zeros((n,) + tuple(np.shape(x)),
+                                         jnp.asarray(x).dtype),
+            template)
 
     def reset(self) -> "DeviceClientStateStore":
         """Zero every client's state and write stamp (keeps the shapes)."""
         if self._buffers is not None:
             self._buffers = jax.tree_util.tree_map(
-                lambda b: jnp.zeros_like(b), self._buffers)
-        self._stamps = jnp.zeros(self.num_clients, jnp.int32)
+                lambda b: self._device_zeros(b.shape, b.dtype), self._buffers)
+        self._stamps = self._fresh_stamps()
         return self
-
-    def _require_initialized(self):
-        if self._buffers is None:
-            raise RuntimeError(
-                "DeviceClientStateStore is uninitialized; call "
-                "ensure(template) with one client's state pytree first")
 
     # -- the engine-facing traced-state handshake ---------------------------
     def _check_range(self, ids: np.ndarray) -> np.ndarray:
@@ -321,7 +514,8 @@ class DeviceClientStateStore:
 
         Checks duplicates and range host-side, while the ids are still
         concrete (inside the jit XLA clamps out-of-range indices and the
-        scatter cannot raise).
+        scatter cannot raise). Range is checked against the *logical*
+        population, so padding rows are unreachable.
         """
         ids = np.asarray(client_ids, np.int64)
         _require_unique_ids(ids, "DeviceClientStateStore")
@@ -337,6 +531,31 @@ class DeviceClientStateStore:
         """
         self._require_initialized()
         return {"buffers": self._buffers, "stamps": self._stamps}
+
+    @property
+    def population_sharding(self) -> Optional[NamedSharding]:
+        """One NamedSharding usable as a pytree *prefix* for any
+        store-shaped subtree (every leaf has the population as its leading
+        axis; trailing dims pad to None) — the handle engines pin a jitted
+        round's store ``out_shardings`` with, available before ``ensure``.
+        None when the store is unsharded."""
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.layout.spec)
+
+    def shardings(self):
+        """NamedSharding pytree mirroring :meth:`device_state` (or None
+        when the store is unsharded) — pass as the store slot of a jitted
+        round's ``out_shardings`` so the donated update aliases
+        shard-for-shard instead of letting the compiler re-layout it."""
+        if self.mesh is None:
+            return None
+        self._require_initialized()
+        return {
+            "buffers": jax.tree_util.tree_map(
+                lambda b: self._sharding(b.ndim - 1), self._buffers),
+            "stamps": self._sharding(0),
+        }
 
     def set_device_state(self, store_state) -> "DeviceClientStateStore":
         """Adopt the updated ``{"buffers", "stamps"}`` a round returned.
@@ -377,37 +596,164 @@ class DeviceClientStateStore:
     # -- checkpointing -------------------------------------------------------
     def state_dict(self):
         """Checkpointable pytree — the ONE place device state crosses to
-        the host (stamps widened to the host store's int64, so checkpoints
-        restore into either placement)."""
+        the host (stamps widened to the host store's int64 and padding rows
+        sliced off, so checkpoints restore into either placement and any
+        layout). On a multi-process mesh the full population is not
+        addressable from one host — use :meth:`local_state_dict` there."""
         self._require_initialized()
+        if self.mesh is not None and jax.process_count() > 1:
+            raise RuntimeError(
+                "state_dict() needs every row addressable; on a "
+                "multi-process mesh checkpoint shard-locally with "
+                "local_state_dict() instead")
+        live = self.num_clients
         return {
-            "buffers": jax.tree_util.tree_map(np.asarray, self._buffers),
-            "stamps": np.asarray(self._stamps, np.int64),
+            "buffers": jax.tree_util.tree_map(
+                lambda b: np.asarray(b[:live]), self._buffers),
+            "stamps": np.asarray(self._stamps[:live], np.int64),
         }
 
     def load_state_dict(self, state) -> "DeviceClientStateStore":
         """Restore from either store's :meth:`state_dict` output (pushed
-        to device; population size checked)."""
-        stamps = np.asarray(state["stamps"], np.int64)
-        if stamps.shape != (self.num_clients,):
-            raise ValueError(
-                f"stamps shape {stamps.shape} != ({self.num_clients},) — "
-                f"checkpoint was written for a different population size")
-        self._buffers = jax.tree_util.tree_map(jnp.asarray, state["buffers"])
-        self._stamps = jnp.asarray(stamps, jnp.int32)
+        to device; population size checked; re-padded and re-sharded to
+        this store's layout — the replicated-read path: every process
+        supplies the full array and keeps only the rows it owns)."""
+        stamps = self._check_restore_stamps(state)
+        self._buffers = jax.tree_util.tree_map(
+            lambda b: self._globalize(np.asarray(b), 0), state["buffers"])
+        self._stamps = self._globalize(stamps.astype(np.int32), -1)
         return self
+
+    def _globalize(self, full_rows: np.ndarray, fill):
+        """(num_clients, ...) host rows -> padded, sharded device array."""
+        pad = self.layout.padding
+        if pad:
+            tail = np.full((pad,) + full_rows.shape[1:], fill,
+                           full_rows.dtype)
+            full_rows = np.concatenate([full_rows, tail], axis=0)
+        sh = self._sharding(full_rows.ndim - 1)
+        if sh is None:
+            return jnp.asarray(full_rows)
+        return jax.make_array_from_callback(
+            full_rows.shape, sh, lambda idx: full_rows[idx])
+
+    # -- shard-local checkpointing (multi-host) ------------------------------
+    def _local_rows(self, arr) -> tuple:
+        """This process's contiguous leading-axis slice of ``arr`` as
+        ``(rows, start)`` (replica copies deduped, padding clipped)."""
+        by_start = {}
+        for s in arr.addressable_shards:
+            lead = s.index[0] if s.index else slice(0, arr.shape[0])
+            start = 0 if lead.start is None else lead.start
+            by_start.setdefault(start, s.data)
+        starts = sorted(by_start)
+        chunks = [np.asarray(by_start[s]) for s in starts]
+        lo = starts[0] if starts else 0
+        hi = lo + sum(c.shape[0] for c in chunks)
+        expect = lo
+        for s, c in zip(starts, chunks):
+            if s != expect:
+                raise RuntimeError(
+                    "store shards are not contiguous on this host — "
+                    "shard-local checkpointing needs a row-major mesh")
+            expect += c.shape[0]
+        rows = (np.concatenate(chunks, axis=0) if chunks
+                else np.zeros((0,) + arr.shape[1:], arr.dtype))
+        hi = min(hi, self.num_clients)       # clip dead padding rows
+        lo = min(lo, hi)
+        return rows[:hi - lo], lo
+
+    def local_state_dict(self):
+        """This host's slice of :meth:`state_dict`: ``(state, row_offset)``.
+
+        ``state`` holds only the contiguous live rows whose shards are
+        addressable from this process (padding clipped, stamps widened to
+        int64); ``row_offset`` is the slice's position in the global
+        population. Feed both to ``checkpoint.save_checkpoint_shard`` and
+        restore with :meth:`load_local_state_dict`.
+        """
+        self._require_initialized()
+        stamp_rows, offset = self._local_rows(self._stamps)
+        state = {
+            "buffers": jax.tree_util.tree_map(
+                lambda b: self._local_rows(b)[0], self._buffers),
+            "stamps": stamp_rows.astype(np.int64),
+        }
+        return state, offset
+
+    def load_local_state_dict(self, state, row_offset: int
+                              ) -> "DeviceClientStateStore":
+        """Shard-local restore: this process supplies only its own rows.
+
+        ``state``/``row_offset`` are one host's :meth:`local_state_dict`
+        output (or one shard file of a sharded checkpoint). Every process
+        must call this with its own slice; rows outside ``[row_offset,
+        row_offset + rows)`` that this process happens to address (the
+        dead padding tail) are re-synthesized, not read.
+        """
+        stamps = np.asarray(state["stamps"], np.int64)
+        rows = stamps.shape[0]
+        if row_offset < 0 or row_offset + rows > self.num_clients:
+            raise ValueError(
+                f"shard rows [{row_offset}, {row_offset + rows}) out of "
+                f"range for population {self.num_clients}")
+        self._buffers = jax.tree_util.tree_map(
+            lambda b: self._localize(np.asarray(b), row_offset, 0),
+            state["buffers"])
+        self._stamps = self._localize(stamps.astype(np.int32), row_offset, -1)
+        return self
+
+    def _localize(self, local_rows: np.ndarray, offset: int, fill):
+        """Local ``(rows, ...)`` slice -> global padded sharded array."""
+        n = self.layout.padded_num_clients
+        gshape = (n,) + local_rows.shape[1:]
+        sh = self._sharding(local_rows.ndim - 1)
+        if sh is None:
+            if offset != 0 or local_rows.shape[0] != self.num_clients:
+                raise ValueError(
+                    "unsharded store restore needs the full population "
+                    "(offset 0); got a partial shard")
+            return self._globalize(local_rows, fill)
+
+        def cb(idx):
+            lead = idx[0]
+            lo = 0 if lead.start is None else lead.start
+            hi = n if lead.stop is None else lead.stop
+            out = np.full((hi - lo,) + gshape[1:], fill, local_rows.dtype)
+            s = max(lo, offset)
+            e = min(hi, offset + local_rows.shape[0])
+            if e > s:
+                out[s - lo:e - lo] = local_rows[s - offset:e - offset]
+            return out[(slice(None),) + tuple(idx[1:])]
+
+        return jax.make_array_from_callback(gshape, sh, cb)
 
 
 #: Store classes by ``FedConfig.client_state_placement`` value.
 STORES = {"host": ClientStateStore, "device": DeviceClientStateStore}
 
 
-def make_client_store(placement: str, num_clients: int):
-    """Instantiate the store for a ``client_state_placement`` value."""
+def make_client_store(placement: str, num_clients: int, *, mesh=None,
+                      population_spec=None) -> BaseClientStateStore:
+    """Instantiate the store for a ``client_state_placement`` value.
+
+    ``mesh``/``population_spec`` request a population-sharded store; only
+    placements whose store class advertises ``shardable`` accept them
+    (today: ``"device"``).
+    """
     try:
         cls = STORES[placement]
     except KeyError:
         raise ValueError(
             f"unknown client_state_placement {placement!r}; "
             f"known: {tuple(STORES)}") from None
+    if not issubclass(cls, BaseClientStateStore):
+        raise TypeError(
+            f"STORES[{placement!r}] = {cls!r} is not a BaseClientStateStore")
+    if mesh is not None:
+        if not cls.shardable:
+            raise ValueError(
+                f"client_state_placement={placement!r} does not support "
+                f"population sharding (mesh given); use \"device\"")
+        return cls(num_clients, mesh=mesh, population_spec=population_spec)
     return cls(num_clients)

@@ -50,6 +50,16 @@ class FedSim:
     ``placement`` overrides ``fed.round_placement`` ("parallel" |
     "sequential" | "chunked") — the round math is identical across all
     three (tests/test_round_engine.py); only the compiled layout differs.
+
+    ``mesh`` (optional) makes the population axis a sharded dimension: the
+    device client-state store is ``NamedSharding``-placed over the mesh's
+    client axes (``population_layout``; padded, never replicated) and both
+    engines pin the round's store output to that placement so the donated
+    update aliases shard-for-shard. ``spmd_axes`` additionally names the
+    mesh axes the parallel/chunked placements vmap over
+    (``spmd_axis_name``), mapping each chunk to a mesh slice. Neither
+    changes the round math — sharded vs replicated rounds are bitwise
+    identical (tests/test_population_sharding.py).
     """
 
     fed: FedConfig
@@ -59,6 +69,8 @@ class FedSim:
     client_weights: Optional[np.ndarray] = None
     seed: int = 0
     placement: Optional[str] = None
+    mesh: Optional[object] = None
+    spmd_axes: Optional[tuple] = None
 
     def __post_init__(self):
         """Build (and jit) the round programs and the client-state store."""
@@ -76,17 +88,38 @@ class FedSim:
                                       resolve_algorithm)
 
         self._state_placement = self.fed.client_state_placement
+        # per-client persistent state (SCAFFOLD/FedEP): host or device
+        # store per fed.client_state_placement; host gathers/scatters at
+        # the round edges, device threads its buffers through the jit —
+        # population-sharded over self.mesh when one is given
+        alg = get_algorithm(self.fed)
+        stateful = alg.stateful or (alg.has_burn_regime
+                                    and self.fed.burn_in_rounds > 0
+                                    and alg.burn_algorithm().stateful)
+        self.client_store = (
+            make_client_store(self._state_placement, self.num_clients,
+                              mesh=(self.mesh
+                                    if self._state_placement == "device"
+                                    else None))
+            if stateful else None)
 
         def build(use_sampling: bool):
             round_fn = make_round_program(
                 self.grad_fn, self.fed, placement=self.placement,
+                spmd_axes=self.spmd_axes,
                 server_opt=self.server_opt, use_sampling=use_sampling,
             )
             if (resolve_algorithm(self.fed, use_sampling).stateful
                     and self._state_placement == "device"):
                 # round_fn(state, batches, weights, store_state, ids):
-                # donate the store so the (N, ...) buffers update in place
-                return jit_donating_store(round_fn, 3)
+                # donate the store so the (N, ...) buffers update in
+                # place, pinned to the store's own population sharding so
+                # the alias is shard-for-shard
+                out_sh = None
+                if self.client_store.population_sharding is not None:
+                    out_sh = (None, None,
+                              self.client_store.population_sharding)
+                return jit_donating_store(round_fn, 3, out_shardings=out_sh)
             return jax.jit(round_fn)
 
         self._alg = get_algorithm(self.fed)
@@ -99,16 +132,9 @@ class FedSim:
             self._burn_round = build(use_sampling=False)
         else:
             self._burn_round = self._round
-        # per-client persistent state (SCAFFOLD/FedEP): host or device
-        # store per fed.client_state_placement; host gathers/scatters at
-        # the round edges, device threads its buffers through the jit
         self._stateful = self._alg.stateful
         self._burn_stateful = (self._alg.burn_algorithm().stateful
                                if self._has_burn_regime else self._stateful)
-        self.client_store = (make_client_store(self._state_placement,
-                                               self.num_clients)
-                             if self._stateful or self._burn_stateful
-                             else None)
         self._engine: Optional[AsyncRoundEngine] = None
 
     def init(self, params) -> ServerState:
@@ -234,11 +260,13 @@ class FedSim:
         return AsyncRoundEngine(
             cohort_fn=make_cohort_program(
                 self.grad_fn, self.fed, placement=self.placement,
+                spmd_axes=self.spmd_axes,
                 server_opt=self.server_opt, use_sampling=True),
             server_fn=make_server_program(self.fed,
                                           server_opt=self.server_opt),
             burn_cohort_fn=(make_cohort_program(
                 self.grad_fn, self.fed, placement=self.placement,
+                spmd_axes=self.spmd_axes,
                 server_opt=self.server_opt, use_sampling=False)
                 if self._has_burn_regime else None),
             # the burn regime may aggregate in a different payload space

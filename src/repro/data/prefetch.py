@@ -39,6 +39,102 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def local_row_range(mesh, axes, global_rows: int):
+    """The ``[lo, hi)`` leading-axis rows this process's devices own when a
+    ``(global_rows, ...)`` array is sharded over mesh ``axes``.
+
+    The multi-host feeding contract: each process builds batches only for
+    the cohort rows in its range and :func:`host_shard_to_global` assembles
+    them. Requires the process's rows to be contiguous (true for the
+    row-major meshes ``make_host_mesh``/``make_production_mesh`` build).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec  # noqa: PLC0415
+
+    sharding = NamedSharding(mesh, PartitionSpec(axes))
+    imap = sharding.addressable_devices_indices_map((global_rows,))
+    bounds = set()
+    for idx in imap.values():
+        lead = idx[0] if idx else slice(0, global_rows)
+        lo = 0 if lead.start is None else lead.start
+        hi = global_rows if lead.stop is None else lead.stop
+        bounds.add((lo, hi))
+    starts = sorted(b[0] for b in bounds)
+    stops = sorted(b[1] for b in bounds)
+    for s, prev_stop in zip(starts[1:], stops[:-1]):
+        if s != prev_stop:
+            raise RuntimeError(
+                f"process-local rows {sorted(bounds)} are not contiguous — "
+                f"per-host cohort feeding needs a row-major mesh")
+    return starts[0], stops[-1]
+
+
+def host_shard_to_global(local, mesh, axes, global_rows: int,
+                         row_offset: int):
+    """One host's contiguous ``(rows, ...)`` slice -> a global jax.Array.
+
+    The returned array has shape ``(global_rows, *local.shape[1:])`` and is
+    sharded over mesh ``axes`` along the leading axis; this process
+    contributes only ``local`` (placed at ``row_offset``), the other rows
+    live on the other hosts — nothing crosses the host boundary. Works
+    unchanged in a single process (where the slice is the whole array).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec  # noqa: PLC0415
+
+    gshape = (global_rows,) + tuple(local.shape[1:])
+    sharding = NamedSharding(
+        mesh, PartitionSpec(axes, *(None,) * (len(gshape) - 1)))
+
+    def cb(idx):
+        lead = idx[0]
+        lo = 0 if lead.start is None else lead.start
+        hi = gshape[0] if lead.stop is None else lead.stop
+        if lo < row_offset or hi > row_offset + local.shape[0]:
+            raise RuntimeError(
+                f"rows [{lo}, {hi}) requested from a host holding "
+                f"[{row_offset}, {row_offset + local.shape[0]})")
+        rows = local[lo - row_offset:hi - row_offset]
+        return rows[(slice(None),) + tuple(idx[1:])]
+
+    return jax.make_array_from_callback(gshape, sharding, cb)
+
+
+def globalize_cohort_batches(batches, mesh, axes, global_rows: int,
+                             row_offset: int):
+    """Per-host stacked batches -> globally sharded batch arrays.
+
+    ``batches`` is this host's ``stack_host`` output covering only its
+    ``local_row_range`` rows; every leaf becomes a global array sharded
+    over ``axes`` on the leading (client) axis.
+    """
+    return jax.tree_util.tree_map(
+        lambda b: host_shard_to_global(np.asarray(b), mesh, axes,
+                                       global_rows, row_offset),
+        batches)
+
+
+def replicate_global(tree, mesh):
+    """Host-local (numpy / single-device) leaves -> replicated jax.Arrays.
+
+    In a multi-process run every jit input must be a global array; plain
+    numpy operands raise. This lifts the fully-replicated inputs (server
+    state, client ids, survivor masks) onto ``mesh`` with every process
+    supplying the same values — the per-host cohort feeding counterpart
+    for the inputs that are *not* sharded. Jax arrays that already carry a
+    committed global sharding pass through untouched.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec  # noqa: PLC0415
+
+    def lift(x):
+        if isinstance(x, jax.Array) and not x.is_fully_addressable:
+            return x
+        arr = np.asarray(x)
+        sharding = NamedSharding(mesh, PartitionSpec())
+        return jax.make_array_from_callback(
+            arr.shape, sharding, lambda idx: arr[idx])
+
+    return jax.tree_util.tree_map(lift, tree)
+
+
 def stack_host(trees):
     """Stack a list of identically-structured batch trees along a new
     leading (client) axis, keeping host arrays on the host.

@@ -32,7 +32,8 @@ from repro.configs.base import SHAPES, FedConfig              # noqa: E402
 from repro.core.sharded_round import (default_placement,      # noqa: E402
                                       make_fed_round)
 from repro.launch.mesh import make_production_mesh            # noqa: E402
-from repro.launch.specs import client_axes, input_specs       # noqa: E402
+from repro.launch.specs import (client_axes, input_specs,     # noqa: E402
+                                store_population_layout)
 from repro.models.steps import prefill_step, serve_step       # noqa: E402
 from repro.sharding import axis_rules                         # noqa: E402
 from repro.sharding.hlo_cost import (analyze as hlo_analyze,  # noqa: E402
@@ -207,6 +208,18 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     rec["placement"] = placement if shape.kind == "train" else "-"
     rec["chips"] = chips
 
+    if client_state_placement == "device":
+        # the store's population layout (launch.specs is the source of
+        # truth): sharded over the client axes, padded — a 1M-client
+        # scaffold store holds padded_N/extent rows per device
+        layout = store_population_layout(mesh, num_clients)
+        rec["store_population"] = {
+            "num_clients": layout.num_clients,
+            "padded_num_clients": layout.padded_num_clients,
+            "shard_extent": layout.extent,
+            "rows_per_device": layout.padded_num_clients
+            // max(layout.extent, 1),
+        }
     spec = input_specs(cfg, shape, fed, mesh, placement,
                        cache_shard=cache_shard, num_clients=num_clients)
     t0 = time.time()

@@ -1,14 +1,51 @@
-"""Production mesh construction.
+"""Production mesh construction + multi-host ``jax.distributed`` setup.
 
 A function (not a module-level constant) so importing this module never
-touches jax device state — the dry-run sets XLA_FLAGS before first jax use.
+touches jax device state — the dry-run sets XLA_FLAGS before first jax use,
+and ``init_distributed`` must run before the backend spins up.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 
 from repro.configs.base import MULTI_POD, SINGLE_POD, MeshConfig
 from repro.sharding import make_mesh_compat
+
+
+def init_distributed(coordinator: Optional[str] = None,
+                     process_id: Optional[int] = None,
+                     num_processes: Optional[int] = None) -> bool:
+    """Initialize ``jax.distributed`` for a multi-process (multi-host) run.
+
+    Call before any other jax use (device queries included). With
+    ``num_processes`` unset/0/1 this is a no-op returning False — the
+    single-process paths never pay for it. Returns True after
+    ``jax.distributed.initialize`` connects this process to the
+    coordinator, at which point ``jax.devices()`` spans every host (each
+    host's own slice is ``jax.local_devices()``) and collectives cross
+    processes. On the CPU backend the gloo collectives implementation is
+    selected first (the default ring transport has no cross-host story),
+    which is what the 2-process smoke test runs on.
+    """
+    if not num_processes or num_processes <= 1:
+        return False
+    if coordinator is None or process_id is None:
+        raise ValueError(
+            "multi-process launch needs --coordinator host:port and "
+            "--process-id (0..num_processes-1) on every process")
+    if not 0 <= process_id < num_processes:
+        raise ValueError(
+            f"process_id {process_id} out of range for "
+            f"{num_processes} processes")
+    # probing the backend here would initialize it too early; the option
+    # is CPU-only and inert elsewhere, so set it unconditionally
+    jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    jax.distributed.initialize(coordinator_address=coordinator,
+                               num_processes=num_processes,
+                               process_id=process_id)
+    return True
 
 
 def make_production_mesh(*, multi_pod: bool = False):

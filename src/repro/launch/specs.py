@@ -13,6 +13,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import FedConfig, ModelConfig, ShapeConfig
+from repro.core.client_state import PopulationLayout, population_layout
 from repro.core.server import ServerState
 from repro.models import abstract_decode_state, abstract_params
 from repro.optim import get_optimizer
@@ -159,6 +160,19 @@ def client_state_specs(cfg: ModelConfig, fed: FedConfig, mesh: Mesh,
     return specs, shardings
 
 
+def store_population_layout(mesh: Mesh, num_clients: int) -> PopulationLayout:
+    """THE population layout of a device store on ``mesh``.
+
+    The single source of truth consulted by ``device_store_specs``, the
+    launch entry points (train/dryrun), and anything else that must agree
+    with the store's on-device shapes: the leading ``N`` axis shards over
+    the mesh's client axes (``client_axes``) and is padded up to the next
+    multiple of their extent — never silently replicated. The padding rows
+    are dead (masked ``-1`` stamps, unreachable ids).
+    """
+    return population_layout(mesh, num_clients)
+
+
 def device_store_specs(cfg: ModelConfig, fed: FedConfig, mesh: Mesh,
                        placement: str, num_clients: int = 64,
                        param_dtype=jnp.float32):
@@ -166,13 +180,15 @@ def device_store_specs(cfg: ModelConfig, fed: FedConfig, mesh: Mesh,
 
     The ``client_state_placement="device"`` round signature appends
     ``(store_state, client_ids)``: the full population's dense
-    ``{"buffers": (N, ...), "stamps": (N,)}`` store
+    ``{"buffers": (N_padded, ...), "stamps": (N_padded,)}`` store
     (``DeviceClientStateStore.device_state()``) and the traced ``(C,)``
     cohort id vector. Returns ``(store_spec, store_sharding, ids_spec,
     ids_sharding)``; ``(None,) * 4`` for stateless algorithms. The leading
-    population axis shards over the client axes when divisible (the
-    in-program gather reshards the cohort slice) and replicates otherwise;
-    ids are replicated.
+    population axis follows :func:`store_population_layout`: sharded over
+    the client axes with ``num_clients`` padded up to the next multiple of
+    their extent (a non-divisible population used to fall back to full
+    replication, silently); the in-program gather reshards the cohort
+    slice, and ids are replicated.
     """
     from repro.algorithms import get_algorithm  # noqa: PLC0415 — cycle
 
@@ -181,16 +197,13 @@ def device_store_specs(cfg: ModelConfig, fed: FedConfig, mesh: Mesh,
         return None, None, None, None
     params = abstract_params(cfg, param_dtype)
     one = jax.eval_shape(alg.init_client_state, params)
-    caxes = client_axes(mesh)
-    extent = 1
-    for a in caxes:
-        extent *= mesh.shape[a]
-    lead = P(caxes) if num_clients % extent == 0 else P()
+    layout = store_population_layout(mesh, num_clients)
+    n, lead = layout.padded_num_clients, layout.spec
     store_spec = {
         "buffers": jax.tree_util.tree_map(
-            lambda x: jax.ShapeDtypeStruct((num_clients,) + tuple(x.shape),
+            lambda x: jax.ShapeDtypeStruct((n,) + tuple(x.shape),
                                            x.dtype), one),
-        "stamps": jax.ShapeDtypeStruct((num_clients,), jnp.int32),
+        "stamps": jax.ShapeDtypeStruct((n,), jnp.int32),
     }
     store_sh = {
         "buffers": jax.tree_util.tree_map(

@@ -6,10 +6,19 @@ production mesh). FedPA vs FedAvg is a flag; checkpoints + metrics logged.
 
   PYTHONPATH=src python -m repro.launch.train --arch fedlm-100m --smoke \
       --rounds 20 --algorithm fedpa
+
+Multi-host: launch one process per host with ``--coordinator host:port
+--num-processes N --process-id k``. The population axis (client-state
+store + cohort batches) shards over the global device mesh; each process
+builds only its shard's batches (``data/prefetch.py``), the server state
+is replicated, and checkpoints split into a process-0 server file plus
+per-host store shards. Single-host population sharding (over local
+devices) is ``--shard-population``.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import time
@@ -20,7 +29,8 @@ import numpy as np
 
 from repro import configs
 from repro.algorithms import algorithm_names, get_algorithm, phase_name
-from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.checkpoint import (restore_checkpoint, restore_store_sharded,
+                              save_checkpoint, save_store_sharded)
 from repro.configs.base import FedConfig
 from repro.core.async_engine import AsyncRoundEngine
 from repro.core.client_state import jit_donating_store, make_client_store
@@ -28,7 +38,10 @@ from repro.core.server import init_server_state
 from repro.core.sharded_round import make_fed_round, make_fed_round_split
 from repro.data import SyntheticLMData
 from repro.data.cohort_source import CohortSource
-from repro.data.prefetch import close_prefetcher, make_prefetcher
+from repro.data.prefetch import (close_prefetcher, globalize_cohort_batches,
+                                 local_row_range, make_prefetcher,
+                                 replicate_global)
+from repro.launch.mesh import init_distributed, make_host_mesh
 from repro.models import init_params, lm_loss
 from repro.optim import get_optimizer
 
@@ -135,6 +148,19 @@ def parse_args(argv=None):
                          "stateful round at scatter time) or device "
                          "buffers threaded through the jitted round "
                          "(sync-free; pulled to host only at checkpoints)")
+    ap.add_argument("--coordinator", default=None,
+                    help="host:port of process 0 for a multi-host run "
+                         "(jax.distributed); every process passes the "
+                         "same value")
+    ap.add_argument("--process-id", type=int, default=None,
+                    help="this process's rank in [0, num_processes)")
+    ap.add_argument("--num-processes", type=int, default=None,
+                    help="total processes in the multi-host run "
+                         "(unset/1 = single-process)")
+    ap.add_argument("--shard-population", action="store_true",
+                    help="shard the population axis (client-state store + "
+                         "cohort batches) over the device mesh; implied "
+                         "by a multi-process launch")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)
@@ -209,11 +235,30 @@ def restore_if_present(args, state, store, ckpt_tree):
 def main():
     """Parse flags, build the round programs, drive the training loop."""
     args = parse_args()
+    # before ANY jax device use: distributed init must see an
+    # uninitialized backend
+    distributed = init_distributed(args.coordinator, args.process_id,
+                                   args.num_processes)
+    shard_pop = args.shard_population or distributed
+    if distributed and args.async_rounds:
+        raise SystemExit("--async-rounds is single-host only (the async "
+                         "engine's apply-order write-back has no "
+                         "cross-process story yet); drop the flag")
     cfg = configs.get_smoke(args.arch) if args.smoke \
         else configs.get_config(args.arch)
     fed = build_fed(args)
-    print(f"arch={cfg.name} params={configs.get_smoke(args.arch).param_count() if args.smoke else cfg.param_count():,} "
-          f"algorithm={fed.algorithm} rounds={args.rounds}")
+    if shard_pop and fed.prefetch_backend == "process":
+        # per-host feeding assembles global jax arrays in the builder; the
+        # forked arena child must never touch the jax runtime
+        fed = dataclasses.replace(fed, prefetch_backend="thread")
+    pop_mesh = make_host_mesh() if shard_pop else None
+    is_main = jax.process_index() == 0
+    if is_main:
+        print(f"arch={cfg.name} params={configs.get_smoke(args.arch).param_count() if args.smoke else cfg.param_count():,} "
+              f"algorithm={fed.algorithm} rounds={args.rounds}"
+              + (f" processes={jax.process_count()}" if distributed else "")
+              + (f" population_mesh={tuple(pop_mesh.shape.values())}"
+                 if pop_mesh is not None else ""))
 
     data = SyntheticLMData(vocab_size=cfg.vocab_size,
                            num_clients=args.num_clients, seed=args.seed)
@@ -232,28 +277,45 @@ def main():
                      if alg.has_burn_regime and fed.burn_in_rounds
                      else alg.stateful)
     device_store = fed.client_state_placement == "device"
-    store = (make_client_store(fed.client_state_placement, args.num_clients)
+    if shard_pop and not device_store and (alg.stateful or burn_stateful):
+        raise SystemExit("population sharding needs the device store for "
+                         "stateful algorithms: add "
+                         "--client-state-placement device")
+    store = (make_client_store(fed.client_state_placement, args.num_clients,
+                               mesh=pop_mesh if device_store else None)
              .ensure(alg.init_client_state(params))
              if alg.stateful or burn_stateful else None)
+    # a sharded store never ships through the server checkpoint: each
+    # host writes its own slice (checkpoint.save_store_sharded)
+    sharded_store = store is not None and pop_mesh is not None
 
     def ckpt_tree(round_state):
         """Checkpoint pytree: bare server state, or {"server", "clients"}.
 
         ``store.state_dict()`` is the one place device-resident client
         state is pulled to the host."""
-        if store is None:
+        if store is None or sharded_store:
             return round_state
         return {"server": round_state, "clients": store.state_dict()}
 
-    state, start_round = restore_if_present(args, state, store, ckpt_tree)
+    state, start_round = restore_if_present(
+        args, state, None if sharded_store else store, ckpt_tree)
+    if sharded_store and start_round:
+        restore_store_sharded(args.ckpt_dir, store, step=start_round)
 
     q_chunk = min(64, s_text)
 
     def jit_round(round_fn, stateful_regime):
         # device-stateful rounds take (state, batches, weights, store, ids)
-        # — donate the store so its buffers update in place
+        # — donate the store so its buffers update in place; a sharded
+        # store additionally pins the returned buffers to the population
+        # sharding so no round-over-round layout drift creeps in
         if device_store and stateful_regime:
-            return jit_donating_store(round_fn, 3)
+            pop_sh = (store.population_sharding
+                      if store is not None else None)
+            out_sh = (None if pop_sh is None
+                      else (None, None, pop_sh))
+            return jit_donating_store(round_fn, 3, out_shardings=out_sh)
         return jax.jit(round_fn)
 
     round_sample = jit_round(make_fed_round(cfg, fed, placement="parallel",
@@ -266,15 +328,28 @@ def main():
     # off the ABSOLUTE round index, so a checkpoint restart replays the
     # same fault matrix
     round_batches = make_round_batches(args, cfg, fed, data, s_text)
+    if pop_mesh is not None:
+        # per-host cohort feeding: this process builds batches only for
+        # the cohort rows its devices own; the global (C, ...) arrays are
+        # assembled shard-locally — no batch bytes cross hosts
+        lo, hi = local_row_range(pop_mesh, "data", fed.clients_per_round)
+        base_batches = round_batches
+
+        def round_batches(r, ids):  # noqa: F811 — sharded feeding wrapper
+            local = base_batches(r, np.asarray(ids)[lo:hi])
+            return globalize_cohort_batches(local, pop_mesh, "data",
+                                            len(ids), lo)
     source = CohortSource(fed, args.num_clients,
                           lambda ids, r: round_batches(r, ids),
                           seed=args.seed)
 
     eval_fn = make_eval_fn(args, cfg, data, s_text, q_chunk)
 
-    logf = open(args.log, "a") if args.log else None
+    logf = open(args.log, "a") if args.log and is_main else None
 
     def emit(rec):
+        if not is_main:
+            return  # every process computes metrics; one reports
         print(json.dumps(rec), flush=True)
         if logf:
             logf.write(json.dumps(rec) + "\n")
@@ -283,8 +358,15 @@ def main():
     def maybe_checkpoint(round_state, r):
         if args.ckpt_dir and ((r + 1) % args.ckpt_every == 0
                               or r == args.rounds - 1):
-            save_checkpoint(args.ckpt_dir, ckpt_tree(round_state), r + 1,
-                            {"arch": cfg.name, "algorithm": fed.algorithm})
+            if is_main:
+                save_checkpoint(args.ckpt_dir, ckpt_tree(round_state), r + 1,
+                                {"arch": cfg.name,
+                                 "algorithm": fed.algorithm})
+            if sharded_store:
+                # every process writes its own store slice
+                save_store_sharded(args.ckpt_dir, store, r + 1,
+                                   {"arch": cfg.name,
+                                    "algorithm": fed.algorithm})
 
     if fed.async_rounds:
         state = run_async(args, cfg, fed, alg, state, store, burn_stateful,
@@ -293,7 +375,8 @@ def main():
     else:
         state = run_sync(args, fed, alg, state, store, burn_stateful,
                          device_store, start_round, source, round_sample,
-                         round_burn, eval_fn, emit, maybe_checkpoint)
+                         round_burn, eval_fn, emit, maybe_checkpoint,
+                         pop_mesh=pop_mesh)
     if logf:
         logf.close()
 
@@ -362,17 +445,27 @@ def run_async(args, cfg, fed, alg, state, store, burn_stateful, start_round,
     return state
 
 
-def _sync_round(state, fn, cohort, store, device_store, stateful_round):
+def _sync_round(state, fn, cohort, store, device_store, stateful_round,
+                pop_mesh=None):
     """Apply one synchronous round, routing per client-state placement.
 
     A dropped client's half-finished state must not land: ``survivors``
-    doubles as the state-store write mask."""
+    doubles as the state-store write mask. With ``pop_mesh`` (a sharded /
+    multi-process run) the replicated operands — survivors mask, client
+    ids — are lifted to global arrays first; batches already arrive
+    global from the per-host feeding wrapper, the store lives sharded on
+    device, and the server state stays global round over round."""
     survivors = cohort.survivors  # None = mask-free program
     ids, batches = cohort.client_ids, cohort.batches
+    if pop_mesh is not None:
+        survivors = replicate_global(survivors, pop_mesh)
     if stateful_round and device_store:
+        dev_ids = store.prepare_ids(ids)
+        if pop_mesh is not None:
+            dev_ids = replicate_global(dev_ids, pop_mesh)
         state, metrics, new_ss = fn(state, batches, None,
                                     store.device_state(),
-                                    store.prepare_ids(ids), survivors)
+                                    dev_ids, survivors)
         store.set_device_state(new_ss)
     elif stateful_round:
         cstates, stamps = store.gather(ids)
@@ -386,8 +479,12 @@ def _sync_round(state, fn, cohort, store, device_store, stateful_round):
 
 def run_sync(args, fed, alg, state, store, burn_stateful, device_store,
              start_round, source, round_sample, round_burn, eval_fn, emit,
-             maybe_checkpoint):
+             maybe_checkpoint, pop_mesh=None):
     """Drive the synchronous round loop; returns the final state."""
+    if pop_mesh is not None:
+        # every jit input must be a global array in a multi-process run;
+        # after round one the server state is a round output and stays so
+        state = replicate_global(state, pop_mesh)
     prefetch = (make_prefetcher(fed.prefetch_backend, source.cohort,
                                 start_round, args.rounds,
                                 depth=fed.prefetch_rounds)
@@ -404,7 +501,8 @@ def run_sync(args, fed, alg, state, store, burn_stateful, device_store,
                               and (burn_stateful if is_burn
                                    else alg.stateful))
             state, metrics = _sync_round(state, fn, cohort, store,
-                                         device_store, stateful_round)
+                                         device_store, stateful_round,
+                                         pop_mesh=pop_mesh)
             rec = {"round": r, "eval_loss": float(eval_fn(state.params)),
                    "client_loss_last": float(metrics["loss_last"]),
                    "client_loss_first": float(metrics["loss_first"]),

@@ -1,0 +1,108 @@
+"""Subprocess body for test_population_sharding: the full sharded-vs-
+replicated parity matrix on 8 fake host devices.
+
+For scaffold and fedep, across {parallel, sequential, chunked} x {sync,
+async staleness=0}, a FedSim whose DeviceClientStateStore shards the
+population over the 8-device ("data",) mesh must reproduce the unsharded
+device-store run BITWISE — server params and the full store (stamps +
+every buffer row). The population (10) deliberately does not divide the
+mesh (8): the padded rows must stay dead. Prints MARKER lines the test
+asserts on, plus the per-device memory ratio of the sharded store.
+"""
+import dataclasses
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedConfig
+from repro.core import FedSim
+from repro.data import make_federated_lsq
+from repro.data.synthetic_lsq import lsq_batches
+from repro.launch.mesh import make_host_mesh
+
+assert jax.device_count() == 8, jax.device_count()
+mesh = make_host_mesh()
+
+C, D, N, ROUNDS = 4, 3, 10, 4
+
+SCAFFOLD = FedConfig(algorithm="scaffold", clients_per_round=C,
+                     local_steps=6, server_opt="sgd", server_lr=0.1,
+                     client_opt="sgd", client_lr=0.01,
+                     client_state_placement="device")
+FEDEP = FedConfig(algorithm="fedep", clients_per_round=C, local_steps=6,
+                  burn_in_steps=4, steps_per_sample=2, shrinkage_rho=0.5,
+                  burn_in_rounds=2, fedep_damping=0.7, server_opt="sgd",
+                  server_lr=0.1, client_opt="sgd", client_lr=0.01,
+                  client_state_placement="device")
+
+clients, data = make_federated_lsq(N, 50, D, heterogeneity=20.0, seed=0)
+
+
+def grad_fn(params, batch):
+    def loss(p):
+        r = batch["x"] @ p - batch["y"]
+        return 0.5 * jnp.mean(r * r) * 50
+    return jax.value_and_grad(loss)(params)
+
+
+def batch_fn(cid, r, steps):
+    X, y = data[cid]
+    return lsq_batches(X, y, 10, steps, seed=r * 131 + cid)
+
+
+def run(fed, use_mesh):
+    sim = FedSim(fed=fed, grad_fn=grad_fn, batch_fn=batch_fn,
+                 num_clients=N, mesh=mesh if use_mesh else None)
+    state, _ = sim.run(jnp.zeros(D), ROUNDS)
+    store = jax.tree_util.tree_map(np.asarray,
+                                   sim.client_store.state_dict())
+    return np.asarray(state.params), store, sim.client_store
+
+
+def mem_ratio(store):
+    """max per-device sharded bytes / single-device replicated bytes."""
+    dev = store.device_state()
+    per_dev = {}
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(dev):
+        total += leaf.nbytes
+        for s in leaf.addressable_shards:
+            per_dev[s.device] = per_dev.get(s.device, 0) + s.data.nbytes
+    return max(per_dev.values()) / total
+
+
+for alg_name, base in (("scaffold", SCAFFOLD), ("fedep", FEDEP)):
+    for placement, chunk in (("parallel", 0), ("sequential", 0),
+                             ("chunked", 3)):
+        for mode in ("sync", "async0"):
+            fed = dataclasses.replace(
+                base, round_placement=placement, round_chunk_size=chunk,
+                **(dict(async_rounds=True, max_staleness=0,
+                        prefetch_rounds=2) if mode == "async0" else {}))
+            want_p, want_s, _ = run(fed, use_mesh=False)
+            got_p, got_s, sharded = run(fed, use_mesh=True)
+            np.testing.assert_array_equal(got_p, want_p)
+            jax.tree_util.tree_map(np.testing.assert_array_equal,
+                                   got_s, want_s)
+            lay = sharded.layout
+            assert lay.extent == 8 and lay.padded_num_clients == 16, lay
+            # dead padding rows: stamps live only for real clients
+            stamps = np.asarray(sharded.device_state()["stamps"])
+            assert (stamps[N:] == -1).all(), stamps
+            print(f"MARKER parity {alg_name} {placement} {mode} OK",
+                  flush=True)
+    # per-device memory: <= (1/8 + padding) of the replicated footprint
+    _, _, sharded = run(dataclasses.replace(base,
+                                            round_placement="parallel"),
+                        use_mesh=True)
+    ratio = mem_ratio(sharded)
+    bound = (1.0 / 8) * (16 / N)     # even shards of the padded buffers
+    assert ratio <= bound + 1e-9, (ratio, bound)
+    print(f"MARKER mem {alg_name} ratio={ratio:.4f} bound={bound:.4f} OK",
+          flush=True)
+
+print("MARKER all-ok", flush=True)

@@ -49,3 +49,93 @@ def test_shape_mismatch_fails(tmp_path):
 def test_missing_dir_fails(tmp_path):
     with pytest.raises(FileNotFoundError):
         restore_checkpoint(str(tmp_path / "nope"), _state())
+
+
+# ---------------------------------------------------------------------------
+# Shard-local client-store checkpoints
+# ---------------------------------------------------------------------------
+
+def _filled_host_store(n=10):
+    from repro.core.client_state import make_client_store
+    store = make_client_store("host", n).ensure(
+        {"c": np.zeros((3,), np.float32)})
+    ids = np.array([0, 3, n - 1])
+    _, stamps = store.gather(ids)
+    store.scatter(ids, {"c": np.arange(9, dtype=np.float32).reshape(3, 3)},
+                  stamps)
+    return store
+
+
+def test_store_shard_roundtrip_and_latest(tmp_path):
+    from repro.checkpoint import (latest_sharded_checkpoint,
+                                  restore_store_sharded, save_store_sharded)
+    store = _filled_host_store()
+    save_store_sharded(str(tmp_path), store, 5)
+    # shard files never alias the server checkpoint family
+    assert latest_checkpoint(str(tmp_path)) is None
+    assert latest_sharded_checkpoint(str(tmp_path)) == 5
+    store2 = _filled_host_store()
+    store2.reset()
+    assert restore_store_sharded(str(tmp_path), store2) == 5
+    a, b = store.state_dict(), store2.state_dict()
+    np.testing.assert_array_equal(a["stamps"], b["stamps"])
+    np.testing.assert_array_equal(a["buffers"]["c"], b["buffers"]["c"])
+
+
+def test_sharded_restore_reassembles_multiple_shards(tmp_path):
+    """Topology change: two saved shards, restored by one process."""
+    from repro.checkpoint import restore_store_sharded, save_checkpoint_shard
+    store = _filled_host_store()
+    full = store.state_dict()
+    for i, (lo, hi) in enumerate(((0, 5), (5, 10))):
+        save_checkpoint_shard(
+            str(tmp_path),
+            {"stamps": full["stamps"][lo:hi],
+             "buffers": {"c": full["buffers"]["c"][lo:hi]}},
+            7, row_offset=lo, shard_index=i, num_shards=2)
+    store2 = _filled_host_store()
+    store2.reset()
+    restore_store_sharded(str(tmp_path), store2)
+    got = store2.state_dict()
+    np.testing.assert_array_equal(got["stamps"], full["stamps"])
+    np.testing.assert_array_equal(got["buffers"]["c"], full["buffers"]["c"])
+
+
+def test_incomplete_shard_set_is_skipped(tmp_path):
+    """A crash mid-save (some hosts wrote, some didn't) must not be
+    offered for restore."""
+    from repro.checkpoint import (latest_sharded_checkpoint,
+                                  restore_store_sharded,
+                                  save_checkpoint_shard, save_store_sharded)
+    store = _filled_host_store()
+    save_store_sharded(str(tmp_path), store, 2)     # complete 1-of-1
+    full = store.state_dict()
+    save_checkpoint_shard(str(tmp_path),
+                          {"stamps": full["stamps"][:5],
+                           "buffers": {"c": full["buffers"]["c"][:5]}},
+                          9, row_offset=0, shard_index=0, num_shards=2)
+    assert latest_sharded_checkpoint(str(tmp_path)) == 2
+    store2 = _filled_host_store()
+    with pytest.raises(FileNotFoundError, match="1/2 shards"):
+        restore_store_sharded(str(tmp_path), store2, step=9)
+
+
+def test_non_contiguous_shards_fail_loudly(tmp_path):
+    from repro.checkpoint import restore_store_sharded, save_checkpoint_shard
+    store = _filled_host_store()
+    full = store.state_dict()
+    for i, (lo, hi) in enumerate(((0, 4), (5, 10))):   # row 4 missing
+        save_checkpoint_shard(
+            str(tmp_path),
+            {"stamps": full["stamps"][lo:hi],
+             "buffers": {"c": full["buffers"]["c"][lo:hi]}},
+            3, row_offset=lo, shard_index=i, num_shards=2)
+    with pytest.raises(ValueError, match="not contiguous"):
+        restore_store_sharded(str(tmp_path), store, step=3)
+
+
+def test_shard_index_validation(tmp_path):
+    from repro.checkpoint import save_checkpoint_shard
+    with pytest.raises(ValueError, match="out of range"):
+        save_checkpoint_shard(str(tmp_path), {"stamps": np.zeros(2)}, 0,
+                              row_offset=0, shard_index=2, num_shards=2)

@@ -15,8 +15,11 @@ from repro.algorithms import get_algorithm
 from repro.checkpoint import restore_checkpoint, save_checkpoint
 from repro.configs.base import FedConfig
 from repro.core import FedSim, make_round_program
-from repro.core.client_state import (ClientStateStore, DeviceClientStateStore,
-                                     make_client_store)
+from jax.sharding import PartitionSpec
+
+from repro.core.client_state import (BaseClientStateStore, ClientStateStore,
+                                     DeviceClientStateStore,
+                                     make_client_store, population_layout)
 from repro.core.server import init_server_state
 from repro.data import make_federated_lsq
 from repro.data.synthetic_lsq import lsq_batches
@@ -364,3 +367,96 @@ def test_device_store_checkpoint_restores_into_either_placement(
     jax.tree_util.tree_map(np.testing.assert_array_equal,
                            _store_dict_np(sim2.client_store), ref_store)
     assert int(got_state.round) == int(ref_state.round)
+
+
+# ---------------------------------------------------------------------------
+# Population layout arithmetic + store ABC dispatch
+# ---------------------------------------------------------------------------
+
+class _FakeMesh:
+    """Duck-typed mesh: population_layout only reads shape/axis_names."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+def test_population_layout_pads_to_axis_extent():
+    mesh = _FakeMesh({"data": 8, "model": 2})
+    lay = population_layout(mesh, 10)
+    assert (lay.extent, lay.padded_num_clients, lay.padding) == (8, 16, 6)
+    assert lay.spec == PartitionSpec("data")
+    # divisible populations pad nothing
+    assert population_layout(mesh, 16).padding == 0
+    # "model" never carries clients
+    assert population_layout(_FakeMesh({"model": 4}), 10).extent == 1
+
+
+def test_population_layout_multi_axis_and_identity():
+    mesh = _FakeMesh({"pod": 2, "data": 4, "model": 2})
+    lay = population_layout(mesh, 9)
+    assert (lay.extent, lay.padded_num_clients) == (8, 16)
+    assert lay.spec == PartitionSpec(("pod", "data"))
+    none = population_layout(None, 9)
+    assert (none.extent, none.padded_num_clients) == (1, 9)
+    assert none.spec == PartitionSpec()
+
+
+def test_population_layout_validates():
+    with pytest.raises(ValueError, match="not in mesh"):
+        population_layout(_FakeMesh({"data": 4}), 8,
+                          population_spec=PartitionSpec("tensor"))
+    with pytest.raises(ValueError, match="num_clients"):
+        population_layout(_FakeMesh({"data": 4}), 0)
+
+
+def test_make_client_store_dispatches_on_abc():
+    for placement, cls in (("host", ClientStateStore),
+                           ("device", DeviceClientStateStore)):
+        store = make_client_store(placement, C)
+        assert isinstance(store, cls)
+        assert isinstance(store, BaseClientStateStore)
+    with pytest.raises(ValueError, match="unknown client_state_placement"):
+        make_client_store("gpu", C)
+    # a mesh makes no sense for the host store: loud, not silently ignored
+    with pytest.raises(ValueError, match="shard"):
+        make_client_store("host", C, mesh=_FakeMesh({"data": 4}))
+
+
+def test_store_registry_rejects_non_store_classes():
+    from repro.core.client_state import STORES
+    STORES["bogus"] = dict
+    try:
+        with pytest.raises(TypeError):
+            make_client_store("bogus", C)
+    finally:
+        del STORES["bogus"]
+
+
+def test_base_store_subclass_inherits_ensure_contract():
+    class _Recording(BaseClientStateStore):
+        def _allocate(self, template):
+            return jax.tree_util.tree_map(
+                lambda x: np.zeros((self.num_clients,) + np.shape(x)), template)
+
+        def reset(self):
+            self._buffers = None
+
+        def gather(self, client_ids):
+            raise NotImplementedError
+
+        def scatter(self, *a, **k):
+            raise NotImplementedError
+
+        def state_dict(self):
+            raise NotImplementedError
+
+        def load_state_dict(self, state):
+            raise NotImplementedError
+
+    s = _Recording(3)
+    assert not s.initialized
+    s.ensure({"v": np.ones(2)})
+    assert s.initialized and s._buffers["v"].shape == (3, 2)
+    with pytest.raises(ValueError):
+        _Recording(0)

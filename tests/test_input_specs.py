@@ -67,3 +67,50 @@ def test_prefill_specs(mesh):
     B, S = batch["tokens"].shape
     assert B == 32 and S == 32_768 - cfg.frontend_tokens
     assert batch["frontend"].shape == (32, 256, cfg.d_model)
+
+
+def test_device_store_specs_pads_non_divisible_population():
+    """Regression: a population that doesn't divide the client-axis extent
+    used to fall back to full replication silently; it must now pad N up
+    and keep the population axis sharded."""
+    try:
+        from jax.sharding import AbstractMesh
+    except ImportError:
+        pytest.skip("jax without AbstractMesh")
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.specs import device_store_specs
+
+    mesh = AbstractMesh((("data", 8), ("model", 2)))
+    cfg = configs.get_config("xlstm-125m")
+    fed = default_fed_config("scaffold")
+    store_spec, store_sh, ids_spec, ids_sh = device_store_specs(
+        cfg, fed, mesh, "parallel", num_clients=10)
+    # 10 clients over extent 8 -> 16 padded rows, still sharded over "data"
+    assert store_spec["stamps"].shape == (16,)
+    assert store_sh["stamps"].spec == P("data")
+    for leaf, sh in zip(
+            jax.tree_util.tree_leaves(store_spec["buffers"]),
+            jax.tree_util.tree_leaves(store_sh["buffers"])):
+        assert leaf.shape[0] == 16
+        assert sh.spec[0] == "data"
+    assert ids_spec.shape == (8,) and ids_sh.spec == P()
+    # a divisible population is unpadded but equally sharded
+    spec64, sh64, _, _ = device_store_specs(cfg, fed, mesh, "parallel",
+                                            num_clients=64)
+    assert spec64["stamps"].shape == (64,)
+    assert sh64["stamps"].spec == P("data")
+
+
+def test_store_population_layout_is_specs_source_of_truth():
+    """launch.specs delegates population layout to core.client_state —
+    one definition of padding/extent for specs, store, and dry-run."""
+    try:
+        from jax.sharding import AbstractMesh
+    except ImportError:
+        pytest.skip("jax without AbstractMesh")
+    from repro.core.client_state import population_layout
+    from repro.launch.specs import store_population_layout
+
+    mesh = AbstractMesh((("data", 8), ("model", 2)))
+    assert store_population_layout(mesh, 10) == population_layout(mesh, 10)

@@ -1,0 +1,131 @@
+"""Population sharding acceptance: sharded-vs-replicated bitwise parity
+across the full (algorithm x placement x engine) matrix on 8 fake devices,
+the 2-process ``jax.distributed`` train driver against a single-process
+reference, and the 1M-client scaffold dry-run lowering. All subprocess
+tests (device count locks at first jax import) in the nightly slow lane."""
+import json
+import os
+import socket
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+HERE = os.path.dirname(__file__)
+SRC = os.path.join(HERE, "..", "src")
+
+
+def _run(cmd, env=None, timeout=540):
+    full_env = dict(os.environ, PYTHONPATH=SRC)
+    full_env.pop("XLA_FLAGS", None)
+    if env:
+        full_env.update(env)
+    return subprocess.run(cmd, capture_output=True, text=True,
+                          timeout=timeout, env=full_env)
+
+
+@pytest.mark.slow
+def test_sharded_round_matrix_bitwise():
+    """scaffold/fedep x {parallel, sequential, chunked} x {sync, async
+    staleness=0}: population-sharded store == replicated store, bitwise
+    (params + full store), with bounded per-device memory."""
+    script = os.path.join(HERE, "_population_sharding_script.py")
+    out = _run([sys.executable, script])
+    assert out.returncode == 0, out.stderr[-4000:]
+    markers = [ln for ln in out.stdout.splitlines()
+               if ln.startswith("MARKER")]
+    parity = [m for m in markers if m.startswith("MARKER parity")]
+    assert len(parity) == 12, markers          # 2 algs x 3 placements x 2
+    assert all(m.endswith("OK") for m in parity)
+    assert sum(m.startswith("MARKER mem") for m in markers) == 2
+    assert "MARKER all-ok" in markers
+
+
+def _train_cmd(algorithm, extra):
+    return [sys.executable, "-m", "repro.launch.train",
+            "--arch", "fedlm-100m", "--smoke", "--rounds", "2",
+            "--clients", "4", "--num-clients", "8",
+            "--local-steps", "3", "--burn-in-steps", "2",
+            "--steps-per-sample", "1", "--burn-in-rounds", "1",
+            "--algorithm", algorithm, "--client-opt", "sgd",
+            "--client-state-placement", "device",
+            "--prefetch-rounds", "0", "--seed", "0",
+            "--ckpt-every", "2"] + extra
+
+
+def _free_port():
+    with socket.socket() as s:
+        s.bind(("localhost", 0))
+        return s.getsockname()[1]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("algorithm", ["scaffold", "fedep"])
+def test_two_process_train_matches_single_process(algorithm, tmp_path):
+    """2 CPU processes under ``jax.distributed`` (gloo collectives), one
+    device each, must reproduce a single-process run on the same 2-device
+    ("data",) mesh bitwise: identical server checkpoint, and store shards
+    that concatenate to the reference store. Exercises per-host cohort
+    feeding, replicated-input lifting, and shard-local checkpointing."""
+    port = _free_port()
+    mh = str(tmp_path / "mh")
+    dist = ["--coordinator", f"localhost:{port}", "--num-processes", "2"]
+    procs = []
+    for pid in (0, 1):
+        cmd = _train_cmd(algorithm, dist + ["--process-id", str(pid),
+                                            "--ckpt-dir", mh])
+        full_env = dict(os.environ, PYTHONPATH=SRC)
+        full_env.pop("XLA_FLAGS", None)
+        procs.append(subprocess.Popen(cmd, stdout=subprocess.PIPE,
+                                      stderr=subprocess.STDOUT, text=True,
+                                      env=full_env))
+    outs = [p.communicate(timeout=540)[0] for p in procs]
+    for p, o in zip(procs, outs):
+        assert p.returncode == 0, o[-4000:]
+    # process 0 logs rounds; process 1 stays silent
+    assert '"round": 1' in outs[0] and '"round"' not in outs[1]
+
+    ref = str(tmp_path / "ref")
+    out = _run(_train_cmd(algorithm,
+                          ["--shard-population", "--ckpt-dir", ref]),
+               env={"XLA_FLAGS":
+                    "--xla_force_host_platform_device_count=2"})
+    assert out.returncode == 0, out.stderr[-4000:]
+
+    a = np.load(os.path.join(mh, "ckpt_00000002.npz"))
+    b = np.load(os.path.join(ref, "ckpt_00000002.npz"))
+    assert set(a.files) == set(b.files)
+    for k in a.files:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=f"server {k}")
+    s0 = np.load(os.path.join(mh, "ckpt_00000002.shard0of2.npz"))
+    s1 = np.load(os.path.join(mh, "ckpt_00000002.shard1of2.npz"))
+    r = np.load(os.path.join(ref, "ckpt_00000002.shard0of1.npz"))
+    for k in r.files:
+        np.testing.assert_array_equal(
+            np.concatenate([s0[k], s1[k]], axis=0), r[k],
+            err_msg=f"store {k}")
+
+
+@pytest.mark.slow
+def test_dryrun_lowers_million_client_scaffold_store(tmp_path):
+    """A 1M-client scaffold round lowers on the 16x16 abstract mesh with
+    the store sharded over the 16-wide client axis (no OOM: lowering
+    only, ``--no-compile``)."""
+    out_path = str(tmp_path / "dryrun.jsonl")
+    out = _run([sys.executable, "-m", "repro.launch.dryrun",
+                "--arch", "xlstm-125m", "--shape", "train_4k",
+                "--algorithm", "scaffold",
+                "--client-state-placement", "device",
+                "--num-clients", "1000000", "--no-compile",
+                "--out", out_path])
+    assert out.returncode == 0, out.stderr[-4000:]
+    with open(out_path) as f:
+        recs = [json.loads(ln) for ln in f if ln.strip()]
+    assert recs and all(r["status"] in ("ok", "lowered") for r in recs), \
+        out.stdout
+    pop = recs[0]["store_population"]
+    assert pop["num_clients"] == 1_000_000
+    assert pop["padded_num_clients"] == 1_000_000   # 16 | 1M: no padding
+    assert pop["shard_extent"] == 16
+    assert pop["rows_per_device"] == 62_500
