@@ -1,0 +1,145 @@
+"""Compression benchmark: dense fedpa_precision vs fedlora payloads.
+
+Two parts. (1) **Exact wire bytes, analytically**: per-client uplink for
+the fedlm-100m decoder under the dense precision payload vs the
+``lowrank`` and ``lowrank+int8`` codecs, via ``jax.eval_shape`` — no
+allocation, so the ratios are exact and runner-independent. The
+``*_compression_ratio`` headline metrics are gated by
+``check_regression`` (higher is better). (2) **Simulated cost**: round
+wall time and final loss for dense vs compressed on a heterogeneous
+matrix-LSQ problem — the compression math (QR sketch + quantize) rides
+inside the jitted round, so ``*_ms`` shows its overhead and ``loss_gap``
+what the payload diet costs in quality. Timings are informational only.
+
+Writes ``BENCH_compression.json`` next to the CWD for the CI artifact
+lane.
+
+  PYTHONPATH=src python -m benchmarks.bench_compression [--full]
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compression import round_bytes
+from repro.configs import fedlm_100m
+from repro.configs.base import FedConfig
+from repro.core import FedSim
+from repro.models.model import abstract_params
+
+CLIENTS = 8
+
+
+def _wire_bytes() -> dict:
+    """Exact per-client uplink bytes for fedlm-100m, per codec."""
+    params = abstract_params(fedlm_100m.config())
+    kw = dict(clients_per_round=CLIENTS, local_steps=12, burn_in_steps=4,
+              steps_per_sample=2, shrinkage_rho=0.3)
+    dense = round_bytes(FedConfig(algorithm="fedpa_precision", **kw),
+                        params)
+    out = {"dense_up_mb": dense["bytes_up_per_client"] / 2**20}
+    for label, codec in (("lowrank", "lowrank"),
+                         ("lowrank_int8", "lowrank+int8")):
+        fed = FedConfig(algorithm="fedlora", payload_codec=codec,
+                        lora_rank=4, **kw)
+        rb = round_bytes(fed, params)
+        out[f"{label}_up_mb"] = rb["bytes_up_per_client"] / 2**20
+        out[f"{label}_compression_ratio"] = (
+            dense["bytes_up_per_client"] / rb["bytes_up_per_client"])
+    return out
+
+
+def _sim(rounds: int, din: int, dout: int) -> dict:
+    """Round time + final loss, dense vs lowrank+int8, same LSQ problem."""
+    n = 64
+    rng = np.random.RandomState(0)
+    w_true = rng.randn(din, dout).astype(np.float32)
+    data = {}
+    for cid in range(CLIENTS):
+        shift = rng.randn(din, dout).astype(np.float32) * 0.5
+        x = rng.randn(n, din).astype(np.float32)
+        y = x @ (w_true + shift) + 0.1 * rng.randn(n, dout).astype(
+            np.float32)
+        data[cid] = (jnp.asarray(x), jnp.asarray(y))
+
+    def grad_fn(params, batch):
+        def loss(p):
+            r = batch["x"] @ p["w"] - batch["y"]
+            return 0.5 * jnp.mean(r * r)
+        return jax.value_and_grad(loss)(params)
+
+    def batch_fn(cid, r, steps):
+        x, y = data[cid]
+        rs = np.random.RandomState(r * 131 + cid)
+        idx = rs.randint(0, n, size=(steps, 16))
+        return {"x": x[idx], "y": y[idx]}
+
+    def final_loss(state):
+        tot = 0.0
+        for cid in data:
+            x, y = data[cid]
+            r = x @ state.params["w"] - y
+            tot += float(0.5 * jnp.mean(r * r))
+        return tot / len(data)
+
+    kw = dict(clients_per_round=CLIENTS, local_steps=12, burn_in_steps=4,
+              steps_per_sample=2, shrinkage_rho=0.3, burn_in_rounds=2,
+              server_opt="sgd", server_lr=0.5, client_opt="sgd",
+              client_lr=0.05)
+    feds = {
+        "dense": FedConfig(algorithm="fedpa_precision", **kw),
+        "lowrank_int8": FedConfig(algorithm="fedlora",
+                                  payload_codec="lowrank+int8",
+                                  lora_rank=4, **kw),
+    }
+    out = {}
+    for label, fed in feds.items():
+        sim = FedSim(fed=fed, grad_fn=grad_fn, batch_fn=batch_fn,
+                     num_clients=CLIENTS)
+        state = sim.init({"w": jnp.zeros((din, dout))})
+        state, _ = sim.round(state, 0)            # warm-up / compile
+        jax.block_until_ready(state.params["w"])
+        t0 = time.perf_counter()
+        for r in range(1, rounds):
+            state, _ = sim.round(state, r)
+        jax.block_until_ready(state.params["w"])
+        out[f"{label}_ms"] = (time.perf_counter() - t0) / (rounds - 1) * 1e3
+        out[f"{label}_final_loss"] = final_loss(state)
+    out["loss_gap"] = (out["lowrank_int8_final_loss"]
+                       / out["dense_final_loss"] - 1.0)
+    return out
+
+
+def run(quick: bool = True):
+    """quick: 20-round LSQ sim; full: 50 rounds on a bigger matrix."""
+    rounds, din, dout = (20, 32, 16) if quick else (50, 128, 64)
+    report = {"model": "fedlm-100m", "clients_per_round": CLIENTS,
+              "wire": _wire_bytes(), "sim": _sim(rounds, din, dout)}
+    wire, sim = report["wire"], report["sim"]
+    rows = [
+        {"name": "compression/fedlm_100m_wire",
+         "us_per_call": "",
+         "derived": (f"dense={wire['dense_up_mb']:.1f}MB/client,"
+                     f"lowrank={wire['lowrank_up_mb']:.1f}MB"
+                     f"({wire['lowrank_compression_ratio']:.1f}x),"
+                     f"+int8={wire['lowrank_int8_up_mb']:.1f}MB"
+                     f"({wire['lowrank_int8_compression_ratio']:.1f}x)")},
+        {"name": "compression/lsq_round",
+         "us_per_call": sim["dense_ms"] * 1e3,
+         "derived": (f"dense={sim['dense_ms']:.1f}ms,"
+                     f"lowrank+int8={sim['lowrank_int8_ms']:.1f}ms,"
+                     f"loss_gap={sim['loss_gap'] * 100:+.1f}%")},
+    ]
+    with open("BENCH_compression.json", "w") as f:
+        json.dump(report, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    for row in run(quick="--full" not in sys.argv):
+        print(row)

@@ -2,15 +2,16 @@
 the committed baselines in ``benchmarks/baselines/``.
 
 Only dimensionless ratio metrics — keys containing ``speedup``,
-``overhead``, or ``mem_ratio`` — are gated; absolute ``*_ms``/``*_us``
-timings vary too much across runners to fail CI on. For ``speedup`` keys
-higher is better, for ``overhead`` and ``mem_ratio`` keys lower is
-better; either direction fails when it regresses by more than
-``--tolerance`` (default 20%).
+``overhead``, ``mem_ratio``, or ``compression_ratio`` — are gated;
+absolute ``*_ms``/``*_us`` timings vary too much across runners to fail
+CI on. For ``speedup`` and ``compression_ratio`` keys higher is better,
+for ``overhead`` and ``mem_ratio`` keys lower is better; either
+direction fails when it regresses by more than ``--tolerance``
+(default 20%).
 
 Typical CI usage, after the bench lane has produced the reports::
 
-  PYTHONPATH=src python -m benchmarks.run --only round_engine,async_engine,cohort_source,client_store
+  PYTHONPATH=src python -m benchmarks.run --only round_engine,async_engine,cohort_source,client_store,compression
   python -m benchmarks.check_regression
 
 To refresh the baselines after an intentional perf change, rerun the
@@ -18,7 +19,7 @@ benches on a quiet machine and copy the reports over (the failure
 message prints this too)::
 
   cp BENCH_round_engine.json BENCH_async_engine.json \
-     BENCH_cohort_source.json benchmarks/baselines/
+     BENCH_cohort_source.json BENCH_compression.json benchmarks/baselines/
 """
 from __future__ import annotations
 
@@ -33,10 +34,11 @@ DEFAULT_TOLERANCE = 0.20
 REFRESH_HINT = (
     "To refresh after an intentional perf change:\n"
     "  PYTHONPATH=src python -m benchmarks.run "
-    "--only round_engine,async_engine,cohort_source,client_store\n"
+    "--only round_engine,async_engine,cohort_source,client_store,"
+    "compression\n"
     "  cp BENCH_round_engine.json BENCH_async_engine.json "
     "BENCH_cohort_source.json BENCH_client_store.json "
-    "benchmarks/baselines/"
+    "BENCH_compression.json benchmarks/baselines/"
 )
 
 
@@ -58,7 +60,8 @@ def gated_keys(report: dict) -> list[str]:
     return sorted(
         k for k, v in flatten(report).items()
         if isinstance(v, (int, float))
-        and ("speedup" in k or "overhead" in k or "mem_ratio" in k)
+        and ("speedup" in k or "overhead" in k or "mem_ratio" in k
+             or "compression_ratio" in k)
     )
 
 

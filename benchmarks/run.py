@@ -11,8 +11,8 @@ import time
 import traceback
 
 from benchmarks import (bench_async_engine, bench_client_store,
-                        bench_cohort_source, bench_roofline,
-                        bench_round_engine, fig1_quadratic,
+                        bench_cohort_source, bench_compression,
+                        bench_roofline, bench_round_engine, fig1_quadratic,
                         fig3_bias_variance, fig4_ess, table1_client_cost,
                         table3_benchmark_sim, table3_lr_sim)
 
@@ -28,6 +28,7 @@ BENCHES = {
     "async_engine": bench_async_engine,
     "cohort_source": bench_cohort_source,
     "client_store": bench_client_store,
+    "compression": bench_compression,
 }
 
 

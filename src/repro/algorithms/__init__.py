@@ -1,7 +1,8 @@
 """Pluggable federated-algorithm strategy API (see ``base.py``).
 
 Importing this package registers the built-in algorithms — fedavg, fedpa
-(incl. the streaming DP), mime, fedprox, fedpa_precision, and the two
+(incl. the streaming DP), mime, fedprox, fedpa_precision, fedlora
+(compressed low-rank payloads, ``repro.compression``), and the two
 stateful ones, scaffold and fedep (per-client persistent state via the
 engine's ``ClientStateStore``). Downstream code adds algorithms by
 subclassing :class:`FedAlgorithm` and decorating with
@@ -19,6 +20,7 @@ from repro.algorithms.base import (  # noqa: F401  (import order matters:
 )
 from repro.algorithms.fedavg import FedAvg  # noqa: F401
 from repro.algorithms.fedep import FedEP  # noqa: F401
+from repro.algorithms.fedlora import FedLoRA  # noqa: F401
 from repro.algorithms.fedpa import FedPA  # noqa: F401
 from repro.algorithms.fedpa_precision import FedPAPrecision  # noqa: F401
 from repro.algorithms.fedprox import FedProx  # noqa: F401

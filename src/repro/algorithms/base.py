@@ -190,6 +190,10 @@ class FedAlgorithm:
     #: momentum, FedProx's proximal pull) would keep moving the params
     #: during idle steps, so they refuse the knob.
     supports_step_budgets: bool = False
+    #: Whether the algorithm honours ``fed.payload_codec`` (fedlora). For
+    #: every other algorithm a non-"none" codec would be silently ignored,
+    #: so :meth:`validate` rejects it.
+    supports_codec: bool = False
 
     def __init__(self, fed):
         """Bind the algorithm to a ``FedConfig`` (stored as ``self.fed``)."""
@@ -215,6 +219,12 @@ class FedAlgorithm:
                 f"not supported by algorithm {self.fed.algorithm!r}: its "
                 f"local steps are not purely gradient-driven, so masking "
                 f"gradients would not freeze idle steps")
+        if self.fed.payload_codec != "none" and not self.supports_codec:
+            raise ValueError(
+                f"payload_codec={self.fed.payload_codec!r} requires an "
+                f"algorithm with compressed payloads (algorithm='fedlora'); "
+                f"{self.fed.algorithm!r} ships dense payloads and would "
+                f"silently ignore the codec")
 
     @property
     def num_samples(self) -> int:
@@ -321,12 +331,45 @@ class FedAlgorithm:
         """
         return self.finalize(self.reduce_stacked(stacked_payloads, weights))
 
+    def finish_cohort(self, state, agg):
+        """Cohort-stage epilogue on the summed accumulator (traced, once per
+        round, inside the cohort program).
+
+        Runs after the placement fold but before the accumulator leaves the
+        cohort program — the hook where fedlora decodes the low-rank
+        accumulator back to parameter space using the *dispatch-time*
+        ``state.round`` (the async engine may apply the result against a
+        newer server state, whose round index would rebuild the wrong
+        sketch). Default: identity.
+        """
+        del state
+        return agg
+
     def map_components(self, fn: Callable, obj):
         """Apply ``fn`` to each parameter-shaped component of a payload or
         accumulator (used by the FSDP sharding hooks). Default: the object
         is itself one parameter-shaped tree.
         """
         return fn(obj)
+
+    # -- communicated-bytes accounting --------------------------------------
+    def abstract_payload(self, params):
+        """Shape/dtype spec of one client's uplink payload.
+
+        ``params`` may be concrete arrays or ShapeDtypeStructs; the result
+        is always abstract (``jax.eval_shape`` — no allocation, exact for
+        27B-class configs). ``compression.accounting.round_bytes`` turns
+        this into the per-round ``bytes_up`` stamped on history records.
+        """
+        return jax.eval_shape(lambda p: tm.tcast(p, self.delta_dtype), params)
+
+    def abstract_broadcast_extras(self, params):
+        """Shape/dtype specs of per-round downlink extras beyond the params
+        (:meth:`broadcast`). Default: none. Scalar bookkeeping that rides
+        along (round indices) is counted too — the accounting is exact.
+        """
+        del params
+        return ()
 
     # -- server ------------------------------------------------------------
     def server_update(self, state, agg, server_opt: Optimizer,

@@ -30,6 +30,7 @@ from __future__ import annotations
 
 from typing import Callable
 
+import jax
 import jax.numpy as jnp
 
 from repro.algorithms.base import ClientResult, register_algorithm
@@ -98,3 +99,8 @@ class FedEP(FedPAPrecision):
         """Sites are already natural parameters: the identity, not the
         ``{delta, prec} -> {num, den}`` map of ``fedpa_precision``."""
         return payload
+
+    def abstract_payload(self, params):
+        """Uplink = the damped site ``{num, den}``: 2x dense, wire dtype."""
+        d = jax.eval_shape(lambda p: tm.tcast(p, self.delta_dtype), params)
+        return {"num": d, "den": d}

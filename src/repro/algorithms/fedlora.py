@@ -1,0 +1,203 @@
+"""Federated LoRA: precision-weighted FedPA over compressed payloads.
+
+The paper's communicated statistic is O(d) per client, but for 27B-class
+configs even O(d) is the bottleneck. ``fedlora`` runs the same IASG +
+diagonal-precision client update as ``fedpa_precision`` and then ships it
+through the ``fed.payload_codec`` chain (``repro.compression``): 2-D
+deltas projected onto rank-``lora_rank`` factors against a deterministic
+per-(round, leaf) sketch both sides regenerate (the basis never travels),
+optionally quantized to int8/int16. The scalable-EP argument (PAPERS.md,
+arXiv:2302.04228): approximate each client's posterior statistic in a
+compressed subspace and aggregate there.
+
+Aggregation happens IN the encoded space — the round accumulator is the
+codec's linear image, so the sequential/chunked placements fold rank-r
+factors instead of dense deltas — and the server decodes exactly once per
+round inside the jitted cohort program (:meth:`finish_cohort`), using the
+dispatch-time round index so the async engine rebuilds the same sketch
+the cohort encoded against. The staleness discount is applied by the
+server stage *after* that decode, on the dense pseudo-gradient.
+
+What compression loses per round, error feedback restores across rounds:
+each client persists ``corrected - decode(encode(corrected))`` as a
+residual in the client-state store and re-injects it at its next
+participation, so the error is delayed, not lost — and because the
+sketch rotates every round, the re-expressed residual eventually escapes
+any fixed rank-r subspace. ``fed.error_feedback=False`` disables the
+state (and measurably hurts, see ``tests/test_compression.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.algorithms.base import (ClientResult, FedAlgorithm,
+                                   get_algorithm_class, register_algorithm)
+from repro.algorithms.fedpa_precision import _EPS, FedPAPrecision
+from repro.compression import build_codec
+from repro.core import tree_math as tm
+from repro.optim import Optimizer
+
+
+@register_algorithm("fedlora")
+class FedLoRA(FedPAPrecision):
+    """Low-rank (+ quantized) precision-weighted FedPA with error feedback."""
+
+    supports_codec = True
+
+    def __init__(self, fed):
+        """Bind the config and build the codec chain once.
+
+        ``stateful`` is per-instance: the error-feedback residual is
+        per-client persistent state, so the engines only thread the client
+        store when ``fed.error_feedback`` is on.
+        """
+        super().__init__(fed)
+        self.codec = build_codec(fed)
+        self.stateful = bool(fed.error_feedback)
+
+    def burn_algorithm(self) -> FedAlgorithm:
+        """FedAvg burn-in with DENSE payloads: the codec knobs are reset
+        (fedavg rejects a non-"none" codec) and burn rounds never touch
+        the residual state."""
+        return get_algorithm_class("fedavg")(dataclasses.replace(
+            self.fed, algorithm="fedavg", streaming_dp=False,
+            payload_codec="none", error_feedback=False))
+
+    # -- persistent state ----------------------------------------------------
+    def init_client_state(self, params):
+        """Error-feedback residual (zeros), fp32 like every persistent
+        accumulator: it collects sub-ulp compression errors across
+        participations."""
+        return tm.tzeros_like(params, jnp.float32)
+
+    # -- round template hooks ------------------------------------------------
+    def broadcast(self, state, server_opt: Optimizer) -> tuple:
+        """Ship the round index: clients must build this round's sketch."""
+        del server_opt
+        return (state.round,)
+
+    def make_client_update(self, grad_fn: Callable,
+                           client_opt: Optimizer) -> Callable:
+        """IASG + precision, encoded through the codec chain.
+
+        ``update(params, batches, [residual,] round_idx) -> ClientResult``
+        with payload ``{"delta": encode(delta + residual),
+        "prec": suffix(project(prec))}``; the new residual is what the
+        round trip lost, persisted for the next participation.
+        """
+        run = self._iasg_delta(grad_fn, client_opt)   # shared FedPA core
+        diag_precision = self._diag_precision()
+        codec = self.codec
+        delta_dtype = self.delta_dtype
+
+        def encode_pair(params, delta, prec, round_idx, residual):
+            corrected = tm.tmap(
+                lambda d, r: d.astype(jnp.float32) + r, delta, residual)
+            wire = codec.encode(tm.tcast(corrected, delta_dtype), round_idx)
+            prec_wire = codec.encode_aux(
+                codec.project_precision(prec, round_idx), round_idx)
+            payload = {"delta": wire, "prec": prec_wire}
+            decoded = codec.decode(wire, round_idx, params)
+            new_residual = tm.tmap(
+                lambda c, d: c - d.astype(jnp.float32), corrected, decoded)
+            return payload, new_residual
+
+        if self.stateful:
+            def update(params, batches, residual, round_idx):
+                delta, res, metrics = run(params, batches)
+                prec = diag_precision(res.samples)
+                payload, new_residual = encode_pair(
+                    params, delta, prec, round_idx, residual)
+                return ClientResult(payload, metrics,
+                                    state_update=new_residual)
+
+            return update
+
+        def update(params, batches, round_idx):
+            delta, res, metrics = run(params, batches)
+            prec = diag_precision(res.samples)
+            payload, _ = encode_pair(params, delta, prec, round_idx,
+                                     tm.tzeros_like(params, jnp.float32))
+            return ClientResult(payload, metrics)
+
+        return update
+
+    # -- aggregation: encoded space ------------------------------------------
+    def init_accum(self, params):
+        """fp32 ``{num, den}`` zeros in the codec's accumulator space (the
+        linear-prefix image: rank-r factors, not dense deltas)."""
+        return {"num": self.codec.accum_zeros(params),
+                "den": self.codec.accum_zeros(params)}
+
+    def payload_accum(self, payload):
+        """Dequantize (undo the nonlinear suffix), then natural-parameter
+        form ``{num: P_enc * delta_enc, den: P_enc}`` — linear, so the
+        sequential/chunked folds stay exact in the encoded space."""
+        d = self.codec.to_accum(payload["delta"])
+        p = self.codec.to_accum(payload["prec"])
+        return {"num": tm.tmap(jnp.multiply, p, d), "den": p}
+
+    def finish_cohort(self, state, agg):
+        """Precision-weighted mean in the encoded space, then ONE decode
+        back to parameter space — with the dispatch-time ``state.round``,
+        which is the index the cohort encoded against (the async engine
+        may apply this aggregate to a newer state)."""
+        mean = tm.tmap(
+            lambda n, d: n.astype(jnp.float32)
+            / (d.astype(jnp.float32) + _EPS),
+            agg["num"], agg["den"])
+        dense = self.codec.decode_accum(mean, state.round, state.params)
+        return {"delta": dense}
+
+    def finalize(self, agg):
+        """Cast the decoded mean once; pre-``finish_cohort`` accumulators
+        (the fp32-contract tests probe them raw) fall back to the encoded
+        precision-weighted mean."""
+        if isinstance(agg, dict) and "delta" in agg:
+            return tm.tcast(agg["delta"], self.delta_dtype)
+        return super().finalize(agg)
+
+    def map_components(self, fn: Callable, obj):
+        """Skip the FSDP per-component sharding constraint for non-identity
+        codecs: encoded leaves (rank-r factors, int8 ``{q, scale}`` pairs)
+        are not parameter-shaped, and at rank r they are small enough to
+        stay replicated."""
+        if self.codec.is_identity:
+            return super().map_components(fn, obj)
+        return obj
+
+    # -- server ---------------------------------------------------------------
+    def server_update(self, state, agg, server_opt: Optimizer,
+                      discount=None):
+        """Scalar staleness discount on the DENSE decoded pseudo-gradient.
+
+        ``finish_cohort`` already collapsed the ``{num, den}`` pair, so the
+        per-parameter precision discount of ``fedpa_precision`` has no
+        ``den`` to read — the base scalar rule applies, post-decode.
+        """
+        return FedAlgorithm.server_update(self, state, agg, server_opt,
+                                          discount)
+
+    # -- communicated-bytes accounting ---------------------------------------
+    def abstract_payload(self, params):
+        """Exact wire spec: encoded delta + suffix-quantized projected
+        precision (scales included), via ``eval_shape`` — no allocation."""
+
+        def spec(p):
+            wire = tm.tcast(p, self.delta_dtype)
+            return {
+                "delta": self.codec.encode(wire, 0),
+                "prec": self.codec.encode_aux(
+                    self.codec.project_precision(wire, 0), 0),
+            }
+
+        return jax.eval_shape(spec, params)
+
+    def abstract_broadcast_extras(self, params):
+        """Downlink extra: the i32 round index (sketch synchronization)."""
+        del params
+        return (jax.ShapeDtypeStruct((), jnp.int32),)

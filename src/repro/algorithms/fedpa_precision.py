@@ -111,6 +111,11 @@ class FedPAPrecision(FedPA):
         """Payloads/accumulators are dicts of parameter-shaped trees."""
         return {k: fn(v) for k, v in obj.items()}
 
+    def abstract_payload(self, params):
+        """Uplink = delta + diagonal precision: 2x dense, both wire dtype."""
+        d = jax.eval_shape(lambda p: tm.tcast(p, self.delta_dtype), params)
+        return {"delta": d, "prec": d}
+
     # -- server: per-parameter staleness discount ----------------------------
     def server_update(self, state, agg, server_opt: Optimizer,
                       discount=None):

@@ -27,6 +27,10 @@ class Mime(FedAlgorithm):
         """Frozen server momentum shipped to MIME clients (Section 6)."""
         return (server_opt.momentum(state.opt_state, state.params),)
 
+    def abstract_broadcast_extras(self, params):
+        """Downlink extra: the params-shaped frozen server momentum."""
+        return (jax.eval_shape(tm.tzeros_like, params),)
+
     def make_client_update(self, grad_fn: Callable,
                            client_opt: Optimizer) -> Callable:
         """``update(params, batches, server_m) -> ClientResult``.

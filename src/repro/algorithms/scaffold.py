@@ -29,6 +29,7 @@ from __future__ import annotations
 
 from typing import Callable
 
+import jax
 import jax.numpy as jnp
 
 from repro.algorithms.base import (ClientResult, FedAlgorithm,
@@ -133,6 +134,20 @@ class Scaffold(FedAlgorithm):
     def map_components(self, fn: Callable, obj):
         """Payloads/accumulators are dicts of parameter-shaped trees."""
         return {k: fn(v) for k, v in obj.items()}
+
+    def abstract_payload(self, params):
+        """Uplink = wire-dtype delta + fp32 control-variate update."""
+        return {
+            "delta": jax.eval_shape(
+                lambda p: tm.tcast(p, self.delta_dtype), params),
+            "dc": jax.eval_shape(
+                lambda p: tm.tzeros_like(p, jnp.float32), params),
+        }
+
+    def abstract_broadcast_extras(self, params):
+        """Downlink extra: the fp32 server control variate c."""
+        return (jax.eval_shape(
+            lambda p: tm.tzeros_like(p, jnp.float32), params),)
 
     # -- server --------------------------------------------------------------
     def server_update(self, state, agg, server_opt: Optimizer,

@@ -1,0 +1,23 @@
+"""Payload compression: codec registry, low-rank sketches, quantization,
+and exact communicated-bytes accounting."""
+from repro.compression import lowrank, quant  # noqa: F401 — register codecs
+from repro.compression.accounting import round_bytes, tree_nbytes
+from repro.compression.base import (
+    CodecChain,
+    PayloadCodec,
+    build_codec,
+    codec_names,
+    parse_codec,
+    register_codec,
+)
+
+__all__ = [
+    "CodecChain",
+    "PayloadCodec",
+    "build_codec",
+    "codec_names",
+    "parse_codec",
+    "register_codec",
+    "round_bytes",
+    "tree_nbytes",
+]

@@ -1,0 +1,211 @@
+"""Pluggable payload codecs: compress client payloads before aggregation.
+
+A :class:`PayloadCodec` maps a parameter-shaped pytree (a client delta, or
+an auxiliary statistic like a diagonal precision) to a compact wire form
+and back. Codecs compose left-to-right via ``"+"`` specs — e.g.
+``"lowrank+int8"`` projects 2-D deltas onto rank-r factors and then
+quantizes the factors — subject to one structural rule: every **linear**
+stage must precede every nonlinear one. The linear prefix defines the
+*accumulator space* (the server can sum encoded payloads directly, which
+keeps sequential/chunked folding cheap), while the nonlinear suffix
+(quantization) is undone per-client before accumulation.
+
+The registry mirrors ``algorithms``: codecs self-register by name, and
+``FedConfig.payload_codec`` selects a chain eagerly at config time.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple, Type
+
+from jax import numpy as jnp
+
+from repro.core import tree_math as tm
+
+
+class PayloadCodec:
+    """One compression stage; stateless, parameterized by the FedConfig.
+
+    Subclasses set ``name`` (registry key) and ``linear``. Linear stages
+    must satisfy ``encode(a*x + b*y) == a*encode(x) + b*encode(y)`` so the
+    round accumulator can live in their image; nonlinear stages (e.g.
+    quantization) are undone per-client before accumulation.
+    """
+
+    name: str = "?"
+    #: True when encode is linear in the input tree (accumulation-safe)
+    linear: bool = False
+
+    def __init__(self, fed):
+        self.fed = fed
+
+    # -- wire form ----------------------------------------------------------
+    def encode(self, tree, round_idx):
+        """Parameter-shaped (or upstream-encoded) tree -> wire form."""
+        raise NotImplementedError
+
+    def decode(self, tree, round_idx, like):
+        """Inverse of :meth:`encode`.
+
+        ``like`` is a tree with the *pre-encode* leaf shapes (needed to
+        rebuild projection bases); nonlinear codecs may ignore it.
+        """
+        raise NotImplementedError
+
+    # -- accumulator space (linear stages only) -----------------------------
+    def accum_like(self, tree):
+        """Map a pre-encode-shaped zeros tree to encoded-shaped fp32 zeros.
+
+        Only meaningful for ``linear`` stages: the result seeds the round
+        accumulator without running :meth:`encode` (no sketch/QR work).
+        """
+        raise NotImplementedError
+
+    def project_precision(self, prec, round_idx):
+        """Push a diagonal precision through the stage's projection.
+
+        Identity for stages that do not change leaf shapes. Only linear
+        stages are ever asked (precisions ride the accumulator space).
+        """
+        return prec
+
+
+_REGISTRY: Dict[str, Type[PayloadCodec]] = {}
+
+
+def register_codec(name: str):
+    """Class decorator: register a codec under ``name`` (sets ``cls.name``)."""
+
+    def wrap(cls: Type[PayloadCodec]) -> Type[PayloadCodec]:
+        if name in _REGISTRY:
+            raise ValueError(f"codec {name!r} already registered")
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return wrap
+
+
+def codec_names() -> Tuple[str, ...]:
+    """Sorted names of every registered codec stage."""
+    return tuple(sorted(_REGISTRY))
+
+
+def parse_codec(spec: str) -> Tuple[str, ...]:
+    """Split + validate a ``"+"``-composed codec spec, eagerly.
+
+    Raises ``ValueError`` (naming the registry) on unknown stages, on
+    ``"none"`` composed with anything, on duplicates, and on a linear
+    stage appearing after a nonlinear one — the accumulator must be the
+    image of the linear *prefix*.
+    """
+    if not isinstance(spec, str) or not spec:
+        raise ValueError(f"payload_codec must be a non-empty str, got {spec!r}")
+    stages = tuple(s.strip() for s in spec.split("+"))
+    for s in stages:
+        if s not in _REGISTRY:
+            raise ValueError(
+                f"unknown payload codec {s!r} in spec {spec!r}; "
+                f"registered codecs: {codec_names()}")
+    if "none" in stages and len(stages) > 1:
+        raise ValueError(f"codec 'none' cannot be composed: {spec!r}")
+    if len(set(stages)) != len(stages):
+        raise ValueError(f"duplicate codec stage in spec {spec!r}")
+    seen_nonlinear = False
+    for s in stages:
+        if _REGISTRY[s].linear and seen_nonlinear:
+            raise ValueError(
+                f"linear codec {s!r} after a nonlinear stage in {spec!r}: "
+                "linear stages must form a prefix (they define the "
+                "accumulator space)")
+        seen_nonlinear = seen_nonlinear or not _REGISTRY[s].linear
+    return stages
+
+
+class CodecChain:
+    """An ordered codec pipeline split into linear prefix + nonlinear suffix.
+
+    ``encode``/``decode`` run the full pipeline (the client wire format);
+    ``to_accum`` undoes only the nonlinear suffix (per-client, pre-sum);
+    ``decode_accum`` undoes only the linear prefix (server-side, once per
+    round, on the summed accumulator).
+    """
+
+    def __init__(self, fed):
+        names = parse_codec(fed.payload_codec)
+        self.stages = tuple(_REGISTRY[n](fed) for n in names)
+        self.prefix = tuple(s for s in self.stages if s.linear)
+        self.suffix = tuple(s for s in self.stages if not s.linear)
+
+    @property
+    def is_identity(self) -> bool:
+        """True when the chain is a no-op (the ``none`` codec)."""
+        return all(s.name == "none" for s in self.stages)
+
+    def encode(self, tree, round_idx):
+        """Full pipeline: parameter-shaped tree -> wire form."""
+        for s in self.stages:
+            tree = s.encode(tree, round_idx)
+        return tree
+
+    def decode(self, tree, round_idx, like):
+        """Full inverse pipeline; ``like`` carries pre-encode leaf shapes."""
+        for s in reversed(self.stages):
+            tree = s.decode(tree, round_idx, like)
+        return tree
+
+    def to_accum(self, tree):
+        """Undo the nonlinear suffix only: wire form -> accumulator space."""
+        for s in reversed(self.suffix):
+            tree = s.decode(tree, None, None)
+        return tree
+
+    def encode_aux(self, tree, round_idx):
+        """Apply the nonlinear suffix only (for already-projected stats)."""
+        for s in self.suffix:
+            tree = s.encode(tree, round_idx)
+        return tree
+
+    def decode_accum(self, tree, round_idx, like):
+        """Undo the linear prefix: accumulator space -> parameter space."""
+        for s in reversed(self.prefix):
+            tree = s.decode(tree, round_idx, like)
+        return tree
+
+    def project_precision(self, prec, round_idx):
+        """Parameter-shaped diagonal precision -> accumulator space."""
+        for s in self.prefix:
+            prec = s.project_precision(prec, round_idx)
+        return prec
+
+    def accum_zeros(self, params):
+        """Fresh fp32 zeros of the accumulator (linear-prefix image) space."""
+        z = tm.tzeros_like(params, jnp.float32)
+        for s in self.prefix:
+            z = s.accum_like(z)
+        return z
+
+
+def build_codec(fed) -> CodecChain:
+    """The :class:`CodecChain` selected by ``fed.payload_codec``."""
+    return CodecChain(fed)
+
+
+@register_codec("none")
+class IdentityCodec(PayloadCodec):
+    """The identity chain: dense payloads, zero compression."""
+
+    linear = True
+
+    def encode(self, tree, round_idx):
+        """Identity."""
+        del round_idx
+        return tree
+
+    def decode(self, tree, round_idx, like):
+        """Identity."""
+        del round_idx, like
+        return tree
+
+    def accum_like(self, tree):
+        """Identity (the tree is already fp32 zeros)."""
+        return tree

@@ -1,0 +1,114 @@
+"""Low-rank sketch codec: project 2-D+ deltas onto rank-r factors.
+
+Each eligible leaf (``ndim >= 2`` and trailing dim ``> lora_rank``) is
+right-multiplied by an orthonormal basis ``V`` of shape
+``(last_dim, rank)`` — the federated-LoRA wire format: clients ship the
+rank-r factor ``x @ V`` instead of the dense delta. The basis is a
+deterministic function of ``(seed, round, leaf_index)`` regenerated on
+both sides, so it never travels: downlink stays parameter-sized and
+uplink shrinks by ``last_dim / rank`` per eligible leaf. Rotating the
+sketch every round means the error-feedback residual (see
+``algorithms/fedlora.py``) is re-expressed in a fresh subspace each
+participation, which is what lets the composed update span the full
+space over time.
+
+The projection is linear, so the round accumulator lives in the sketch
+image (``accum_like``) and diagonal precisions push through it via the
+variance rule ``var_enc = var @ (V * V)`` (``project_precision``).
+"""
+from __future__ import annotations
+
+import jax
+from jax import numpy as jnp
+
+from repro.compression.base import PayloadCodec, register_codec
+
+#: fixed root seed for basis generation — shared by clients and server;
+#: per-round variation comes from folding in the round index
+_BASIS_SEED = 0x10A4
+
+_EPS = 1e-12
+
+
+@register_codec("lowrank")
+class LowRankCodec(PayloadCodec):
+    """Deterministic per-(round, leaf) Gaussian sketch, orthonormalized."""
+
+    linear = True
+
+    def __init__(self, fed):
+        super().__init__(fed)
+        self.rank = int(fed.lora_rank)
+
+    def _eligible(self, shape) -> bool:
+        return len(shape) >= 2 and shape[-1] > self.rank
+
+    def _basis(self, last_dim: int, round_idx, leaf_idx: int):
+        """Orthonormal ``(last_dim, rank)`` basis for one leaf, one round."""
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(_BASIS_SEED), round_idx),
+            leaf_idx)
+        g = jax.random.normal(key, (last_dim, self.rank), jnp.float32)
+        q, _ = jnp.linalg.qr(g)
+        return q
+
+    def _map_leaves(self, tree, like, fn):
+        """Apply ``fn(leaf_idx, leaf, ref)`` per leaf; ``ref`` carries the
+        pre-encode shape (``like`` defaults to the tree itself)."""
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        refs = (jax.tree_util.tree_leaves(like) if like is not None
+                else leaves)
+        out = [fn(i, x, ref) for i, (x, ref) in enumerate(zip(leaves, refs))]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def encode(self, tree, round_idx):
+        """Right-project eligible leaves: ``x -> x @ V`` (fp32 matmul)."""
+
+        def leaf(i, x, ref):
+            if not self._eligible(ref.shape):
+                return x
+            v = self._basis(ref.shape[-1], round_idx, i)
+            return (x.astype(jnp.float32) @ v).astype(x.dtype)
+
+        return self._map_leaves(tree, None, leaf)
+
+    def decode(self, tree, round_idx, like):
+        """Lift back: ``y -> y @ V.T`` using ``like`` for original shapes."""
+
+        def leaf(i, y, ref):
+            if not self._eligible(ref.shape):
+                return y
+            v = self._basis(ref.shape[-1], round_idx, i)
+            return (y.astype(jnp.float32) @ v.T).astype(y.dtype)
+
+        return self._map_leaves(tree, like, leaf)
+
+    def accum_like(self, tree):
+        """Encoded-shaped fp32 zeros without any sketch/QR work."""
+
+        def leaf(i, x, ref):
+            del i
+            if not self._eligible(ref.shape):
+                return jnp.zeros(x.shape, jnp.float32)
+            return jnp.zeros(x.shape[:-1] + (self.rank,), jnp.float32)
+
+        return self._map_leaves(tree, None, leaf)
+
+    def project_precision(self, prec, round_idx):
+        """Diagonal precision -> sketch space via the variance rule.
+
+        A diagonal Gaussian with variance ``1/p`` projected by ``V`` has
+        coordinate variances ``(1/p) @ (V * V)`` (exact for orthonormal
+        ``V`` up to the dropped off-diagonal terms), so the encoded
+        precision is its reciprocal.
+        """
+
+        def leaf(i, p, ref):
+            if not self._eligible(ref.shape):
+                return p
+            v = self._basis(ref.shape[-1], round_idx, i)
+            var = 1.0 / jnp.maximum(p.astype(jnp.float32), _EPS)
+            var_enc = var @ (v * v)
+            return (1.0 / jnp.maximum(var_enc, _EPS)).astype(p.dtype)
+
+        return self._map_leaves(prec, None, leaf)

@@ -1,0 +1,58 @@
+"""Symmetric per-leaf integer quantization of payload leaves.
+
+Each array leaf becomes ``{"q": intN, "scale": f32 scalar}`` with
+``scale = max(|x|) / qmax`` — 4x fewer wire bytes than fp32 at 8 bits
+(2x at 16). Quantization is *nonlinear* (the scale depends on the leaf),
+so it always sits at the end of a codec chain and is undone per-client
+(``CodecChain.to_accum``) before payloads are summed; the round
+accumulator never sees integer leaves. ``FedConfig.quant_bits`` selects
+8 or 16 bits.
+"""
+from __future__ import annotations
+
+import jax
+from jax import numpy as jnp
+
+from repro.compression.base import PayloadCodec, register_codec
+
+#: guards the scale against an all-zero leaf (decode then yields zeros)
+_SCALE_EPS = 1e-12
+
+
+def _is_qleaf(x) -> bool:
+    return isinstance(x, dict) and set(x) == {"q", "scale"}
+
+
+@register_codec("int8")
+class QuantCodec(PayloadCodec):
+    """Symmetric round-to-nearest quantizer; bit width from ``quant_bits``."""
+
+    linear = False
+
+    def __init__(self, fed):
+        super().__init__(fed)
+        bits = int(fed.quant_bits)
+        if bits not in (8, 16):
+            raise ValueError(f"quant_bits must be 8 or 16, got {bits}")
+        self.qmax = float(2 ** (bits - 1) - 1)
+        self.qdtype = jnp.int8 if bits == 8 else jnp.int16
+
+    def encode(self, tree, round_idx):
+        """Each array leaf -> ``{"q": intN, "scale": f32 scalar}``."""
+        del round_idx
+
+        def leaf(x):
+            x32 = x.astype(jnp.float32)
+            scale = jnp.maximum(jnp.max(jnp.abs(x32)), _SCALE_EPS) / self.qmax
+            q = jnp.clip(jnp.round(x32 / scale), -self.qmax,
+                         self.qmax).astype(self.qdtype)
+            return {"q": q, "scale": scale.astype(jnp.float32)}
+
+        return jax.tree_util.tree_map(leaf, tree)
+
+    def decode(self, tree, round_idx, like):
+        """Dequantize every ``{"q", "scale"}`` leaf back to fp32."""
+        del round_idx, like
+        return jax.tree_util.tree_map(
+            lambda d: d["q"].astype(jnp.float32) * d["scale"],
+            tree, is_leaf=_is_qleaf)

@@ -217,6 +217,19 @@ class FedConfig:
     # burn-in *rounds* (run FedPA in FedAvg regime for first R rounds)
     burn_in_rounds: int = 0
     delta_dtype: str = "float32"
+    # --- payload compression (repro.compression) ---
+    # "+"-composed codec chain applied to client payloads before they are
+    # aggregated: "none" | "lowrank" | "int8" | "lowrank+int8". Only
+    # algorithms with supports_codec=True (fedlora) accept a non-"none"
+    # codec.
+    payload_codec: str = "none"
+    # Rank of the per-(round, leaf) low-rank sketch ("lowrank" codec).
+    lora_rank: int = 4
+    # Bit width of the "int8" codec's symmetric quantizer: 8 or 16.
+    quant_bits: int = 8
+    # Persist each client's compression error as a residual in the client
+    # store and re-inject it at its next participation (error feedback).
+    error_feedback: bool = True
     # FedPA: absorb samples into the online/any-time DP as they are produced
     # (Appendix C) instead of stacking them first — saves the l x d sample
     # buffer on the clients.
@@ -321,11 +334,40 @@ class FedConfig:
                 f"unknown prefetch_backend {self.prefetch_backend!r}; "
                 f"known: ('process', 'thread')")
         self._validate_faults()
+        self._validate_payload()
         # algorithm-specific checks (and the unknown-algorithm error) live on
         # the registered FedAlgorithm; late import avoids a configs<->core
         # cycle, as does ModelConfig.param_count above
         from repro.algorithms import get_algorithm  # noqa: PLC0415
         get_algorithm(self).validate()
+
+    def _validate_payload(self):
+        """Eagerly validate ``delta_dtype`` and the compression knobs by
+        name — an unknown dtype/codec string used to surface only as an
+        opaque trace-time error deep inside the jitted round."""
+        # jnp.dtype, not np.dtype: it resolves the extended float names
+        # ("bfloat16") numpy alone rejects; late import keeps config import
+        # light
+        from jax import numpy as jnp  # noqa: PLC0415
+        try:
+            dt = jnp.dtype(self.delta_dtype)
+        except (TypeError, ValueError) as e:
+            raise ValueError(
+                f"unknown delta_dtype {self.delta_dtype!r}: not a dtype "
+                f"name jnp.dtype understands") from e
+        if not jnp.issubdtype(dt, jnp.floating):
+            raise ValueError(
+                f"delta_dtype must be a floating dtype (it carries deltas "
+                f"and posterior statistics), got {self.delta_dtype!r}")
+        # the codec registry is the source of truth for valid chains; late
+        # import avoids a configs<->compression cycle
+        from repro.compression import parse_codec  # noqa: PLC0415
+        parse_codec(self.payload_codec)
+        if self.lora_rank < 1:
+            raise ValueError(f"lora_rank must be >= 1, got {self.lora_rank}")
+        if self.quant_bits not in (8, 16):
+            raise ValueError(
+                f"quant_bits must be 8 or 16, got {self.quant_bits}")
 
     def _validate_faults(self):
         """Range-check the fault-injection knobs (availability, dropout,

@@ -126,6 +126,11 @@ class AsyncRoundEngine:
     #: Record per-round ``dropped`` / ``straggled`` counts in history
     #: (``FedSim`` sets it from ``fed.fault_injection``).
     record_faults: bool = False
+    #: Per-round communicated bytes (``compression.round_bytes`` dicts with
+    #: ``bytes_up`` / ``bytes_down``), stamped on every history record;
+    #: ``burn_round_bytes`` covers the burn regime's (dense) payloads.
+    round_bytes: Optional[dict] = None
+    burn_round_bytes: Optional[dict] = None
 
     def __post_init__(self):
         """Validate knobs, normalize the burn-regime flags, jit the stages."""
@@ -225,6 +230,9 @@ class AsyncRoundEngine:
             for k in ("dropped", "straggled"):
                 if k in rec:
                     entry[k] = rec[k]
+            for k in ("bytes_up", "bytes_down"):
+                if k in rec:
+                    entry[k] = json_scalar(rec[k])
             if "state_drops" in rec:
                 entry["state_drops"] = json_scalar(rec["state_drops"])
             entry.update({k: json_scalar(v)
@@ -291,6 +299,11 @@ class AsyncRoundEngine:
 
                 rec = {"round": t_apply, "staleness": staleness,
                        "metrics": fl.metrics}
+                bts = (self.burn_round_bytes if fl.is_burn
+                       else self.round_bytes) or self.round_bytes
+                if bts is not None:
+                    rec["bytes_up"] = bts["bytes_up"]
+                    rec["bytes_down"] = bts["bytes_down"]
                 if self.record_faults:
                     rec["dropped"] = int(fl.dropped)
                     rec["straggled"] = int(fl.extra_staleness)

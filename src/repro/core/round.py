@@ -136,6 +136,10 @@ class FedSim:
         self._burn_stateful = (self._alg.burn_algorithm().stateful
                                if self._has_burn_regime else self._stateful)
         self._engine: Optional[AsyncRoundEngine] = None
+        # per-round communicated bytes, computed once a params template is
+        # seen (init); stamped on every history record by both engines
+        self._round_bytes: Optional[dict] = None
+        self._burn_round_bytes: Optional[dict] = None
 
     def init(self, params) -> ServerState:
         """Fresh server state (and, for stateful algorithms, a freshly
@@ -143,6 +147,11 @@ class FedSim:
         if self.client_store is not None:
             self.client_store.ensure(
                 self._alg.init_client_state(params)).reset()
+        from repro.compression import round_bytes  # noqa: PLC0415 — cycle
+        self._round_bytes = round_bytes(self.fed, params, use_sampling=True)
+        self._burn_round_bytes = (
+            round_bytes(self.fed, params, use_sampling=False)
+            if self._has_burn_regime else self._round_bytes)
         return init_server_state(params, self.server_opt,
                                  algorithm=self._alg)
 
@@ -198,6 +207,11 @@ class FedSim:
         loss_last = float(metrics["loss_last"])
         record = {"client_loss": loss_last, "loss_first": loss_first,
                   "loss_last": loss_last}
+        bts = (self._burn_round_bytes if is_burn and self._has_burn_regime
+               else self._round_bytes)
+        if bts is not None:
+            record["bytes_up"] = json_scalar(bts["bytes_up"])
+            record["bytes_down"] = json_scalar(bts["bytes_down"])
         if survivors is not None:
             record["dropped"] = int(cohort.dropped)
         return state, record
@@ -284,4 +298,6 @@ class FedSim:
             stateful=self._stateful,
             burn_stateful=self._burn_stateful,
             record_faults=self.fed.fault_injection,
+            round_bytes=self._round_bytes,
+            burn_round_bytes=self._burn_round_bytes,
         )

@@ -226,6 +226,12 @@ def _run_cohort(ctx: _CohortCtx, state: ServerState, client_batches,
             ctx, params, client_batches, weights, extras, client_states,
             chunk)
 
+    # cohort-stage epilogue on the summed accumulator, still traced inside
+    # the cohort program: fedlora decodes its low-rank accumulator here with
+    # the dispatch-time state.round (the async engine may apply the result
+    # against a newer server state)
+    agg = ctx.alg.finish_cohort(state, agg)
+
     if survivor_mask is None:
         losses = {
             "loss_first": jnp.mean(metrics["loss_first"]),

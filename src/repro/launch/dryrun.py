@@ -60,12 +60,21 @@ def should_skip(cfg, shape) -> str:
 
 def _apply_knobs(cfg, fed, rec, *, delta_dtype, client_state_placement,
                  dropout_rate, moe_chunk, moe_routing, cache_shard,
-                 tp_boundary, remat):
+                 tp_boundary, remat, payload_codec="none", lora_rank=4,
+                 quant_bits=8):
     """Fold the perf/fault knob overrides into (cfg, fed), recording every
     non-default on the result record."""
     if delta_dtype != "float32":
         fed = dataclasses.replace(fed, delta_dtype=delta_dtype)
         rec["delta_dtype"] = delta_dtype
+    if payload_codec != "none":
+        # compressed-payload round (requires a supports_codec algorithm,
+        # i.e. --algorithm fedlora; FedConfig validation enforces it)
+        fed = dataclasses.replace(fed, payload_codec=payload_codec,
+                                  lora_rank=lora_rank, quant_bits=quant_bits)
+        rec["payload_codec"] = payload_codec
+        rec["lora_rank"] = lora_rank
+        rec["quant_bits"] = quant_bits
     if client_state_placement != "host":
         fed = dataclasses.replace(
             fed, client_state_placement=client_state_placement)
@@ -175,7 +184,9 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
               delta_dtype: str = "float32",
               client_state_placement: str = "host",
               num_clients: int = 64,
-              dropout_rate: float = 0.0) -> dict:
+              dropout_rate: float = 0.0,
+              payload_codec: str = "none", lora_rank: int = 4,
+              quant_bits: int = 8) -> dict:
     """Lower (and optionally compile) one (arch, shape, mesh) combination;
     returns the record dict (roofline terms, memory, collectives, or the
     skip/error status). ``client_state_placement="device"`` lowers the
@@ -202,7 +213,9 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         client_state_placement=client_state_placement,
         dropout_rate=dropout_rate, moe_chunk=moe_chunk,
         moe_routing=moe_routing, cache_shard=cache_shard,
-        tp_boundary=tp_boundary, remat=remat)
+        tp_boundary=tp_boundary, remat=remat,
+        payload_codec=payload_codec, lora_rank=lora_rank,
+        quant_bits=quant_bits)
     if placement == "auto":
         placement = default_placement(cfg)
     rec["placement"] = placement if shape.kind == "train" else "-"
@@ -222,6 +235,11 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         }
     spec = input_specs(cfg, shape, fed, mesh, placement,
                        cache_shard=cache_shard, num_clients=num_clients)
+    if shape.kind == "train":
+        # exact per-round wire bytes from the abstract specs (uplink may be
+        # compressed; downlink is params + broadcast extras) — no allocation
+        from repro.compression import round_bytes  # noqa: PLC0415
+        rec["payload_bytes"] = round_bytes(fed, spec["args"][0].params)
     t0 = time.time()
     lowered, local_steps = _lower_step(cfg, fed, shape, spec, mesh,
                                        placement, q_chunk, remat)
@@ -295,6 +313,14 @@ def main():
     ap.add_argument("--delta-dtype", default="float32",
                     choices=("float32", "bfloat16"),
                     help="FedPA sample/DP-state dtype (§Perf)")
+    ap.add_argument("--payload-codec", default="none",
+                    help="client payload codec chain (repro.compression): "
+                         "none | lowrank | int8 | lowrank+int8; non-'none' "
+                         "requires --algorithm fedlora")
+    ap.add_argument("--lora-rank", type=int, default=4,
+                    help="rank of the 'lowrank' codec's sketch")
+    ap.add_argument("--quant-bits", type=int, default=8, choices=(8, 16),
+                    help="bit width of the 'int8' codec's quantizer")
     ap.add_argument("--client-state-placement", default="host",
                     choices=("host", "device"),
                     help="client-state store for stateful algorithms: "
@@ -338,6 +364,9 @@ def main():
                         client_state_placement=args.client_state_placement,
                         num_clients=args.num_clients,
                         dropout_rate=args.dropout_rate,
+                        payload_codec=args.payload_codec,
+                        lora_rank=args.lora_rank,
+                        quant_bits=args.quant_bits,
                     )
                 except Exception as e:  # noqa: BLE001 — record and continue
                     rec = {"arch": arch, "shape": shape,

@@ -31,6 +31,7 @@ from repro import configs
 from repro.algorithms import algorithm_names, get_algorithm, phase_name
 from repro.checkpoint import (restore_checkpoint, restore_store_sharded,
                               save_checkpoint, save_store_sharded)
+from repro.compression import round_bytes
 from repro.configs.base import FedConfig
 from repro.core.async_engine import AsyncRoundEngine
 from repro.core.client_state import jit_donating_store, make_client_store
@@ -58,6 +59,10 @@ def build_fed(args) -> FedConfig:
         server_opt=args.server_opt, server_lr=args.server_lr,
         client_opt=args.client_opt, client_lr=args.client_lr,
         burn_in_rounds=args.burn_in_rounds,
+        payload_codec=args.payload_codec,
+        lora_rank=args.lora_rank,
+        quant_bits=args.quant_bits,
+        error_feedback=not args.no_error_feedback,
         async_rounds=args.async_rounds,
         max_staleness=args.max_staleness,
         staleness_discount=args.staleness_discount,
@@ -101,6 +106,18 @@ def parse_args(argv=None):
     ap.add_argument("--client-lr", type=float, default=0.05)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--payload-codec", default="none",
+                    help="client payload codec chain (repro.compression): "
+                         "none | lowrank | int8 | lowrank+int8; non-'none' "
+                         "requires --algorithm fedlora")
+    ap.add_argument("--lora-rank", type=int, default=4,
+                    help="rank of the 'lowrank' codec's per-(round, leaf) "
+                         "sketch")
+    ap.add_argument("--quant-bits", type=int, default=8, choices=(8, 16),
+                    help="bit width of the 'int8' codec's quantizer")
+    ap.add_argument("--no-error-feedback", action="store_true",
+                    help="disable fedlora's per-client compression-error "
+                         "residual (the client-state store stays unused)")
     ap.add_argument("--async-rounds", action="store_true",
                     help="double-buffered rounds: overlap cohort t+1's "
                          "client compute with round t's server update "
@@ -394,6 +411,9 @@ def run_async(args, cfg, fed, alg, state, store, burn_stateful, start_round,
         burn_cohort_fn, burn_server_fn = make_fed_round_split(
             cfg, fed, placement="parallel", q_chunk=q_chunk,
             use_sampling=False)
+    rb = round_bytes(fed, state.params)
+    burn_rb = (round_bytes(fed, state.params, use_sampling=False)
+               if alg.has_burn_regime and fed.burn_in_rounds else rb)
     engine = AsyncRoundEngine(
         cohort_fn=cohort_fn,
         server_fn=server_fn,
@@ -408,6 +428,8 @@ def run_async(args, cfg, fed, alg, state, store, burn_stateful, start_round,
         stateful=alg.stateful,
         burn_stateful=burn_stateful,
         record_faults=fed.fault_injection,
+        round_bytes=rb,
+        burn_round_bytes=burn_rb,
     )
 
     def build_cohort(i):
@@ -431,7 +453,7 @@ def run_async(args, cfg, fed, alg, state, store, burn_stateful, start_round,
                "staleness": rec["staleness"],
                "phase": phase_name(fed, r),
                "sec": round(time.time() - last_t, 2)}
-        for k in ("dropped", "straggled"):
+        for k in ("dropped", "straggled", "bytes_up", "bytes_down"):
             if k in rec:
                 out[k] = rec[k]
         emit(out)
@@ -485,6 +507,9 @@ def run_sync(args, fed, alg, state, store, burn_stateful, device_store,
         # every jit input must be a global array in a multi-process run;
         # after round one the server state is a round output and stays so
         state = replicate_global(state, pop_mesh)
+    rb = round_bytes(fed, state.params)
+    burn_rb = (round_bytes(fed, state.params, use_sampling=False)
+               if alg.has_burn_regime and fed.burn_in_rounds else rb)
     prefetch = (make_prefetcher(fed.prefetch_backend, source.cohort,
                                 start_round, args.rounds,
                                 depth=fed.prefetch_rounds)
@@ -508,6 +533,9 @@ def run_sync(args, fed, alg, state, store, burn_stateful, device_store,
                    "client_loss_first": float(metrics["loss_first"]),
                    "phase": phase_name(fed, r),
                    "sec": round(time.time() - t0, 2)}
+            bts = burn_rb if is_burn else rb
+            rec["bytes_up"] = bts["bytes_up"]
+            rec["bytes_down"] = bts["bytes_down"]
             if cohort.survivors is not None:
                 rec["dropped"] = int(cohort.dropped)
             emit(rec)

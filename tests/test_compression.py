@@ -1,0 +1,446 @@
+"""Compressed payloads: codec round-trip error bounds, deterministic
+per-round sketches, error-feedback residual parity with an eager
+reference, fedlora == fedpa_precision under the identity codec, the
+heterogeneous-LSQ acceptance gate (<= 5% loss gap at >= 8x fewer bytes,
+error feedback measurably helping), per-round byte accounting in both
+engines' history, eager FedConfig validation of the payload knobs, and
+the gemma3-27b fedlora dry-run lowering (slow lane)."""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.algorithms import get_algorithm
+from repro.compression import build_codec, parse_codec, round_bytes
+from repro.configs.base import FedConfig
+from repro.core import FedSim
+from repro.core.server import init_server_state, normalized_weights
+from repro.optim import get_optimizer
+
+HERE = os.path.dirname(__file__)
+SRC = os.path.join(HERE, "..", "src")
+
+# fedlora knobs reused everywhere: IASG windows divide evenly, no burn-in
+# unless a test opts in
+LORA_KW = dict(local_steps=6, burn_in_steps=2, steps_per_sample=2,
+               shrinkage_rho=0.5, server_opt="sgd", server_lr=0.1,
+               client_opt="sgd", client_lr=0.01)
+
+
+def _fed(codec, **kw):
+    base = dict(algorithm="fedlora", payload_codec=codec, lora_rank=2,
+                clients_per_round=3, **LORA_KW)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def _tree(seed=0):
+    """A mixed tree: one lowrank-eligible matrix, one passthrough vector."""
+    rng = np.random.RandomState(seed)
+    return {"w": jnp.asarray(rng.randn(12, 6).astype(np.float32)),
+            "b": jnp.asarray(rng.randn(6).astype(np.float32))}
+
+
+# ---------------------------------------------------------------------------
+# Codec round trips
+# ---------------------------------------------------------------------------
+
+def test_none_codec_roundtrip_exact():
+    codec = build_codec(_fed("none"))
+    x = _tree()
+    out = codec.decode(codec.encode(x, 3), 3, x)
+    for k in x:
+        np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(x[k]))
+
+
+def test_int8_roundtrip_error_bounded():
+    """Symmetric quantization: |x - dec| <= scale/2 per leaf, elementwise."""
+    codec = build_codec(_fed("int8"))
+    x = _tree()
+    enc = codec.encode(x, 0)
+    out = codec.decode(enc, 0, x)
+    for k in x:
+        assert set(enc[k]) == {"q", "scale"}
+        assert enc[k]["q"].dtype == jnp.int8
+        half_step = float(np.max(np.abs(np.asarray(x[k])))) / 127.0 / 2
+        err = np.max(np.abs(np.asarray(out[k]) - np.asarray(x[k])))
+        assert err <= half_step + 1e-6, (k, err, half_step)
+
+
+def test_int16_roundtrip_tighter_than_int8():
+    x = _tree()
+    errs = {}
+    for bits in (8, 16):
+        codec = build_codec(_fed("int8", quant_bits=bits))
+        out = codec.decode(codec.encode(x, 0), 0, x)
+        errs[bits] = max(
+            float(np.max(np.abs(np.asarray(out[k]) - np.asarray(x[k]))))
+            for k in x)
+    assert errs[16] < errs[8] / 64  # 8 extra bits ~ 256x finer steps
+
+
+def test_lowrank_projects_matrices_and_passes_vectors():
+    """Eligible leaves land on rank-r factors; 1-D leaves are untouched;
+    decode(encode(.)) is the orthogonal projection onto the sketch (so it
+    is idempotent and exact for vectors already in the subspace)."""
+    fed = _fed("lowrank")
+    codec = build_codec(fed)
+    x = _tree()
+    enc = codec.encode(x, 5)
+    assert enc["w"].shape == (12, fed.lora_rank)
+    np.testing.assert_array_equal(np.asarray(enc["b"]), np.asarray(x["b"]))
+
+    dec = codec.decode(enc, 5, x)
+    assert dec["w"].shape == x["w"].shape
+    # projection shrinks: ||P x|| <= ||x||, and strictly here (rank 2 < 6)
+    assert (np.linalg.norm(np.asarray(dec["w"]))
+            < np.linalg.norm(np.asarray(x["w"])))
+    # idempotency: the projection of a projected tree is itself
+    dec2 = codec.decode(codec.encode(dec, 5), 5, x)
+    np.testing.assert_allclose(np.asarray(dec2["w"]), np.asarray(dec["w"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_lowrank_sketch_deterministic_and_rotating():
+    """Same (seed, round) -> identical encoding; different round ->
+    different sketch (what lets error feedback escape a fixed subspace)."""
+    codec = build_codec(_fed("lowrank"))
+    x = _tree()
+    a = codec.encode(x, 7)
+    b = codec.encode(x, 7)
+    np.testing.assert_array_equal(np.asarray(a["w"]), np.asarray(b["w"]))
+    c = codec.encode(x, 8)
+    assert np.max(np.abs(np.asarray(a["w"]) - np.asarray(c["w"]))) > 1e-3
+
+
+def test_composed_chain_roundtrip_error_bounded():
+    """lowrank+int8: the decode error against the *projected* tree is the
+    quantizer's half-step — composition adds no extra loss on top of the
+    rank truncation."""
+    fed = _fed("lowrank+int8")
+    codec = build_codec(fed)
+    x = _tree()
+    projected = codec.decode_accum(
+        codec.to_accum(codec.encode(x, 2)), 2, x)
+    # reference: lowrank alone at the same round index
+    lr_only = build_codec(_fed("lowrank"))
+    want = lr_only.decode(lr_only.encode(x, 2), 2, x)
+    for k in x:
+        half_step = float(np.max(np.abs(np.asarray(
+            lr_only.encode(x, 2)[k])))) / 127.0 / 2
+        err = np.max(np.abs(np.asarray(projected[k]) - np.asarray(want[k])))
+        # one quant half-step, lifted through an orthonormal basis
+        assert err <= half_step * 2 + 1e-6, (k, err, half_step)
+
+
+def test_parse_codec_rejects_malformed_specs():
+    with pytest.raises(ValueError, match="unknown payload codec"):
+        parse_codec("gzip")
+    with pytest.raises(ValueError, match="cannot be composed"):
+        parse_codec("none+int8")
+    with pytest.raises(ValueError, match="duplicate"):
+        parse_codec("int8+int8")
+    with pytest.raises(ValueError, match="linear.*prefix"):
+        parse_codec("int8+lowrank")
+    assert parse_codec("lowrank+int8") == ("lowrank", "int8")
+
+
+# ---------------------------------------------------------------------------
+# FedConfig eagerly validates the payload knobs (incl. delta_dtype)
+# ---------------------------------------------------------------------------
+
+def test_fedconfig_payload_knobs_validated_eagerly():
+    """Bad delta_dtype / codec / rank / bits used to surface as opaque
+    trace-time errors inside the jitted round; FedConfig now rejects them
+    by name at construction."""
+    with pytest.raises(ValueError, match="delta_dtype"):
+        FedConfig(delta_dtype="float99")
+    with pytest.raises(ValueError, match="delta_dtype"):
+        FedConfig(delta_dtype="int32")     # non-floating
+    with pytest.raises(ValueError, match="unknown payload codec"):
+        _fed("lowrank+gzip")
+    with pytest.raises(ValueError, match="lora_rank"):
+        _fed("lowrank", lora_rank=0)
+    with pytest.raises(ValueError, match="quant_bits"):
+        _fed("int8", quant_bits=7)
+    # codecs only on algorithms that aggregate in the encoded space
+    with pytest.raises(ValueError, match="payload_codec"):
+        FedConfig(algorithm="fedavg", payload_codec="int8")
+    # the good spellings construct
+    FedConfig(delta_dtype="bfloat16")
+    _fed("lowrank+int8", quant_bits=16)
+
+
+# ---------------------------------------------------------------------------
+# Engine-level parity and error feedback
+# ---------------------------------------------------------------------------
+
+C, DIN, DOUT, N = 3, 8, 6, 48
+
+
+@pytest.fixture(scope="module")
+def matrix_problem():
+    """Heterogeneous matrix LSQ: y = X (W* + shift_c) + noise, one
+    lowrank-eligible (DIN, DOUT) weight."""
+    rng = np.random.RandomState(0)
+    W_true = rng.randn(DIN, DOUT).astype(np.float32)
+    data = {}
+    for cid in range(C):
+        shift = rng.randn(DIN, DOUT).astype(np.float32) * 0.5
+        X = rng.randn(N, DIN).astype(np.float32)
+        y = X @ (W_true + shift) + 0.1 * rng.randn(N, DOUT).astype(np.float32)
+        data[cid] = (jnp.asarray(X), jnp.asarray(y))
+
+    def grad_fn(params, batch):
+        def loss(p):
+            r = batch["x"] @ p["w"] - batch["y"]
+            return 0.5 * jnp.mean(r * r)
+        return jax.value_and_grad(loss)(params)
+
+    def batch_fn(cid, r, steps):
+        X, y = data[cid]
+        rs = np.random.RandomState(r * 131 + cid)
+        idx = rs.randint(0, N, size=(steps, 16))
+        return {"x": X[idx], "y": y[idx]}
+
+    return grad_fn, batch_fn, data
+
+
+def test_error_feedback_residuals_match_eager_reference(matrix_problem):
+    """Two participations of every client: the engine's persisted
+    residuals and server params equal an eager per-client loop that
+    hand-threads ``residual -> update -> state_update`` through the same
+    jitted hooks."""
+    grad_fn, batch_fn, _ = matrix_problem
+    fed = _fed("lowrank+int8", round_placement="parallel")
+    assert fed.error_feedback
+    params0 = {"w": jnp.zeros((DIN, DOUT))}
+
+    sim = FedSim(fed=fed, grad_fn=grad_fn, batch_fn=batch_fn, num_clients=C)
+    state = sim.init(params0)
+    for r in range(2):
+        state, _ = sim.round(state, r)
+    got_res, _ = sim.client_store.gather(np.arange(C))
+
+    # eager reference on the same sampled cohorts
+    alg = get_algorithm(fed)
+    client_opt = get_optimizer(fed.client_opt, fed.client_lr,
+                               fed.client_momentum)
+    server_opt = get_optimizer(fed.server_opt, fed.server_lr,
+                               fed.server_momentum)
+    update = jax.jit(alg.make_client_update(grad_fn, client_opt))
+    ref = init_server_state(params0, server_opt, algorithm=alg)
+    residuals = {cid: alg.init_client_state(params0) for cid in range(C)}
+    for r in range(2):
+        ids = [int(i) for i in sim.sampler.sample(r)]
+        extras = alg.broadcast(ref, server_opt)
+        payloads = []
+        for cid in ids:
+            res = update(ref.params, batch_fn(cid, r, fed.local_steps),
+                         residuals[cid], *extras)
+            payloads.append(res.payload)
+            residuals[cid] = res.state_update
+        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                         *payloads)
+        agg = alg.reduce_stacked(stacked, normalized_weights(None, C))
+        agg = alg.finish_cohort(ref, agg)
+        ref = alg.server_update(ref, agg, server_opt)
+
+    np.testing.assert_allclose(np.asarray(state.params["w"]),
+                               np.asarray(ref.params["w"]),
+                               rtol=1e-6, atol=1e-7)
+    # residuals are real (compression lost something) and match per client
+    for cid in range(C):
+        want = np.asarray(residuals[cid]["w"])
+        assert np.max(np.abs(want)) > 1e-4
+        np.testing.assert_allclose(np.asarray(got_res["w"][cid]), want,
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_fedlora_identity_codec_matches_fedpa_precision(matrix_problem):
+    """payload_codec='none', error feedback off: fedlora IS
+    fedpa_precision — encode/decode are identities and finish_cohort
+    computes the same precision-weighted mean."""
+    grad_fn, batch_fn, _ = matrix_problem
+    params0 = {"w": jnp.zeros((DIN, DOUT))}
+    kw = dict(clients_per_round=C, **LORA_KW)
+    lora = FedConfig(algorithm="fedlora", payload_codec="none",
+                     error_feedback=False, **kw)
+    dense = FedConfig(algorithm="fedpa_precision", **kw)
+    outs = {}
+    for name, fed in (("lora", lora), ("dense", dense)):
+        sim = FedSim(fed=fed, grad_fn=grad_fn, batch_fn=batch_fn,
+                     num_clients=C)
+        state, _ = sim.run(params0, 3)
+        outs[name] = np.asarray(state.params["w"])
+    np.testing.assert_allclose(outs["lora"], outs["dense"],
+                               rtol=1e-6, atol=1e-7)
+
+
+def _final_loss(state, data):
+    l = 0.0
+    for cid in data:
+        X, y = data[cid]
+        r = X @ state.params["w"] - y
+        l += float(0.5 * jnp.mean(r * r))
+    return l / len(data)
+
+
+def test_fedlora_acceptance_loss_within_5pct_at_8x_fewer_bytes():
+    """The PR's acceptance gate on heterogeneous matrix LSQ: fedlora with
+    lowrank+int8 lands within 5% of dense fedpa_precision's final loss at
+    >= 8x fewer measured uplink bytes per round, and error feedback
+    closes a measurable gap."""
+    C, DIN, DOUT, N = 6, 32, 16, 64
+    rng = np.random.RandomState(0)
+    W_true = rng.randn(DIN, DOUT).astype(np.float32)
+    data = {}
+    for cid in range(C):
+        shift = rng.randn(DIN, DOUT).astype(np.float32) * 0.5
+        X = rng.randn(N, DIN).astype(np.float32)
+        y = X @ (W_true + shift) + 0.1 * rng.randn(N, DOUT).astype(
+            np.float32)
+        data[cid] = (jnp.asarray(X), jnp.asarray(y))
+
+    def grad_fn(params, batch):
+        def loss(p):
+            r = batch["x"] @ p["w"] - batch["y"]
+            return 0.5 * jnp.mean(r * r)
+        return jax.value_and_grad(loss)(params)
+
+    def batch_fn(cid, r, steps):
+        X, y = data[cid]
+        rs = np.random.RandomState(r * 131 + cid)
+        idx = rs.randint(0, N, size=(steps, 16))
+        return {"x": X[idx], "y": y[idx]}
+
+    kw = dict(clients_per_round=C, local_steps=12, burn_in_steps=4,
+              steps_per_sample=2, shrinkage_rho=0.3, burn_in_rounds=2,
+              server_opt="sgd", server_lr=0.5, client_opt="sgd",
+              client_lr=0.05)
+
+    def run(fed):
+        sim = FedSim(fed=fed, grad_fn=grad_fn, batch_fn=batch_fn,
+                     num_clients=C)
+        return sim.run({"w": jnp.zeros((DIN, DOUT))}, 50)
+
+    s_dense, h_dense = run(FedConfig(algorithm="fedpa_precision", **kw))
+    s_lora, h_lora = run(FedConfig(algorithm="fedlora",
+                                   payload_codec="lowrank+int8",
+                                   lora_rank=4, **kw))
+    s_noef, _ = run(FedConfig(algorithm="fedlora",
+                              payload_codec="lowrank+int8", lora_rank=4,
+                              error_feedback=False, **kw))
+
+    dense_loss = _final_loss(s_dense, data)
+    lora_loss = _final_loss(s_lora, data)
+    noef_loss = _final_loss(s_noef, data)
+    assert lora_loss <= dense_loss * 1.05, (lora_loss, dense_loss)
+
+    # measured (history) uplink bytes, sampling rounds only (burn is dense)
+    ratio = h_dense[-1]["bytes_up"] / h_lora[-1]["bytes_up"]
+    assert ratio >= 8.0, ratio
+    # error feedback is load-bearing, not decorative
+    assert noef_loss > lora_loss * 1.2, (noef_loss, lora_loss)
+
+
+# ---------------------------------------------------------------------------
+# Byte accounting in history, both engines
+# ---------------------------------------------------------------------------
+
+def test_history_reports_bytes_for_all_algorithms(matrix_problem):
+    """Every algorithm stamps exact per-round bytes_up/bytes_down into
+    history as JSON-safe ints, matching ``round_bytes`` on the live
+    params; stateful broadcasts (scaffold) pay a bigger downlink."""
+    grad_fn, batch_fn, _ = matrix_problem
+    params0 = {"w": jnp.zeros((DIN, DOUT))}
+    feds = {
+        "fedavg": FedConfig(algorithm="fedavg", clients_per_round=C,
+                            local_steps=4, client_opt="sgd",
+                            client_lr=0.05),
+        "scaffold": FedConfig(algorithm="scaffold", clients_per_round=C,
+                              local_steps=4, client_opt="sgd",
+                              client_lr=0.05),
+        "fedlora": _fed("lowrank+int8"),
+    }
+    down = {}
+    for name, fed in feds.items():
+        sim = FedSim(fed=fed, grad_fn=grad_fn, batch_fn=batch_fn,
+                     num_clients=C)
+        _, hist = sim.run(params0, 2)
+        want = round_bytes(fed, params0)
+        for h in hist:
+            assert type(h["bytes_up"]) is int      # json-safe
+            assert h["bytes_up"] == want["bytes_up"]
+            assert h["bytes_down"] == want["bytes_down"]
+        json.dumps(hist)                           # round-trips as JSON
+        down[name] = hist[0]["bytes_down"]
+    # scaffold ships its control variate down; fedlora only an i32 round
+    assert down["scaffold"] > down["fedavg"]
+    assert down["fedlora"] == down["fedavg"] + C * 4
+
+
+def test_burn_rounds_account_dense_bytes(matrix_problem):
+    """fedlora burn-in rounds run dense fedavg: uplink bytes in history
+    jump down when the compressed sampling regime starts."""
+    grad_fn, batch_fn, _ = matrix_problem
+    fed = _fed("lowrank+int8", burn_in_rounds=1)
+    sim = FedSim(fed=fed, grad_fn=grad_fn, batch_fn=batch_fn,
+                 num_clients=C)
+    _, hist = sim.run({"w": jnp.zeros((DIN, DOUT))}, 3)
+    assert hist[0]["bytes_up"] > hist[1]["bytes_up"]
+    assert hist[1]["bytes_up"] == hist[2]["bytes_up"]
+    dense = round_bytes(fed, {"w": jnp.zeros((DIN, DOUT))},
+                        use_sampling=False)
+    assert hist[0]["bytes_up"] == dense["bytes_up"]
+
+
+def test_async_engine_reports_bytes(matrix_problem):
+    """The async engine stamps the same byte accounting into history."""
+    grad_fn, batch_fn, _ = matrix_problem
+    fed = dataclasses.replace(_fed("lowrank+int8"), async_rounds=True,
+                              max_staleness=0, prefetch_rounds=2)
+    sim = FedSim(fed=fed, grad_fn=grad_fn, batch_fn=batch_fn,
+                 num_clients=C)
+    params0 = {"w": jnp.zeros((DIN, DOUT))}
+    _, hist = sim.run(params0, 3)
+    want = round_bytes(fed, params0)
+    for h in hist:
+        assert type(h["bytes_up"]) is int
+        assert h["bytes_up"] == want["bytes_up"]
+        assert h["bytes_down"] == want["bytes_down"]
+
+
+# ---------------------------------------------------------------------------
+# 27B dry-run lowering (slow lane)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_dryrun_lowers_fedlora_gemma27b_with_payload_bytes(tmp_path):
+    """A fedlora round lowers for gemma3-27b on the 16x16 abstract mesh,
+    and the dry-run record carries exact per-round payload bytes with the
+    compressed uplink far below the dense downlink."""
+    out_path = str(tmp_path / "dryrun.jsonl")
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "gemma3-27b", "--shape", "train_4k",
+         "--algorithm", "fedlora", "--payload-codec", "lowrank+int8",
+         "--lora-rank", "4", "--no-compile", "--out", out_path],
+        capture_output=True, text=True, timeout=540, env=env)
+    assert out.returncode == 0, out.stderr[-4000:]
+    with open(out_path) as f:
+        recs = [json.loads(ln) for ln in f if ln.strip()]
+    assert recs and all(r["status"] in ("ok", "lowered") for r in recs), \
+        out.stdout
+    rec = recs[0]
+    assert rec["payload_codec"] == "lowrank+int8"
+    pb = rec["payload_bytes"]
+    # uplink (rank-4 factors + quantized precision) vs dense fp32 downlink
+    assert pb["bytes_up_per_client"] * 8 < pb["bytes_down_per_client"]

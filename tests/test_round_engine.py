@@ -71,6 +71,16 @@ ALL_FEDS = {
                        burn_in_rounds=2, fedep_damping=0.7,
                        server_opt="sgd", server_lr=0.1,
                        client_opt="sgd", client_lr=0.01),
+    # compressed payloads: 1-D test params make lowrank a passthrough, so
+    # this exercises the quantizer + error-feedback state + finish_cohort
+    # decode across every placement and the async engine
+    "fedlora": FedConfig(algorithm="fedlora",
+                         payload_codec="lowrank+int8", lora_rank=2,
+                         clients_per_round=C, local_steps=STEPS,
+                         burn_in_steps=4, steps_per_sample=2,
+                         shrinkage_rho=0.5, burn_in_rounds=2,
+                         server_opt="sgd", server_lr=0.1,
+                         client_opt="sgd", client_lr=0.01),
 }
 
 
@@ -238,6 +248,7 @@ def _eager_round(fed, grad_fn, batch_fn, state, round_idx, weights=None):
     w = normalized_weights(
         None if weights is None else np.asarray(weights, np.float32), C)
     agg = alg.reduce_stacked(stacked, w)
+    agg = alg.finish_cohort(state, agg)
     states = (jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *new_states)
               if alg.stateful else None)
     return (alg.server_update(state, agg, server_opt), float(np.mean(losses)),
