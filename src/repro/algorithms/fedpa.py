@@ -155,6 +155,11 @@ class FedPA(FedAlgorithm):
                                   acc, p)
                     return (p, s, acc), loss
 
+                # The IASG sample space IS delta_dtype by contract: this
+                # matches iasg.py's batch path bit-for-bit, and the fp32
+                # accumulation happens downstream in the Sherman-Morrison
+                # online-DP state, not in this window average.
+                # fedlint: disable=FL003 -- IASG samples live in delta_dtype by contract
                 acc0 = tm.tzeros_like(p, delta_dtype)
                 (p, s, acc), losses = jax.lax.scan(step, (p, s, acc0), wb)
                 sample = tm.tscale(1.0 / K_s, acc)

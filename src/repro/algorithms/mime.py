@@ -11,6 +11,7 @@ from __future__ import annotations
 from typing import Callable
 
 import jax
+import jax.numpy as jnp
 
 from repro.algorithms.base import (ClientResult, FedAlgorithm,
                                    register_algorithm)
@@ -22,6 +23,15 @@ from repro.optim import Optimizer
 @register_algorithm("mime")
 class Mime(FedAlgorithm):
     """MIME-lite: frozen server momentum + SVRG control variate."""
+
+    def validate(self) -> None:
+        """Reject MIME configs with a momentum mix outside [0, 1]."""
+        super().validate()
+        beta = self.fed.mime_beta
+        if not 0.0 <= beta <= 1.0:
+            raise ValueError(
+                f"mime_beta must lie in [0, 1] (it convexly mixes the local "
+                f"gradient with the frozen server momentum); got {beta}")
 
     def broadcast(self, state, server_opt: Optimizer) -> tuple:
         """Frozen server momentum shipped to MIME clients (Section 6)."""
@@ -47,14 +57,19 @@ class Mime(FedAlgorithm):
         delta_dtype = self.delta_dtype
 
         def update(params, batches, server_m):
-            # control-variate anchor: mean gradient at theta_0 over the round
+            # control-variate anchor: mean gradient at theta_0 over the
+            # round, accumulated in fp32 (ulp(256)=2 in bf16: summing more
+            # batches than that silently drops whole gradient increments)
             def accum(carry, batch):
                 _, g = grad_fn(params, batch)
-                return tm.tadd(carry, g), None
+                return tm.tmap(lambda c, gi: c + gi.astype(c.dtype),
+                               carry, g), None
 
             K = jax.tree_util.tree_leaves(batches)[0].shape[0]
-            gsum, _ = jax.lax.scan(accum, tm.tzeros_like(params), batches)
-            g_anchor = tm.tscale(1.0 / K, gsum)
+            gsum, _ = jax.lax.scan(accum, tm.tzeros_like(params, jnp.float32),
+                                   batches)
+            g_anchor = tm.tmap(lambda a, p: ((1.0 / K) * a).astype(p.dtype),
+                               gsum, params)
 
             def step(carry, batch):
                 p = carry

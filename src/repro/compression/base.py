@@ -72,12 +72,19 @@ class PayloadCodec:
 _REGISTRY: Dict[str, Type[PayloadCodec]] = {}
 
 
-def register_codec(name: str):
-    """Class decorator: register a codec under ``name`` (sets ``cls.name``)."""
+def register_codec(name: str, *, override: bool = False):
+    """Class decorator: register a codec under ``name`` (sets ``cls.name``).
+
+    Re-registering an existing name raises — a silent swap would change
+    what every ``payload_codec`` spec using it decodes to — unless
+    ``override=True`` is passed explicitly.
+    """
 
     def wrap(cls: Type[PayloadCodec]) -> Type[PayloadCodec]:
-        if name in _REGISTRY:
-            raise ValueError(f"codec {name!r} already registered")
+        if not override and name in _REGISTRY and _REGISTRY[name] is not cls:
+            raise ValueError(
+                f"codec {name!r} is already registered to "
+                f"{_REGISTRY[name]!r}; pass override=True to replace it")
         cls.name = name
         _REGISTRY[name] = cls
         return cls

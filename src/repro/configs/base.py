@@ -333,6 +333,7 @@ class FedConfig:
             raise ValueError(
                 f"unknown prefetch_backend {self.prefetch_backend!r}; "
                 f"known: ('process', 'thread')")
+        self._validate_round()
         self._validate_faults()
         self._validate_payload()
         # algorithm-specific checks (and the unknown-algorithm error) live on
@@ -340,6 +341,53 @@ class FedConfig:
         # cycle, as does ModelConfig.param_count above
         from repro.algorithms import get_algorithm  # noqa: PLC0415
         get_algorithm(self).validate()
+
+    def _validate_round(self):
+        """Range-check the round shape and both optimizer stacks by name.
+
+        Bad values here (a zero-client cohort, a negative learning rate, a
+        misspelled optimizer) used to surface only at trace time — or worse,
+        silently as NaNs rounds later.
+        """
+        if self.clients_per_round < 1:
+            raise ValueError(
+                f"clients_per_round must be >= 1, got "
+                f"{self.clients_per_round}")
+        if self.burn_in_rounds < 0:
+            raise ValueError(
+                f"burn_in_rounds must be >= 0, got {self.burn_in_rounds}")
+        if not 0.0 < self.shrinkage_rho <= 1.0:
+            raise ValueError(
+                f"shrinkage_rho must be in (0, 1] (Theorem 3's shrinkage "
+                f"coefficient; 0 divides by zero in the DP recursion), got "
+                f"{self.shrinkage_rho}")
+        if self.server_lr <= 0:
+            raise ValueError(f"server_lr must be > 0, got {self.server_lr}")
+        if self.client_lr <= 0:
+            raise ValueError(f"client_lr must be > 0, got {self.client_lr}")
+        if not 0.0 <= self.server_momentum <= 1.0:
+            raise ValueError(
+                f"server_momentum must be in [0, 1], got "
+                f"{self.server_momentum}")
+        if not 0.0 <= self.client_momentum <= 1.0:
+            raise ValueError(
+                f"client_momentum must be in [0, 1], got "
+                f"{self.client_momentum}")
+        if not isinstance(self.error_feedback, bool):
+            raise ValueError(
+                f"error_feedback must be a bool (it gates the residual "
+                f"slot in the client store), got {self.error_feedback!r}")
+        # the optimizer registry is the source of truth for valid names;
+        # building both stacks eagerly makes a typo'd server_opt/client_opt
+        # raise at config time. Late import avoids a configs<->optim cycle.
+        from repro.optim import get_optimizer  # noqa: PLC0415
+        try:
+            get_optimizer(self.server_opt, self.server_lr,
+                          self.server_momentum)
+            get_optimizer(self.client_opt, self.client_lr,
+                          self.client_momentum)
+        except KeyError as e:
+            raise ValueError(str(e)) from e
 
     def _validate_payload(self):
         """Eagerly validate ``delta_dtype`` and the compression knobs by

@@ -19,6 +19,7 @@ from repro.core.client_state import (  # noqa: F401
     jit_donating_store,
     make_client_store,
     population_layout,
+    register_store,
 )
 from repro.core.diagnostics import (  # noqa: F401
     bias_variance,

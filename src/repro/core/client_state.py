@@ -729,8 +729,32 @@ class DeviceClientStateStore(BaseClientStateStore):
         return jax.make_array_from_callback(gshape, sh, cb)
 
 
-#: Store classes by ``FedConfig.client_state_placement`` value.
-STORES = {"host": ClientStateStore, "device": DeviceClientStateStore}
+#: Store classes by ``FedConfig.client_state_placement`` value. Populated
+#: via :func:`register_store`; config validation treats it as the source
+#: of truth for valid placements.
+STORES = {}
+
+
+def register_store(name: str, cls, *, override: bool = False):
+    """Register a client-state store class under a placement ``name``.
+
+    Re-registering an existing name raises — a silent swap would reroute
+    every config's per-client state through a different store — unless
+    ``override=True`` is passed explicitly. Returns ``cls`` so it can be
+    used as a registration helper in downstream code.
+    """
+    if not issubclass(cls, BaseClientStateStore):
+        raise TypeError(f"{cls!r} must subclass BaseClientStateStore")
+    if not override and name in STORES and STORES[name] is not cls:
+        raise ValueError(
+            f"client-state store {name!r} is already registered to "
+            f"{STORES[name]!r}; pass override=True to replace it")
+    STORES[name] = cls
+    return cls
+
+
+register_store("host", ClientStateStore)
+register_store("device", DeviceClientStateStore)
 
 
 def make_client_store(placement: str, num_clients: int, *, mesh=None,

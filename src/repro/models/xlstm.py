@@ -49,7 +49,7 @@ class MLSTMState(NamedTuple):
 def init_mlstm_params(rng, cfg: ModelConfig, dtype=jnp.float32):
     """Init the mLSTM block (up-proj, conv, q/k/v, gates, down-proj)."""
     d, e, H = cfg.d_model, _e(cfg), cfg.num_heads
-    ks = jax.random.split(rng, 6)
+    ks = jax.random.split(rng, 7)
     s = lambda fan: 1.0 / jnp.sqrt(fan)
     return {
         "w_up": jax.random.normal(ks[0], (d, 2 * e), dtype) * s(d),
@@ -63,7 +63,7 @@ def init_mlstm_params(rng, cfg: ModelConfig, dtype=jnp.float32):
             [jnp.full((H,), -3.0, dtype), jnp.full((H,), 3.0, dtype)]
         ),
         "gn_scale": jnp.zeros((e,), dtype),
-        "w_down": jax.random.normal(jax.random.fold_in(ks[0], 7), (e, d), dtype) * s(e),
+        "w_down": jax.random.normal(ks[6], (e, d), dtype) * s(e),
     }
 
 

@@ -1,0 +1,12 @@
+"""FL001 firing fixture: three host syncs inside one jitted body."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def bad_round(x):
+    """numpy call, .item(), and float() on a traced value."""
+    y = np.mean(x)
+    z = x.sum().item()
+    w = float(x[0])
+    return y + z + w

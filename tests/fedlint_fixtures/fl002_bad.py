@@ -1,0 +1,10 @@
+"""FL002 firing fixture: a donated store read after the donating call."""
+from repro.core.client_state import jit_donating_store
+
+apply_round = jit_donating_store(None, 0, out_shardings=None)
+
+
+def run(store, batches):
+    """Reads `store` after its buffer was donated to apply_round."""
+    out, metrics = apply_round(store, batches)
+    return store, out, metrics

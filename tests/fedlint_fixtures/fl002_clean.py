@@ -1,0 +1,10 @@
+"""FL002 clean fixture: the rebind-from-result donation idiom."""
+from repro.core.client_state import jit_donating_store
+
+apply_round = jit_donating_store(None, 0, out_shardings=None)
+
+
+def run(store, batches):
+    """Rebinding `store` from the call's result un-poisons the name."""
+    store, metrics = apply_round(store, batches)
+    return store, metrics

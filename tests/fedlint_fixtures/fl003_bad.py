@@ -1,0 +1,26 @@
+"""FL003 firing fixture: dtype-inheriting accumulator init + scan carry."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import tree_math as tm
+
+
+class BadAccum(FedAlgorithm):  # noqa: F821 -- resolved by name, not import
+    """Accumulates in whatever dtype the payload happens to carry."""
+
+    def init_accum(self, payload):
+        """Zeros that inherit the payload dtype (bf16 re-rounds)."""
+        return tm.tzeros_like(payload)
+
+    def make_client_update(self, grad_fn, client_opt):
+        """Client update with a dtype-inheriting scan carry."""
+
+        def update(params, batches):
+            def accum(carry, batch):
+                _, g = grad_fn(params, batch)
+                return tm.tadd(carry, g), None
+
+            total, _ = jax.lax.scan(accum, jnp.zeros_like(params), batches)
+            return total
+
+        return update

@@ -1,0 +1,37 @@
+"""FL003 clean fixture: fp32 accumulators with one terminal cast."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import tree_math as tm
+
+
+class GoodAccum(FedAlgorithm):  # noqa: F821 -- resolved by name, not import
+    """fp32 accumulator space; finalize owns the single cast."""
+
+    def init_accum(self, payload):
+        """Zeros pinned to fp32 regardless of the payload dtype."""
+        return tm.tzeros_like(payload, jnp.float32)
+
+    def accumulate(self, acc, delta, weight):
+        """Casting into the accumulator's own dtype is allowed."""
+        return tm.tmap(lambda a, d: a + weight * d.astype(a.dtype),
+                       acc, delta)
+
+    def finalize(self, acc, params):
+        """The one terminal cast back to the param dtype."""
+        return tm.tmap(lambda a, p: a.astype(p.dtype), acc, params)
+
+    def make_client_update(self, grad_fn, client_opt):
+        """Client update whose scan carry pins fp32 explicitly."""
+
+        def update(params, batches):
+            def accum(carry, batch):
+                _, g = grad_fn(params, batch)
+                return tm.tmap(lambda c, gi: c + gi.astype(c.dtype),
+                               carry, g), None
+
+            total, _ = jax.lax.scan(
+                accum, tm.tzeros_like(params, jnp.float32), batches)
+            return total
+
+        return update

@@ -1,0 +1,9 @@
+"""FL004 firing fixture: one key feeds two samplers."""
+import jax
+
+
+def init_params(rng):
+    """`rng` is consumed twice — the two draws are correlated."""
+    w = jax.random.normal(rng, (4, 4))
+    b = jax.random.normal(rng, (4,))
+    return w, b

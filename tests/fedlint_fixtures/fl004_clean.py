@@ -1,0 +1,19 @@
+"""FL004 clean fixture: split before every consumption."""
+import jax
+
+
+def init_params(rng):
+    """Each sampler gets its own subkey."""
+    k_w, k_b = jax.random.split(rng)
+    w = jax.random.normal(k_w, (4, 4))
+    b = jax.random.normal(k_b, (4,))
+    return w, b
+
+
+def sample_rounds(rng, n):
+    """Loop consumption with a per-iteration split."""
+    outs = []
+    for _ in range(n):
+        rng, sub = jax.random.split(rng)
+        outs.append(jax.random.normal(sub, (2,)))
+    return outs

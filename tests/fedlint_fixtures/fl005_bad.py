@@ -1,0 +1,45 @@
+"""FL005 firing fixture: registry + config contract drift (4 findings)."""
+from dataclasses import dataclass
+
+
+def register_algorithm(name):
+    """Stub decorator so the class-contract checks engage."""
+
+    def deco(cls):
+        return cls
+
+    return deco
+
+
+class FedAlgorithm:
+    """Stub base marking subclasses for the contract checks."""
+
+
+@dataclass(frozen=True)
+class FedConfig:
+    """Stub config with one knob no validator ever checks by name."""
+
+    mystery_knob: float = 0.5
+
+    def __post_init__(self):
+        """Validates nothing."""
+
+
+@register_algorithm("drifty")
+class Drifty(FedAlgorithm):
+    """Stateful, reshapes its payload, broadcasts extras — declares none."""
+
+    stateful = True
+
+    def broadcast(self, state, server_opt):
+        """Ships extras without abstract_broadcast_extras."""
+        return (state,)
+
+    def payload_accum(self, acc, payload, weight):
+        """Reshapes the payload without abstract_payload."""
+        return acc
+
+    def make_client_update(self, grad_fn, client_opt):
+        """Reads a config knob that is never validated by name."""
+        lr = self.fed.mystery_knob
+        return lambda params, batches: (params, lr)

@@ -1,0 +1,59 @@
+"""FL005 clean fixture: every contract declared, every knob validated."""
+from dataclasses import dataclass
+
+
+def register_algorithm(name):
+    """Stub decorator so the class-contract checks engage."""
+
+    def deco(cls):
+        return cls
+
+    return deco
+
+
+class FedAlgorithm:
+    """Stub base marking subclasses for the contract checks."""
+
+
+@dataclass(frozen=True)
+class FedConfig:
+    """Stub config whose knob is validated by name at construction."""
+
+    mystery_knob: float = 0.5
+
+    def __post_init__(self):
+        """Range-checks mystery_knob eagerly."""
+        if not 0.0 <= self.mystery_knob <= 1.0:
+            raise ValueError("mystery_knob must be in [0, 1]")
+
+
+@register_algorithm("tidy")
+class Tidy(FedAlgorithm):
+    """Declares init_client_state/abstract_payload/broadcast extras."""
+
+    stateful = True
+
+    def init_client_state(self, params):
+        """State template for the client store."""
+        return params
+
+    def broadcast(self, state, server_opt):
+        """Ships extras, with their abstract shapes declared below."""
+        return (state,)
+
+    def abstract_broadcast_extras(self, params):
+        """Abstract shapes of the broadcast extras."""
+        return (params,)
+
+    def payload_accum(self, acc, payload, weight):
+        """Reshaped payload, with abstract_payload declared below."""
+        return acc
+
+    def abstract_payload(self, params):
+        """Abstract shape of the communicated payload."""
+        return params
+
+    def make_client_update(self, grad_fn, client_opt):
+        """Reads only the knob __post_init__ validates."""
+        lr = self.fed.mystery_knob
+        return lambda params, batches: (params, lr)

@@ -1,0 +1,11 @@
+"""FL006 firing fixture: donating jits without an out_shardings pin."""
+import jax
+
+from repro.core.client_state import jit_donating_store
+
+
+def build(round_fn):
+    """Two donating wrappers, neither pinning its output shardings."""
+    apply_a = jit_donating_store(round_fn, 3)
+    apply_b = jax.jit(round_fn, donate_argnums=(0,))
+    return apply_a, apply_b

@@ -1,0 +1,12 @@
+"""FL006 clean fixture: donating jits with pinned output shardings."""
+import jax
+
+from repro.core.client_state import jit_donating_store
+
+
+def build(round_fn, out_sh):
+    """Donation composed with an explicit out_shardings pin."""
+    apply_a = jit_donating_store(round_fn, 3, out_shardings=out_sh)
+    apply_b = jax.jit(round_fn, donate_argnums=(0,), out_shardings=out_sh)
+    plain = jax.jit(round_fn)
+    return apply_a, apply_b, plain

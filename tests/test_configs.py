@@ -101,3 +101,27 @@ def test_long_decode_support_flags():
                if configs.get_config(a).supports_long_decode}
     assert long_ok == {"xlstm-125m", "recurrentgemma-9b", "gemma3-27b",
                        "llama4-scout-17b-a16e"}
+
+
+def test_fed_config_round_validation():
+    """The _validate_round checks added with fedlint FL005: every knob the
+    engine reads is range/name-checked at construction time."""
+    for bad in (dict(clients_per_round=0),
+                dict(burn_in_rounds=-1),
+                dict(shrinkage_rho=0.0),
+                dict(shrinkage_rho=1.5),
+                dict(server_lr=0.0),
+                dict(client_lr=-0.1),
+                dict(server_momentum=1.5),
+                dict(client_momentum=-0.1),
+                dict(server_opt="nadam"),
+                dict(client_opt="lion"),
+                dict(error_feedback=1),
+                dict(algorithm="mime", mime_beta=1.5)):
+        with pytest.raises(ValueError):
+            FedConfig(**bad)
+    # the boundary values are all valid
+    FedConfig(clients_per_round=1, burn_in_rounds=0, shrinkage_rho=1.0,
+              server_momentum=0.0, client_momentum=1.0)
+    FedConfig(algorithm="mime", mime_beta=0.0)
+    FedConfig(algorithm="mime", mime_beta=1.0)

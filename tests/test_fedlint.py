@@ -1,0 +1,165 @@
+"""Tests for the fedlint static-analysis pass (tools/fedlint).
+
+Fixture pairs under ``tests/fedlint_fixtures/`` pin each rule's behavior:
+the ``*_bad.py`` file must produce exactly its expected findings, the
+``*_clean.py`` twin none. CLI tests run ``python -m fedlint`` as a
+subprocess the way CI does; the repo-gate test asserts the shipped tree
+is fedlint-clean.
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from fedlint.core import (load_baseline, split_baselined, suppressed_rules,
+                          write_baseline)
+from fedlint.runner import run
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = Path(__file__).resolve().parent / "fedlint_fixtures"
+
+#: rule id -> (expected finding count in its firing fixture, expected lines)
+EXPECTED = {
+    "FL001": 3,
+    "FL002": 1,
+    "FL003": 2,
+    "FL004": 1,
+    "FL005": 4,
+    "FL006": 2,
+}
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "tools")
+    return env
+
+
+def _fedlint(*args, cwd=REPO):
+    return subprocess.run(
+        [sys.executable, "-m", "fedlint", *args],
+        capture_output=True, text=True, env=_env(), cwd=cwd)
+
+
+# -- per-rule fixture pairs --------------------------------------------------
+
+@pytest.mark.parametrize("rule", sorted(EXPECTED))
+def test_firing_fixture(rule):
+    path = FIXTURES / f"{rule.lower()}_bad.py"
+    findings = run([path], select=[rule], root=REPO)
+    assert len(findings) == EXPECTED[rule], [f.message for f in findings]
+    assert all(f.rule == rule for f in findings)
+    assert all(f.path.endswith(f"{rule.lower()}_bad.py") for f in findings)
+
+
+@pytest.mark.parametrize("rule", sorted(EXPECTED))
+def test_clean_fixture(rule):
+    path = FIXTURES / f"{rule.lower()}_clean.py"
+    findings = run([path], select=[rule], root=REPO)
+    assert findings == [], [f.message for f in findings]
+
+
+def test_bad_fixtures_fire_without_select():
+    """Running all rules over all firing fixtures finds at least the per-
+    rule expectations (cross-rule extras are allowed in this mode)."""
+    findings = run([FIXTURES / f"{r.lower()}_bad.py" for r in EXPECTED],
+                   root=REPO)
+    by_rule = {}
+    for f in findings:
+        by_rule.setdefault(f.rule, []).append(f)
+    for rule, count in EXPECTED.items():
+        assert len(by_rule.get(rule, [])) >= count, rule
+
+
+# -- suppressions ------------------------------------------------------------
+
+def test_inline_suppression(tmp_path):
+    src = (FIXTURES / "fl004_bad.py").read_text()
+    suppressed = src.replace(
+        "    b = jax.random.normal(rng, (4,))",
+        "    # fedlint: disable=FL004 -- correlated draws are intended here\n"
+        "    b = jax.random.normal(rng, (4,))")
+    target = tmp_path / "suppressed.py"
+    target.write_text(suppressed)
+    assert run([target], select=["FL004"], root=tmp_path) == []
+    # the marker only silences the named rule
+    assert suppressed_rules(["x = 1  # fedlint: disable=FL001,FL004"], 1) \
+        == {"FL001", "FL004"}
+
+
+# -- baseline round trip -----------------------------------------------------
+
+def test_baseline_round_trip(tmp_path):
+    findings = run([FIXTURES / "fl004_bad.py"], select=["FL004"], root=REPO)
+    assert findings
+    baseline_path = tmp_path / "baseline.json"
+    write_baseline(baseline_path, findings)
+    baseline = load_baseline(baseline_path)
+    new, old = split_baselined(findings, baseline)
+    assert new == [] and len(old) == len(findings)
+    # a fresh finding in another file is NOT absorbed by the baseline
+    other = run([FIXTURES / "fl001_bad.py"], select=["FL001"], root=REPO)
+    new2, _ = split_baselined(other, baseline)
+    assert len(new2) == len(other)
+
+
+def test_missing_baseline_is_empty(tmp_path):
+    assert load_baseline(tmp_path / "nope.json") == {}
+
+
+# -- CLI ---------------------------------------------------------------------
+
+def test_cli_exit_codes():
+    bad = _fedlint(str(FIXTURES / "fl001_bad.py"), "--no-baseline",
+                   "--select", "FL001")
+    assert bad.returncode == 1, bad.stdout + bad.stderr
+    clean = _fedlint(str(FIXTURES / "fl001_clean.py"), "--no-baseline",
+                     "--select", "FL001")
+    assert clean.returncode == 0, clean.stdout + clean.stderr
+
+
+def test_cli_json_schema():
+    proc = _fedlint(str(FIXTURES / "fl003_bad.py"), "--no-baseline",
+                    "--select", "FL003", "--json")
+    assert proc.returncode == 1
+    report = json.loads(proc.stdout)
+    assert set(report) == {"version", "findings", "summary"}
+    assert report["summary"] == {"total": 2, "new": 2, "baselined": 0}
+    for f in report["findings"]:
+        assert set(f) == {"rule", "path", "line", "col", "message",
+                          "baselined"}
+        assert f["rule"] == "FL003" and f["baselined"] is False
+        assert isinstance(f["line"], int) and f["line"] >= 1
+
+
+def test_cli_write_baseline_round_trip(tmp_path):
+    baseline = tmp_path / "bl.json"
+    wrote = _fedlint(str(FIXTURES / "fl006_bad.py"), "--select", "FL006",
+                     "--baseline", str(baseline), "--write-baseline")
+    assert wrote.returncode == 0, wrote.stdout + wrote.stderr
+    reread = _fedlint(str(FIXTURES / "fl006_bad.py"), "--select", "FL006",
+                      "--baseline", str(baseline), "--json")
+    assert reread.returncode == 0, reread.stdout + reread.stderr
+    report = json.loads(reread.stdout)
+    assert report["summary"]["new"] == 0
+    assert report["summary"]["baselined"] == EXPECTED["FL006"]
+
+
+def test_cli_list_rules():
+    proc = _fedlint("--list-rules")
+    assert proc.returncode == 0
+    for rule in EXPECTED:
+        assert rule in proc.stdout
+
+
+# -- the shipped tree is clean ----------------------------------------------
+
+def test_repo_gate():
+    """`python -m fedlint src/repro --json` exits 0 on the final tree."""
+    proc = _fedlint("src/repro", "benchmarks", "--json")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    report = json.loads(proc.stdout)
+    assert report["summary"]["new"] == 0

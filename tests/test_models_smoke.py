@@ -77,3 +77,20 @@ def test_active_params_lt_total_for_moe():
         assert cfg.active_param_count() < cfg.param_count()
     dense = configs.get_config("qwen3-32b")
     assert dense.active_param_count() == dense.param_count()
+
+
+def test_mlstm_init_keys_are_independent():
+    """w_down must use its own subkey, not fold_in of w_up's consumed key
+    (fedlint FL004): every mLSTM weight draws from a distinct split of the
+    init key, so no two leaves can be correlated by key reuse."""
+    from repro.models.xlstm import init_mlstm_params
+
+    cfg = configs.get_smoke("xlstm-125m")
+    rng = jax.random.PRNGKey(7)
+    p = init_mlstm_params(rng, cfg)
+    ks = jax.random.split(rng, 7)
+    e, d = p["w_down"].shape
+    expect = jax.random.normal(ks[6], (e, d), p["w_down"].dtype) \
+        * (1.0 / jnp.sqrt(e))
+    np.testing.assert_array_equal(np.asarray(p["w_down"]),
+                                  np.asarray(expect))

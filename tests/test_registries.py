@@ -1,0 +1,96 @@
+"""Duplicate-registration behavior of the three plugin registries.
+
+Each registry (algorithms, payload codecs, client-state stores) must
+raise by name on a duplicate registration — a silent swap would change
+round math / payload bytes / state placement for every config using the
+name — with ``override=True`` as the explicit escape hatch.
+"""
+import pytest
+
+from repro.algorithms import FedAlgorithm
+from repro.algorithms import base as alg_base
+from repro.algorithms.base import register_algorithm
+from repro.compression import base as codec_base
+from repro.compression.base import PayloadCodec, register_codec
+from repro.core.client_state import (STORES, ClientStateStore,
+                                     register_store)
+
+ALG_REGISTRY = alg_base._REGISTRY
+CODEC_REGISTRY = codec_base._REGISTRY
+
+
+def test_register_algorithm_duplicate_raises():
+    assert "fedavg" in ALG_REGISTRY
+    with pytest.raises(ValueError, match="fedavg.*already registered"):
+        @register_algorithm("fedavg")
+        class Impostor(FedAlgorithm):
+            pass
+    # the original class is untouched
+    assert ALG_REGISTRY["fedavg"].__name__ != "Impostor"
+
+
+def test_register_algorithm_override_and_reregister():
+    original = ALG_REGISTRY["fedavg"]
+    # re-registering the SAME class is a no-op, not a collision
+    register_algorithm("fedavg")(original)
+    assert ALG_REGISTRY["fedavg"] is original
+
+    @register_algorithm("fedavg", override=True)
+    class Replacement(FedAlgorithm):
+        pass
+    try:
+        assert ALG_REGISTRY["fedavg"] is Replacement
+    finally:
+        register_algorithm("fedavg", override=True)(original)
+    assert ALG_REGISTRY["fedavg"] is original
+
+
+def test_register_codec_duplicate_raises():
+    assert "int8" in CODEC_REGISTRY
+    with pytest.raises(ValueError, match="int8.*already registered"):
+        @register_codec("int8")
+        class Impostor(PayloadCodec):
+            pass
+    assert CODEC_REGISTRY["int8"].__name__ != "Impostor"
+
+
+def test_register_codec_override_and_reregister():
+    original = CODEC_REGISTRY["int8"]
+    register_codec("int8")(original)   # same class: no-op
+    assert CODEC_REGISTRY["int8"] is original
+
+    @register_codec("int8", override=True)
+    class Replacement(PayloadCodec):
+        pass
+    try:
+        assert CODEC_REGISTRY["int8"] is Replacement
+    finally:
+        register_codec("int8", override=True)(original)
+    assert CODEC_REGISTRY["int8"] is original
+
+
+def test_register_store_duplicate_raises():
+    assert "host" in STORES
+    class Impostor(ClientStateStore):
+        pass
+    with pytest.raises(ValueError, match="host.*already registered"):
+        register_store("host", Impostor)
+    assert STORES["host"] is not Impostor
+
+
+def test_register_store_override_and_type_check():
+    original = STORES["host"]
+    assert register_store("host", original) is original  # same class: no-op
+
+    class Replacement(ClientStateStore):
+        pass
+    register_store("host", Replacement, override=True)
+    try:
+        assert STORES["host"] is Replacement
+    finally:
+        register_store("host", original, override=True)
+    assert STORES["host"] is original
+
+    with pytest.raises(TypeError, match="BaseClientStateStore"):
+        register_store("bogus", int)
+    assert "bogus" not in STORES

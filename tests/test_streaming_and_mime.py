@@ -69,3 +69,33 @@ def test_mime_converges_comparably_to_fedavg():
         np.asarray(fedavg_fixed_point(clients, 100, 0.002)) - mu))
     assert np.isfinite(d_mime)
     assert d_mime < 3.0 * d_avg, (d_mime, d_avg)
+
+
+def test_mime_anchor_accumulates_in_fp32():
+    """The SVRG anchor must not saturate under bf16 params (fedlint FL003).
+
+    bf16 has a 7-bit mantissa: summing more than 256 unit gradients into a
+    bf16 carry silently drops increments (ulp(256) = 2), halving the anchor
+    at K = 512. With grad(p) = p - b and mime_beta = 0 the local fixed
+    point is exactly -anchor, so a saturated anchor lands the client at
+    p = 0.5 instead of 1.0 — a 2x error this asserts against.
+    """
+    from repro.algorithms import get_algorithm
+
+    K = 512
+    fed = FedConfig(algorithm="mime", mime_beta=0.0, client_lr=0.1,
+                    local_steps=K, client_opt="sgd")
+    alg = get_algorithm(fed)
+
+    def grad_fn(p, batch):
+        def loss(q):
+            return 0.5 * jnp.sum((q - batch["b"]) ** 2)
+        return jax.value_and_grad(loss)(p)
+
+    update = jax.jit(alg.make_client_update(grad_fn, None))
+    params = jnp.zeros((), jnp.bfloat16)
+    batches = {"b": jnp.ones((K,), jnp.bfloat16)}
+    server_m = jnp.zeros((), jnp.bfloat16)
+    result = update(params, batches, server_m)
+    # fedavg_delta = theta_0 - theta_K = -1 at the true fixed point
+    np.testing.assert_allclose(float(result.payload), -1.0, rtol=0.05)

@@ -1,0 +1,15 @@
+"""fedlint: AST-based static analysis for this repo's JAX invariants.
+
+Self-contained over stdlib ``ast`` — it never imports ``repro`` — so it
+runs in the CI lint lane with no dependencies installed. The rules encode
+the round engine's conventions as lint-time checks: trace purity (FL001),
+donation safety (FL002), the fp32 accumulator contract (FL003), PRNG key
+discipline (FL004), registry/config contracts (FL005), and sharding pins
+on donating jits (FL006). See the README's "Static analysis" section.
+"""
+from fedlint.core import Finding, Rule, all_rules, register_rule
+from fedlint.runner import run, run_paths
+
+__all__ = ["Finding", "Rule", "all_rules", "register_rule", "run",
+           "run_paths"]
+__version__ = "0.1.0"

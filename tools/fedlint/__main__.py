@@ -1,0 +1,5 @@
+"""``python -m fedlint`` entry point."""
+from fedlint.cli import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,300 @@
+"""Traced-region discovery: which functions execute under a JAX trace.
+
+Roots come from four places:
+
+* explicit jit wrapping — ``jax.jit(f)`` / ``jit_donating_store(f, n)``
+  calls and ``@jax.jit`` / ``@partial(jax.jit, ...)`` decorators;
+* one-hop factory resolution — ``round_fn = make_round_program(...)``
+  followed by ``jax.jit(round_fn)`` roots the nested defs that
+  ``make_round_program`` returns (the repo's dominant jit idiom);
+* structural transforms — functions passed to ``vmap``/``grad``/
+  ``lax.scan``/``lax.cond``/… are traced even without a jit in sight;
+* contract roots — traced hook methods of ``FedAlgorithm``/``PayloadCodec``
+  subclasses, plus every closure built inside an algorithm method (client
+  updates are closures returned by ``make_client_update`` and friends).
+
+From the roots, tracing propagates through any call the project can
+resolve (locals, module functions, imports, ``self.`` methods).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from fedlint.project import (FuncInfo, Module, Project, dotted_name,
+                             iter_scope_nodes)
+
+#: Callables whose first argument is jit-compiled.
+JIT_WRAPPERS = ("jax.jit", "jax.pmap")
+#: ``jit_donating_store(fn, argnum, ...)`` — matched by last path segment
+#: so fixture files resolve without the real module on the path.
+DONATING_WRAPPER = "jit_donating_store"
+#: transform canonical name -> positions of traced function arguments.
+TRANSFORM_ARGS: Dict[str, Tuple[int, ...]] = {
+    "jax.vmap": (0,),
+    "jax.grad": (0,),
+    "jax.value_and_grad": (0,),
+    "jax.jacfwd": (0,),
+    "jax.jacrev": (0,),
+    "jax.hessian": (0,),
+    "jax.checkpoint": (0,),
+    "jax.remat": (0,),
+    "jax.eval_shape": (0,),
+    "jax.lax.scan": (0,),
+    "jax.lax.map": (0,),
+    "jax.lax.cond": (1, 2),
+    "jax.lax.while_loop": (0, 1),
+    "jax.lax.fori_loop": (2,),
+    "jax.lax.associative_scan": (0,),
+}
+#: FedAlgorithm methods that run inside the jitted round program.
+ALG_TRACED_HOOKS = frozenset({
+    "broadcast", "init_accum", "payload_accum", "accumulate",
+    "reduce_stacked", "finalize", "finish_cohort", "server_update",
+    "aggregate", "abstract_payload", "abstract_broadcast_extras",
+})
+#: Algorithm methods whose closures are build-time, not traced.
+ALG_HOST_METHODS = frozenset({"validate", "__init__", "burn_algorithm"})
+#: PayloadCodec methods applied to traced payloads inside the round.
+CODEC_TRACED_HOOKS = frozenset({
+    "encode", "decode", "accum_like", "project_precision", "to_accum",
+})
+
+
+def traced_functions(project: Project) -> Dict[int, Tuple[FuncInfo, str]]:
+    """Map ``id(func node) -> (FuncInfo, reason)`` for traced functions."""
+    traced: Dict[int, Tuple[FuncInfo, str]] = {}
+    queue: List[FuncInfo] = []
+
+    def mark(info: Optional[FuncInfo], reason: str):
+        """Record ``info`` as traced (once) and enqueue it for propagation."""
+        if info is not None and id(info.node) not in traced:
+            traced[id(info.node)] = (info, reason)
+            queue.append(info)
+
+    for mod in project.modules.values():
+        _collect_jit_roots(project, mod, mark)
+        _collect_decorator_roots(project, mod, mark)
+    _collect_contract_roots(project, mark)
+    _propagate(project, traced, queue, mark)
+    return traced
+
+
+# ---------------------------------------------------------------------------
+# Root collection
+# ---------------------------------------------------------------------------
+
+def _collect_jit_roots(project: Project, mod: Module, mark):
+    """Roots from jit/transform *call* sites in one module."""
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        canonical = mod.call_canonical(node) or ""
+        where = f"{mod.relpath}:{node.lineno}"
+        if canonical in JIT_WRAPPERS or _is_donating(canonical):
+            if node.args:
+                _mark_target(project, mod, node, node.args[0], mark,
+                             f"jitted at {where}")
+        elif canonical in TRANSFORM_ARGS:
+            short = canonical.rsplit(".", 1)[-1]
+            for pos in TRANSFORM_ARGS[canonical]:
+                if pos < len(node.args):
+                    _mark_target(project, mod, node, node.args[pos], mark,
+                                 f"traced by {short} at {where}")
+
+
+def _is_donating(canonical: str) -> bool:
+    """True for ``jit_donating_store`` however it was imported."""
+    return canonical.rsplit(".", 1)[-1] == DONATING_WRAPPER
+
+
+def _collect_decorator_roots(project: Project, mod: Module, mark):
+    """Roots from ``@jax.jit`` / ``@partial(jax.jit, ...)`` decorators."""
+    for info in mod.func_index.values():
+        for deco in getattr(info.node, "decorator_list", []):
+            target = deco.func if isinstance(deco, ast.Call) else deco
+            canonical = mod.canonical(dotted_name(target)) or ""
+            if canonical in ("functools.partial", "partial") and (
+                    isinstance(deco, ast.Call) and deco.args):
+                canonical = mod.canonical(dotted_name(deco.args[0])) or ""
+            if canonical in JIT_WRAPPERS or canonical in TRANSFORM_ARGS:
+                mark(info, f"decorated with {canonical}")
+
+
+def _collect_contract_roots(project: Project, mark):
+    """Roots from FedAlgorithm/PayloadCodec hook contracts."""
+    for cls in project.subclasses_of("FedAlgorithm", include_marker=True):
+        for name, info in cls.methods.items():
+            if name in ALG_TRACED_HOOKS:
+                mark(info, f"{cls.name}.{name} round hook")
+            if name not in ALG_HOST_METHODS:
+                for nested in _nested_funcs(info):
+                    mark(nested, f"closure built by {cls.name}.{name}")
+    for cls in project.subclasses_of("PayloadCodec", include_marker=True):
+        for name, info in cls.methods.items():
+            if name in CODEC_TRACED_HOOKS:
+                mark(info, f"{cls.name}.{name} codec hook")
+
+
+def _nested_funcs(info: FuncInfo) -> List[FuncInfo]:
+    """FuncInfos for defs/lambdas nested directly under ``info``."""
+    out = []
+    for node in iter_scope_nodes(info.node):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            nested = info.module.func_index.get(id(node))
+            if nested is not None:
+                out.append(nested)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Target resolution
+# ---------------------------------------------------------------------------
+
+def _mark_target(project: Project, mod: Module, call: ast.Call,
+                 target, mark, reason: str):
+    """Resolve the function expression handed to a jit/transform call."""
+    if isinstance(target, ast.Lambda):
+        mark(mod.func_index.get(id(target)), reason)
+        return
+    scope = _enclosing_scope(mod, call)
+    info = project.resolve_call(mod, scope, target)
+    if info is not None:
+        mark(info, reason)
+        return
+    if isinstance(target, ast.Name):
+        for returned in _factory_returns(project, mod, scope, target.id):
+            mark(returned, reason + " (factory-built)")
+        return
+    dotted = dotted_name(target)
+    if dotted and dotted.startswith("self."):
+        for returned in _self_attr_factory(project, mod, scope, dotted):
+            mark(returned, reason + " (factory-built attr)")
+
+
+def _enclosing_scope(mod: Module, node) -> Tuple:
+    """Chain of function nodes lexically enclosing ``node``."""
+    chain = []
+    cur = getattr(node, "parent", None)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.Lambda)):
+            chain.append(cur)
+        cur = getattr(cur, "parent", None)
+    return tuple(reversed(chain))
+
+
+def _factory_returns(project: Project, mod: Module, scope,
+                     name: str) -> List[FuncInfo]:
+    """One-hop factory resolution for ``x = make_thing(...); jit(x)``.
+
+    Finds the assignment of ``name`` from a resolvable call and returns
+    the nested defs the callee returns by name.
+    """
+    bodies = [s.body for s in scope
+              if not isinstance(s, ast.Lambda)] or [mod.tree.body]
+    for body in reversed(bodies):
+        for stmt in _flat_stmts(body):
+            if (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+                    and isinstance(stmt.targets[0], ast.Name)
+                    and stmt.targets[0].id == name
+                    and isinstance(stmt.value, ast.Call)):
+                factory = project.resolve_call(mod, scope, stmt.value.func)
+                if factory is not None:
+                    return _returned_defs(factory)
+    return []
+
+
+def _self_attr_factory(project: Project, mod: Module, scope,
+                       dotted: str) -> List[FuncInfo]:
+    """Factory returns for ``self.attr`` assigned anywhere in the class."""
+    if not scope:
+        return []
+    info = mod.func_index.get(id(scope[-1]))
+    if info is None or info.cls is None:
+        return []
+    for method in info.cls.methods.values():
+        for stmt in _flat_stmts(method.node.body):
+            if (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+                    and dotted_name(stmt.targets[0]) == dotted
+                    and isinstance(stmt.value, ast.Call)):
+                factory = project.resolve_call(mod, (method.node,),
+                                               stmt.value.func)
+                if factory is not None:
+                    return _returned_defs(factory)
+    return []
+
+
+def _flat_stmts(body) -> List:
+    """Statements of a body, flattened through compound statements."""
+    out = []
+    stack = list(body)
+    while stack:
+        stmt = stack.pop()
+        out.append(stmt)
+        for field in ("body", "orelse", "finalbody"):
+            sub = getattr(stmt, field, None)
+            if isinstance(sub, list):
+                stack.extend(s for s in sub if isinstance(s, ast.stmt))
+    return out
+
+
+def _returned_defs(factory: FuncInfo) -> List[FuncInfo]:
+    """Nested defs of ``factory`` that it returns by bare name."""
+    returned = set()
+    for node in iter_scope_nodes(factory.node):
+        if isinstance(node, ast.Return) and isinstance(node.value, ast.Name):
+            returned.add(node.value.id)
+    return [f for f in _nested_funcs(factory) if f.name in returned]
+
+
+# ---------------------------------------------------------------------------
+# Propagation
+# ---------------------------------------------------------------------------
+
+def _propagate(project: Project, traced, queue, mark):
+    """Breadth-first closure over calls resolvable from traced bodies."""
+    while queue:
+        info = queue.pop()
+        reason = f"called from traced `{info.qualname}`"
+        for node in iter_scope_nodes(info.node):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                mark(info.module.func_index.get(id(node)),
+                     f"nested in traced `{info.qualname}`")
+            elif isinstance(node, ast.Call):
+                callee = _resolve_from(project, info, node)
+                if callee is not None:
+                    mark(callee, reason)
+                elif isinstance(node.func, ast.Name):
+                    # a call through a factory-built local closure:
+                    # `cohort_fn = make_cohort_program(...); cohort_fn(...)`
+                    scope = info.scope_chain + (info.node,)
+                    for returned in _factory_returns(
+                            project, info.module, scope, node.func.id):
+                        mark(returned, reason + " (factory-built)")
+
+
+def _resolve_from(project: Project, info: FuncInfo,
+                  call: ast.Call) -> Optional[FuncInfo]:
+    """Resolve a call made inside ``info`` (incl. ``self.method()``)."""
+    scope = info.scope_chain + (info.node,)
+    callee = project.resolve_call(info.module, scope, call.func)
+    if callee is not None:
+        return callee
+    dotted = dotted_name(call.func)
+    if dotted and dotted.startswith("self.") and dotted.count(".") == 1:
+        return _self_method(project, info, dotted.split(".")[1])
+    return None
+
+
+def _self_method(project: Project, info: FuncInfo,
+                 name: str) -> Optional[FuncInfo]:
+    """Resolve ``self.name()`` through the enclosing class and ancestors."""
+    if info.cls is None:
+        return None
+    for cls in project.class_chain(info.cls, stop="object"):
+        if name in cls.methods:
+            return cls.methods[name]
+    return None

@@ -1,0 +1,81 @@
+"""The ``python -m fedlint`` command-line interface."""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from fedlint.core import (SCHEMA_VERSION, all_rules, load_baseline,
+                          split_baselined, write_baseline)
+from fedlint.runner import run
+
+#: Default committed baseline location (repo-root relative).
+DEFAULT_BASELINE = "tools/fedlint/baseline.json"
+
+
+def build_parser() -> argparse.ArgumentParser:
+    """The fedlint argument parser."""
+    p = argparse.ArgumentParser(
+        prog="fedlint",
+        description="AST-based lint for this repo's JAX invariants")
+    p.add_argument("paths", nargs="*", default=["src/repro"],
+                   help="files or directories to analyze")
+    p.add_argument("--json", action="store_true", dest="as_json",
+                   help="machine-readable output")
+    p.add_argument("--baseline", default=DEFAULT_BASELINE,
+                   help="baseline file of grandfathered findings")
+    p.add_argument("--no-baseline", action="store_true",
+                   help="ignore the baseline (report everything as new)")
+    p.add_argument("--write-baseline", action="store_true",
+                   help="write current findings into the baseline and exit 0")
+    p.add_argument("--select", default="",
+                   help="comma-separated rule ids to run (default: all)")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print the registered rules and exit")
+    return p
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    """Run the CLI; returns the process exit code."""
+    args = build_parser().parse_args(argv)
+    if args.list_rules:
+        for rule_id, cls in all_rules().items():
+            print(f"{rule_id} {cls.name}: {cls.description}")
+        return 0
+    select = [r.strip() for r in args.select.split(",") if r.strip()] or None
+    findings = run(args.paths, select=select)
+    if args.write_baseline:
+        write_baseline(args.baseline, findings)
+        print(f"fedlint: wrote {len(findings)} finding(s) to "
+              f"{args.baseline}")
+        return 0
+    baseline = {} if args.no_baseline else load_baseline(args.baseline)
+    new, old = split_baselined(findings, baseline)
+    if args.as_json:
+        _print_json(new, old)
+    else:
+        _print_human(new, old)
+    return 1 if new else 0
+
+
+def _print_human(new, old) -> None:
+    """One line per new finding plus a summary."""
+    for f in new:
+        print(f"{f.path}:{f.line}:{f.col} {f.rule} {f.message}")
+    total = len(new) + len(old)
+    print(f"fedlint: {total} finding(s): {len(new)} new, "
+          f"{len(old)} baselined")
+
+
+def _print_json(new, old) -> None:
+    """Machine-readable report on stdout."""
+    out = {
+        "version": SCHEMA_VERSION,
+        "findings": ([dict(f.to_json(), baselined=False) for f in new]
+                     + [dict(f.to_json(), baselined=True) for f in old]),
+        "summary": {"total": len(new) + len(old), "new": len(new),
+                    "baselined": len(old)},
+    }
+    json.dump(out, sys.stdout, indent=2)
+    sys.stdout.write("\n")

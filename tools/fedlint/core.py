@@ -1,0 +1,159 @@
+"""Finding/Rule primitives, the rule registry, suppressions, and baselines.
+
+Everything here is analyzer-framework plumbing with no knowledge of any
+specific rule: :class:`Finding` is one violation at a source location,
+:class:`Rule` is the pluggable check interface, and the helpers implement
+the two escape hatches — per-line ``# fedlint: disable=RULE`` comments and
+the committed JSON baseline of grandfathered findings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import re
+from pathlib import Path
+from typing import Dict, Iterable, Iterator, List, Sequence, Type
+
+#: Comment markers: ``# fedlint: disable=FL001[,FL002][ -- reason]`` on the
+#: finding's line or on a standalone comment line directly above it.
+_DISABLE_RE = re.compile(
+    r"#\s*fedlint:\s*disable=([A-Z0-9,\s]+?)(?:\s+--.*)?$")
+
+#: Schema version stamped into baselines and ``--json`` output.
+SCHEMA_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location (1-indexed line/col)."""
+
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    @property
+    def key(self) -> str:
+        """Stable baseline key: rule + path + message digest.
+
+        Line numbers are deliberately excluded so unrelated edits above a
+        grandfathered finding do not invalidate the baseline entry.
+        """
+        digest = hashlib.sha1(self.message.encode("utf-8")).hexdigest()[:12]
+        return f"{self.rule}:{self.path}:{digest}"
+
+    def to_json(self) -> dict:
+        """Plain-dict form for ``--json`` output."""
+        return dataclasses.asdict(self)
+
+
+class Rule:
+    """Base class for fedlint rules.
+
+    Subclasses set ``id``/``name``/``description``, implement
+    :meth:`check`, and register themselves with :func:`register_rule`.
+    """
+
+    id: str = "FL000"
+    name: str = "abstract-rule"
+    description: str = ""
+
+    def check(self, project) -> Iterator[Finding]:
+        """Yield findings for ``project`` (a ``fedlint.project.Project``)."""
+        raise NotImplementedError
+
+
+_RULES: Dict[str, Type[Rule]] = {}
+
+
+def register_rule(cls: Type[Rule]) -> Type[Rule]:
+    """Class decorator: add ``cls`` to the global rule registry by id."""
+    if cls.id in _RULES and _RULES[cls.id] is not cls:
+        raise ValueError(f"duplicate fedlint rule id {cls.id!r}")
+    _RULES[cls.id] = cls
+    return cls
+
+
+def all_rules() -> Dict[str, Type[Rule]]:
+    """The registered rules keyed by id (importing the rules package)."""
+    from fedlint import rules  # noqa: F401, PLC0415  (registration side effect)
+    return dict(sorted(_RULES.items()))
+
+
+# ---------------------------------------------------------------------------
+# Suppressions
+# ---------------------------------------------------------------------------
+
+def _disabled_in(line_text: str) -> frozenset:
+    """Rule ids named by a ``fedlint: disable=...`` marker in one line."""
+    m = _DISABLE_RE.search(line_text)
+    if not m:
+        return frozenset()
+    return frozenset(r.strip() for r in m.group(1).split(",") if r.strip())
+
+
+def suppressed_rules(lines: Sequence[str], line: int) -> frozenset:
+    """Rule ids disabled for 1-indexed ``line`` of a file.
+
+    A marker counts if it sits on the line itself or on a standalone
+    comment line directly above it.
+    """
+    ids = set()
+    if 1 <= line <= len(lines):
+        ids |= _disabled_in(lines[line - 1])
+        if line >= 2 and lines[line - 2].lstrip().startswith("#"):
+            ids |= _disabled_in(lines[line - 2])
+    return frozenset(ids)
+
+
+def filter_suppressed(findings: Iterable[Finding],
+                      lines_for_path) -> List[Finding]:
+    """Drop findings whose line carries a matching disable marker.
+
+    ``lines_for_path`` maps a finding path to the file's source lines.
+    """
+    kept = []
+    for f in findings:
+        lines = lines_for_path(f.path)
+        if lines is None or f.rule not in suppressed_rules(lines, f.line):
+            kept.append(f)
+    return kept
+
+
+# ---------------------------------------------------------------------------
+# Baseline
+# ---------------------------------------------------------------------------
+
+def load_baseline(path) -> Dict[str, str]:
+    """Read a baseline file: finding key -> grandfathered message.
+
+    A missing file is an empty baseline; a malformed one raises so CI
+    cannot silently accept garbage.
+    """
+    p = Path(path)
+    if not p.exists():
+        return {}
+    data = json.loads(p.read_text())
+    if not isinstance(data, dict) or "findings" not in data:
+        raise ValueError(f"malformed fedlint baseline {p}: "
+                         f"expected an object with a 'findings' key")
+    return dict(data["findings"])
+
+
+def write_baseline(path, findings: Iterable[Finding]) -> None:
+    """Write every finding into the baseline file at ``path``."""
+    entries = {f.key: f.message for f in findings}
+    payload = {"version": SCHEMA_VERSION,
+               "findings": dict(sorted(entries.items()))}
+    Path(path).write_text(json.dumps(payload, indent=2) + "\n")
+
+
+def split_baselined(findings: Sequence[Finding],
+                    baseline: Dict[str, str]):
+    """Partition findings into (new, baselined) against a baseline map."""
+    new, old = [], []
+    for f in findings:
+        (old if f.key in baseline else new).append(f)
+    return new, old

@@ -1,0 +1,345 @@
+"""Parsed-module and whole-project indexes the rules are written against.
+
+A :class:`Module` wraps one parsed file with the lookups every rule needs:
+parent links, import alias maps (so ``tm.tzeros_like`` canonicalizes to
+``repro.core.tree_math.tzeros_like`` without ever importing anything), and
+an index of every function/lambda/class with its lexical scope chain. A
+:class:`Project` aggregates modules and resolves names across them.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+_SCOPE_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+
+def dotted_name(node) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def iter_scope_nodes(func_node):
+    """Walk a function body without descending into nested functions.
+
+    Nested FunctionDef/Lambda nodes are yielded (so callers can treat them
+    as separate scopes) but their children are not.
+    """
+    if isinstance(func_node, ast.Lambda):
+        stack = [func_node.body]
+    else:
+        stack = list(func_node.body)
+    while stack:
+        node = stack.pop()
+        yield node
+        if not isinstance(node, _SCOPE_NODES):
+            stack.extend(ast.iter_child_nodes(node))
+
+
+def assigned_names(stmt) -> set:
+    """Plain names bound by an assignment-like statement."""
+    names = set()
+    targets = []
+    if isinstance(stmt, ast.Assign):
+        targets = stmt.targets
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign, ast.For)):
+        targets = [stmt.target]
+    elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+        targets = [i.optional_vars for i in stmt.items if i.optional_vars]
+    for t in targets:
+        for sub in ast.walk(t):
+            if isinstance(sub, ast.Name):
+                names.add(sub.id)
+    return names
+
+
+class FuncInfo:
+    """One function/lambda definition with its lexical context."""
+
+    def __init__(self, node, module: "Module", qualname: str,
+                 cls: Optional["ClassInfo"], scope_chain: Tuple):
+        """Record the def ``node`` plus enclosing class and scope chain."""
+        self.node = node
+        self.module = module
+        self.qualname = qualname
+        self.cls = cls
+        #: Enclosing function nodes, outermost first (for local lookups).
+        self.scope_chain = scope_chain
+
+    @property
+    def name(self) -> str:
+        """Bare function name (``<lambda>`` for lambdas)."""
+        return getattr(self.node, "name", "<lambda>")
+
+    def __repr__(self):
+        """Debug representation naming the module and qualname."""
+        return f"FuncInfo({self.module.relpath}:{self.qualname})"
+
+
+class ClassInfo:
+    """One class definition: bases, decorators, and direct methods."""
+
+    def __init__(self, node: ast.ClassDef, module: "Module"):
+        """Index the class ``node``'s bases, decorators, and methods."""
+        self.node = node
+        self.module = module
+        self.name = node.name
+        self.bases = [dotted_name(b) for b in node.bases]
+        self.decorators = node.decorator_list
+        self.methods: Dict[str, FuncInfo] = {}
+
+    def base_names(self) -> List[str]:
+        """Last path segment of each base (``pkg.Base`` -> ``Base``)."""
+        return [b.rsplit(".", 1)[-1] for b in self.bases if b]
+
+
+class Module:
+    """One parsed source file with parent links and symbol indexes."""
+
+    def __init__(self, path: Path, relpath: str, source: str):
+        """Parse ``source`` and build the import/function/class indexes."""
+        self.path = path
+        self.relpath = relpath
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=str(path))
+        self.modname = _modname(relpath)
+        #: ``import numpy as np`` -> {"np": "numpy"}
+        self.import_aliases: Dict[str, str] = {}
+        #: ``from a.b import c as d`` -> {"d": "a.b.c"}
+        self.from_imports: Dict[str, str] = {}
+        self.functions: Dict[str, FuncInfo] = {}   # top-level defs by name
+        self.classes: Dict[str, ClassInfo] = {}    # top-level classes
+        self.func_index: Dict[int, FuncInfo] = {}  # id(node) -> FuncInfo
+        _link_parents(self.tree)
+        self._index_imports()
+        _SymbolIndexer(self).visit(self.tree)
+
+    def _index_imports(self):
+        """Populate the import alias maps from every import statement."""
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.import_aliases[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0])
+            elif isinstance(node, ast.ImportFrom):
+                base = self._from_base(node)
+                for a in node.names:
+                    if a.name != "*":
+                        self.from_imports[a.asname or a.name] = (
+                            f"{base}.{a.name}" if base else a.name)
+
+    def _from_base(self, node: ast.ImportFrom) -> str:
+        """Absolute dotted base of a (possibly relative) from-import."""
+        if not node.level:
+            return node.module or ""
+        parts = self.modname.split(".")
+        parts = parts[: len(parts) - node.level]
+        if node.module:
+            parts.append(node.module)
+        return ".".join(parts)
+
+    def canonical(self, dotted: Optional[str]) -> Optional[str]:
+        """Expand the first segment of ``dotted`` through the import maps.
+
+        ``tm.tzeros_like`` -> ``repro.core.tree_math.tzeros_like``; names
+        with no import mapping pass through unchanged.
+        """
+        if not dotted:
+            return dotted
+        head, _, rest = dotted.partition(".")
+        target = self.from_imports.get(head) or self.import_aliases.get(head)
+        if not target:
+            return dotted
+        return f"{target}.{rest}" if rest else target
+
+    def call_canonical(self, call: ast.Call) -> Optional[str]:
+        """Canonical dotted name of a call's callee (None if dynamic)."""
+        return self.canonical(dotted_name(call.func))
+
+
+class _SymbolIndexer(ast.NodeVisitor):
+    """Single-pass builder of a module's function/class/scope indexes."""
+
+    def __init__(self, module: Module):
+        """Start indexing at module scope."""
+        self.m = module
+        self.scope: List = []       # enclosing function nodes
+        self.cls: Optional[ClassInfo] = None
+        self.qual: List[str] = []
+
+    def _add_func(self, node, name: str):
+        """Register one function/lambda node under the current scope."""
+        qualname = ".".join(self.qual + [name])
+        info = FuncInfo(node, self.m, qualname, self.cls, tuple(self.scope))
+        self.m.func_index[id(node)] = info
+        if not self.scope:
+            if self.cls is None:
+                self.m.functions.setdefault(name, info)
+            else:
+                self.cls.methods.setdefault(name, info)
+        return info
+
+    def _visit_func(self, node):
+        """Index a def and recurse with it pushed onto the scope chain."""
+        self._add_func(node, getattr(node, "name", "<lambda>"))
+        self.scope.append(node)
+        self.qual.append(getattr(node, "name", "<lambda>"))
+        self.generic_visit(node)
+        self.qual.pop()
+        self.scope.pop()
+
+    def visit_FunctionDef(self, node):
+        """Index a function definition."""
+        self._visit_func(node)
+
+    def visit_AsyncFunctionDef(self, node):
+        """Index an async function definition."""
+        self._visit_func(node)
+
+    def visit_Lambda(self, node):
+        """Index a lambda as an anonymous function."""
+        self._visit_func(node)
+
+    def visit_ClassDef(self, node):
+        """Index a class; its methods land in ``ClassInfo.methods``."""
+        info = ClassInfo(node, self.m)
+        if self.cls is None and not self.scope:
+            self.m.classes.setdefault(node.name, info)
+        prev, self.cls = self.cls, info
+        self.qual.append(node.name)
+        self.generic_visit(node)
+        self.qual.pop()
+        self.cls = prev
+
+
+def _link_parents(tree):
+    """Attach ``.parent`` backlinks to every node (lexical-context walks)."""
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child.parent = node
+
+
+def _modname(relpath: str) -> str:
+    """Dotted module name for a repo-relative path (src-layout aware)."""
+    parts = list(Path(relpath).with_suffix("").parts)
+    if parts and parts[0] in ("src", "tools"):
+        parts = parts[1:]
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+class Project:
+    """Every parsed module plus cross-module name resolution."""
+
+    def __init__(self, files: Sequence[Path], root: Path):
+        """Parse ``files`` (skipping unreadable ones) relative to ``root``."""
+        self.root = root
+        self.modules: Dict[str, Module] = {}
+        self.by_modname: Dict[str, Module] = {}
+        for f in files:
+            try:
+                rel = f.resolve().relative_to(root.resolve()).as_posix()
+            except ValueError:
+                rel = f.as_posix()
+            mod = Module(f, rel, f.read_text())
+            self.modules[rel] = mod
+            self.by_modname[mod.modname] = mod
+
+    def lines_for_path(self, relpath: str) -> Optional[List[str]]:
+        """Source lines of an analyzed file (None if not in the project)."""
+        mod = self.modules.get(relpath)
+        return mod.lines if mod else None
+
+    def find_function(self, canonical: str) -> Optional[FuncInfo]:
+        """Top-level function for a canonical dotted name, if analyzed."""
+        if "." not in canonical:
+            return None
+        modname, _, fname = canonical.rpartition(".")
+        mod = self.by_modname.get(modname)
+        return mod.functions.get(fname) if mod else None
+
+    def resolve_call(self, module: Module, scope_chain,
+                     name_node) -> Optional[FuncInfo]:
+        """Resolve a callee Name/Attribute to an analyzed FuncInfo.
+
+        Checks, in order: functions defined in enclosing scopes, module
+        top-level functions, and cross-module from-imports/aliases.
+        """
+        dotted = dotted_name(name_node)
+        if not dotted:
+            return None
+        if "." not in dotted:
+            local = self._local_function(module, scope_chain, dotted)
+            if local is not None:
+                return local
+            if dotted in module.functions:
+                return module.functions[dotted]
+        return self.find_function(module.canonical(dotted))
+
+    def _local_function(self, module: Module, scope_chain,
+                        name: str) -> Optional[FuncInfo]:
+        """A def named ``name`` in any enclosing function scope."""
+        for scope in reversed(scope_chain or ()):
+            for node in iter_scope_nodes(scope):
+                if (isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+                        and node.name == name):
+                    return module.func_index.get(id(node))
+        return None
+
+    def all_classes(self) -> List[ClassInfo]:
+        """Every top-level class in the project."""
+        return [c for m in self.modules.values() for c in m.classes.values()]
+
+    def subclasses_of(self, marker: str,
+                      include_marker: bool = False) -> List[ClassInfo]:
+        """Classes whose transitive base-name chain reaches ``marker``.
+
+        Resolution is by simple class name (last dotted segment), which is
+        what makes fixture files with stub base classes analyzable without
+        importing anything.
+        """
+        by_name = {c.name: c for c in self.all_classes()}
+        out = []
+        for cls in by_name.values():
+            if cls.name == marker:
+                if include_marker:
+                    out.append(cls)
+                continue
+            seen, frontier = set(), list(cls.base_names())
+            while frontier:
+                base = frontier.pop()
+                if base in seen:
+                    continue
+                seen.add(base)
+                if base == marker:
+                    out.append(cls)
+                    frontier = []
+                elif base in by_name:
+                    frontier.extend(by_name[base].base_names())
+        return out
+
+    def class_chain(self, cls: ClassInfo, stop: str) -> List[ClassInfo]:
+        """``cls`` plus its project-resolvable ancestors, up to ``stop``.
+
+        The ``stop`` class itself is excluded — its defaults are the
+        contract, not an implementation of it.
+        """
+        by_name = {c.name: c for c in self.all_classes()}
+        chain, frontier, seen = [], [cls.name], set()
+        while frontier:
+            name = frontier.pop(0)
+            if name in seen or name == stop or name not in by_name:
+                continue
+            seen.add(name)
+            chain.append(by_name[name])
+            frontier.extend(by_name[name].base_names())
+        return chain

@@ -1,0 +1,9 @@
+"""Rule modules; importing this package registers every rule.
+
+Each module holds one rule, named after its id. See the repo README's
+"Static analysis" section for the invariant each rule guards and the
+PR/bug that motivated it.
+"""
+from fedlint.rules import (fl001_host_sync, fl002_donation,  # noqa: F401
+                           fl003_accumulator, fl004_prng, fl005_registry,
+                           fl006_shardings)

@@ -1,0 +1,116 @@
+"""FL001: host synchronization inside jit-traced code.
+
+The round engine's performance contract (PR 1's single-jit round, PR 5's
+device store) is that nothing inside the traced round forces a device
+sync or falls back to host numpy: ``np.*`` calls, ``.item()``,
+``float()``/``int()`` on traced values, ``jax.device_get``, and ``print``
+all either fail at trace time or silently graduate to per-round blocking
+transfers. This rule walks the call graph from every jit/transform entry
+point (see ``fedlint.callgraph``) and flags host operations in traced
+bodies.
+
+Exemptions: shape/static derivations (``int(x.shape[0])``, ``.ndim``,
+``.size``, ``len``), constants, and code lexically guarded by an
+``isinstance(..., Tracer)`` check (the ``core.server.normalized_weights``
+idiom, which runs host-side only when the value is concrete).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from fedlint.callgraph import traced_functions
+from fedlint.core import Finding, Rule, register_rule
+from fedlint.project import dotted_name, iter_scope_nodes
+
+#: Builtin conversions that force a concrete (host) value.
+_HOST_CASTS = frozenset({"float", "int", "bool"})
+#: Attribute accesses that make an int() / float() shape-derived.
+_STATIC_ATTRS = frozenset({"shape", "ndim", "size", "dtype"})
+
+
+@register_rule
+class HostSyncInJit(Rule):
+    """Flag host-sync operations reachable from jit entry points."""
+
+    id = "FL001"
+    name = "host-sync-in-jit"
+    description = ("no numpy calls, .item(), float()/int() on traced "
+                   "values, jax.device_get, or print inside jitted code")
+
+    def check(self, project) -> Iterator[Finding]:
+        """Walk every traced function body for host operations."""
+        for info, reason in traced_functions(project).values():
+            for node in iter_scope_nodes(info.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                op = self._host_op(info.module, node)
+                if op is not None and not _tracer_guarded(node):
+                    yield Finding(
+                        self.id, info.module.relpath, node.lineno,
+                        node.col_offset + 1,
+                        f"{op} inside jit-traced `{info.qualname}` "
+                        f"({reason}); host sync breaks the traced round")
+
+    def _host_op(self, module, call: ast.Call) -> Optional[str]:
+        """Describe the host operation a call performs, if any."""
+        canonical = module.call_canonical(call) or ""
+        if canonical.startswith("numpy."):
+            return f"numpy call `{dotted_name(call.func)}`"
+        if canonical == "jax.device_get":
+            return "`jax.device_get`"
+        if isinstance(call.func, ast.Attribute):
+            if call.func.attr == "item":
+                return "`.item()`"
+            if call.func.attr == "block_until_ready":
+                return "`.block_until_ready()`"
+        if isinstance(call.func, ast.Name):
+            if call.func.id == "print":
+                return "`print` (use jax.debug.print)"
+            if call.func.id in _HOST_CASTS and not _static_arg(call):
+                return f"`{call.func.id}()` on a traced value"
+        return None
+
+
+def _static_arg(call: ast.Call) -> bool:
+    """True when a float()/int() argument is constant or shape-derived.
+
+    Shape-derived: any ``.shape``/``.ndim``/``.size`` access or ``len()``
+    call. Attribute-only expressions (``cfg.expansion * cfg.d_model``,
+    where every Name is just an attribute base) are treated as static
+    config reads — traced values in this codebase are locals, not object
+    attributes.
+    """
+    if not call.args:
+        return True
+    arg = call.args[0]
+    bare_name = False
+    for node in ast.walk(arg):
+        if isinstance(node, ast.Attribute) and node.attr in _STATIC_ATTRS:
+            return True
+        if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                and node.func.id == "len"):
+            return True
+        if isinstance(node, ast.Name) and not _is_attr_base(node):
+            bare_name = True
+        if isinstance(node, (ast.Call, ast.Subscript)):
+            bare_name = True
+    return not bare_name
+
+
+def _is_attr_base(node) -> bool:
+    """True when a Name only serves as the base of an attribute read."""
+    parent = getattr(node, "parent", None)
+    return isinstance(parent, ast.Attribute) and parent.value is node
+
+
+def _tracer_guarded(node) -> bool:
+    """True inside an ``if ... isinstance(..., Tracer)``-guarded block."""
+    cur = getattr(node, "parent", None)
+    while cur is not None and not isinstance(cur, (ast.FunctionDef,
+                                                   ast.AsyncFunctionDef,
+                                                   ast.Lambda)):
+        if isinstance(cur, ast.If) and "Tracer" in ast.unparse(cur.test):
+            return True
+        cur = getattr(cur, "parent", None)
+    return False

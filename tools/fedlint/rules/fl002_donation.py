@@ -1,0 +1,197 @@
+"""FL002: a donated buffer referenced after the donating call.
+
+``jit_donating_store`` (PR 5/PR 7) and ``jax.jit(..., donate_argnums=)``
+invalidate the donated argument's buffer: any later read sees freed (or
+aliased) memory and XLA only sometimes warns. The correct idiom rebinds
+the name from the call's result — ``state = apply(state, ...)`` — which
+this rule treats as the reassignment that un-poisons the name.
+
+The analysis is lexical and per-scope: a name passed at a donated
+position becomes poisoned after the donating statement; any later load
+before a rebinding is flagged. Loop bodies are processed twice so a
+donation in iteration *i* poisons a read in iteration *i+1*.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Set, Tuple
+
+from fedlint.core import Finding, Rule, register_rule
+from fedlint.project import assigned_names, dotted_name
+
+_FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+
+@register_rule
+class DonationAfterUse(Rule):
+    """Flag reads of a name after it was passed at a donated position."""
+
+    id = "FL002"
+    name = "donation-after-use"
+    description = ("a donated argument must not be referenced after the "
+                   "donating call; rebind it from the call's result")
+
+    def check(self, project) -> Iterator[Finding]:
+        """Simulate each function scope against its donating wrappers."""
+        for mod in project.modules.values():
+            wrappers = _donating_wrappers(mod)
+            if not wrappers:
+                continue
+            scopes = [info.node for info in mod.func_index.values()
+                      if not isinstance(info.node, ast.Lambda)]
+            for scope in scopes:
+                sim = _Simulator(self.id, mod, wrappers)
+                sim.run(scope.body)
+                yield from sim.findings
+
+
+def _donating_wrappers(mod) -> Dict[str, Set[int]]:
+    """Names bound to donating callables -> their donated arg positions.
+
+    Tracks both plain assignments (``apply = jit_donating_store(f, 0)``)
+    and ``self.attr = ...`` bindings (checked under the textual name
+    ``self.attr``, which is how methods call them).
+    """
+    wrappers: Dict[str, Set[int]] = {}
+    for node in ast.walk(mod.tree):
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.value, ast.Call)):
+            continue
+        target = dotted_name(node.targets[0])
+        argnums = _donated_argnums(mod, node.value)
+        if target and argnums:
+            wrappers.setdefault(target, set()).update(argnums)
+    return wrappers
+
+
+def _donated_argnums(mod, call: ast.Call) -> Set[int]:
+    """Donated argument positions of a wrapper-constructing call."""
+    canonical = mod.call_canonical(call) or ""
+    if canonical.rsplit(".", 1)[-1] == "jit_donating_store":
+        if len(call.args) >= 2 and isinstance(call.args[1], ast.Constant):
+            if isinstance(call.args[1].value, int):
+                return {call.args[1].value}
+        return set()
+    if canonical in ("jax.jit", "jax.pmap"):
+        for kw in call.keywords:
+            if kw.arg == "donate_argnums":
+                return _const_ints(kw.value)
+    return set()
+
+
+def _const_ints(node) -> Set[int]:
+    """Constant ints from an int or tuple-of-ints expression."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return {node.value}
+    if isinstance(node, ast.Tuple):
+        return {e.value for e in node.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, int)}
+    return set()
+
+
+class _Simulator:
+    """Linear walk of a statement list tracking poisoned (donated) names."""
+
+    def __init__(self, rule_id: str, mod, wrappers: Dict[str, Set[int]]):
+        """Track donations against ``wrappers`` in module ``mod``."""
+        self.rule_id = rule_id
+        self.mod = mod
+        self.wrappers = wrappers
+        self.poisoned: Dict[str, int] = {}   # name -> donation line
+        self.findings: List[Finding] = []
+        self.flagged: Set[Tuple[int, int]] = set()
+
+    def run(self, body: List[ast.stmt]):
+        """Process statements in order; loops twice for cross-iteration."""
+        for stmt in body:
+            self._step(stmt)
+
+    def _step(self, stmt: ast.stmt):
+        """Process one statement: loads, donations, then rebindings."""
+        if isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+            self._flag_loads(stmt, exclude_bodies=True)
+            for _ in range(2):
+                self.run(stmt.body)
+            self.run(stmt.orelse)
+            return
+        if isinstance(stmt, (ast.If, ast.With, ast.AsyncWith, ast.Try)):
+            self._flag_loads(stmt, exclude_bodies=True)
+            for field in ("body", "orelse", "finalbody"):
+                self.run(getattr(stmt, field, []) or [])
+            for handler in getattr(stmt, "handlers", []):
+                self.run(handler.body)
+            self._unpoison(stmt)
+            return
+        self._flag_loads(stmt)
+        for name, line in self._donations(stmt):
+            self.poisoned.setdefault(name, line)
+        self._unpoison(stmt)
+
+    def _donations(self, stmt) -> List[Tuple[str, int]]:
+        """(name, line) pairs donated by calls inside ``stmt``."""
+        out = []
+        for node in _walk_scope(stmt):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = dotted_name(node.func)
+            for pos in self.wrappers.get(callee or "", ()):
+                if pos < len(node.args):
+                    name = dotted_name(node.args[pos])
+                    if name:
+                        out.append((name, node.lineno))
+        return out
+
+    def _flag_loads(self, stmt, exclude_bodies: bool = False):
+        """Flag loads of currently-poisoned names inside ``stmt``."""
+        if not self.poisoned:
+            return
+        nodes = (_header_nodes(stmt) if exclude_bodies
+                 else list(_walk_scope(stmt)))
+        for node in nodes:
+            name = dotted_name(node) if isinstance(
+                node, (ast.Name, ast.Attribute)) else None
+            if name in self.poisoned and _is_load(node):
+                key = (node.lineno, node.col_offset)
+                if key not in self.flagged:
+                    self.flagged.add(key)
+                    self.findings.append(Finding(
+                        self.rule_id, self.mod.relpath, node.lineno,
+                        node.col_offset + 1,
+                        f"`{name}` is read after being donated at line "
+                        f"{self.poisoned[name]}; its buffer is invalid — "
+                        f"rebind it from the donating call's result"))
+
+    def _unpoison(self, stmt):
+        """Clear poison for names (re)bound by ``stmt``."""
+        for name in assigned_names(stmt):
+            self.poisoned.pop(name, None)
+
+
+def _header_nodes(stmt) -> List:
+    """Nodes of a compound statement's header (test/iter), not its body."""
+    headers = []
+    for field in ("test", "iter", "items"):
+        val = getattr(stmt, field, None)
+        if isinstance(val, ast.AST):
+            headers.extend(ast.walk(val))
+        elif isinstance(val, list):
+            for item in val:
+                headers.extend(ast.walk(item))
+    return headers
+
+
+def _is_load(node) -> bool:
+    """True when the outermost Name of an expression is a load."""
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return isinstance(getattr(node, "ctx", None), ast.Load)
+
+
+def _walk_scope(node):
+    """Walk a subtree without descending into nested function bodies."""
+    stack = [node]
+    while stack:
+        cur = stack.pop()
+        yield cur
+        if not isinstance(cur, _FUNC_NODES):
+            stack.extend(ast.iter_child_nodes(cur))

@@ -1,0 +1,188 @@
+"""FL003: the fp32 accumulator contract for algorithms and codecs.
+
+The aggregation path accumulates client payloads in fp32 regardless of
+``fed.delta_dtype`` and casts exactly once, in ``finalize`` — the bf16
+weight-cast bug fixed in PR 2 (and re-fixed for the sequential fold in
+PR 4) came from violating this. Three checks:
+
+* accumulator constructors (``init_accum`` / ``accum_like`` /
+  ``accum_zeros``) must pin their zeros to ``jnp.float32``;
+* the linear path (``payload_accum`` / ``accumulate`` /
+  ``reduce_stacked``) must not cast out of fp32 — ``.astype(acc.dtype)``
+  and casts *to* fp32 are fine, the terminal cast belongs in
+  ``finalize``;
+* ``lax.scan`` carries seeded from a zeros tree inside client-update
+  closures must pin fp32 explicitly — an un-pinned ``tzeros_like(p)``
+  inherits the (possibly bf16) param dtype and re-rounds every step.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional
+
+from fedlint.core import Finding, Rule, register_rule
+from fedlint.project import dotted_name, iter_scope_nodes
+
+#: Methods that construct accumulator zeros.
+_INIT_METHODS = frozenset({"init_accum", "accum_like", "accum_zeros"})
+#: Methods forming the linear accumulator path (casts forbidden).
+_LINEAR_METHODS = frozenset({"payload_accum", "accumulate",
+                             "reduce_stacked"})
+#: Zero-constructing callables (by canonical name / last segment).
+_ZERO_CALLS = frozenset({"tzeros_like", "zeros", "zeros_like"})
+
+
+@register_rule
+class Fp32Accumulator(Rule):
+    """Enforce fp32 accumulators with one terminal cast in finalize."""
+
+    id = "FL003"
+    name = "fp32-accumulator"
+    description = ("accumulator init and scan carries must be fp32 with a "
+                   "single terminal cast in finalize")
+
+    def check(self, project) -> Iterator[Finding]:
+        """Check algorithm and codec classes in the project."""
+        classes = (project.subclasses_of("FedAlgorithm", True)
+                   + project.subclasses_of("PayloadCodec", True)
+                   + project.subclasses_of("CodecChain", True))
+        for cls in classes:
+            for name, info in cls.methods.items():
+                if name in _INIT_METHODS:
+                    yield from self._check_zeros(info, ctx=f"{cls.name}.{name}")
+                if name in _LINEAR_METHODS:
+                    yield from self._check_casts(info, ctx=f"{cls.name}.{name}")
+                yield from self._check_scan_carries(info, cls)
+
+    # -- accumulator constructors -------------------------------------------
+    def _check_zeros(self, info, ctx: str) -> Iterator[Finding]:
+        """Every zeros call in an init method must pin jnp.float32."""
+        for node in ast.walk(info.node):
+            if isinstance(node, ast.Call) and _is_zero_call(info.module, node):
+                problem = _dtype_problem(node)
+                if problem:
+                    yield Finding(
+                        self.id, info.module.relpath, node.lineno,
+                        node.col_offset + 1,
+                        f"accumulator zeros in `{ctx}` {problem}; the "
+                        f"accumulator space is fp32 by contract "
+                        f"(finalize owns the single cast)")
+
+    # -- linear path casts ---------------------------------------------------
+    def _check_casts(self, info, ctx: str) -> Iterator[Finding]:
+        """No casts out of fp32 on the linear accumulator path."""
+        for node in ast.walk(info.node):
+            target = _cast_target(info.module, node)
+            if target is not None and not _cast_ok(target):
+                yield Finding(
+                    self.id, info.module.relpath, node.lineno,
+                    node.col_offset + 1,
+                    f"cast to `{ast.unparse(target)}` in `{ctx}` leaves "
+                    f"the fp32 accumulator space; the terminal cast "
+                    f"belongs in finalize")
+
+    # -- scan carries --------------------------------------------------------
+    def _check_scan_carries(self, info, cls) -> Iterator[Finding]:
+        """Zeros-seeded ``lax.scan`` carries must pin fp32."""
+        for func_node in [info.node] + _nested_nodes(info):
+            for node in iter_scope_nodes(func_node):
+                if not (isinstance(node, ast.Call)
+                        and info.module.call_canonical(node)
+                        == "jax.lax.scan" and len(node.args) >= 2):
+                    continue
+                for zeros in _zero_inits(info.module, func_node,
+                                         node.args[1]):
+                    problem = _dtype_problem(zeros)
+                    if problem:
+                        yield Finding(
+                            self.id, info.module.relpath, zeros.lineno,
+                            zeros.col_offset + 1,
+                            f"lax.scan carry in `{cls.name}` seeded by "
+                            f"zeros that {problem}; accumulate in fp32 "
+                            f"and cast once after the scan")
+
+
+def _is_zero_call(module, call: ast.Call) -> bool:
+    """True for tzeros_like / jnp.zeros / jnp.zeros_like calls."""
+    canonical = module.call_canonical(call) or ""
+    return canonical.rsplit(".", 1)[-1] in _ZERO_CALLS
+
+
+def _dtype_problem(call: ast.Call) -> Optional[str]:
+    """Why a zeros call violates the fp32 pin (None when compliant)."""
+    dtype = None
+    if len(call.args) >= 2:
+        dtype = call.args[1]
+    for kw in call.keywords:
+        if kw.arg == "dtype":
+            dtype = kw.value
+    if dtype is None:
+        return "inherit the input dtype (no dtype argument)"
+    if not _is_fp32(dtype):
+        return f"pin `{ast.unparse(dtype)}` instead of jnp.float32"
+    return None
+
+
+def _is_fp32(node) -> bool:
+    """True when a dtype expression is statically float32."""
+    if isinstance(node, ast.Constant):
+        return node.value in ("float32", "f32")
+    name = dotted_name(node) or ""
+    return name.rsplit(".", 1)[-1] == "float32"
+
+
+def _cast_target(module, node) -> Optional[ast.AST]:
+    """The dtype expression of an ``.astype``/``tcast`` call, if any."""
+    if not isinstance(node, ast.Call):
+        return None
+    if (isinstance(node.func, ast.Attribute) and node.func.attr == "astype"
+            and node.args):
+        return node.args[0]
+    canonical = module.call_canonical(node) or ""
+    if canonical.rsplit(".", 1)[-1] == "tcast" and len(node.args) >= 2:
+        return node.args[1]
+    return None
+
+
+def _cast_ok(target) -> bool:
+    """Casts to fp32 or to the accumulator's own dtype are allowed."""
+    if _is_fp32(target):
+        return True
+    name = dotted_name(target) or ""
+    return name.endswith(".dtype")
+
+
+def _nested_nodes(info) -> List[ast.AST]:
+    """All function nodes nested (at any depth) under ``info``."""
+    out = []
+    for node in ast.walk(info.node):
+        if node is not info.node and isinstance(
+                node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            out.append(node)
+    return out
+
+
+def _zero_inits(module, func_node, init) -> List[ast.Call]:
+    """Zeros calls seeding a scan init (direct, via Name, or in a tuple)."""
+    out: List[ast.Call] = []
+    elements = init.elts if isinstance(init, ast.Tuple) else [init]
+    for el in elements:
+        if isinstance(el, ast.Call) and _is_zero_call(module, el):
+            out.append(el)
+        elif isinstance(el, ast.Name):
+            assigned = _assignment_value(func_node, el.id)
+            if (isinstance(assigned, ast.Call)
+                    and _is_zero_call(module, assigned)):
+                out.append(assigned)
+    return out
+
+
+def _assignment_value(func_node, name: str) -> Optional[ast.AST]:
+    """The value last assigned to ``name`` in ``func_node``'s own scope."""
+    value = None
+    for node in iter_scope_nodes(func_node):
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id == name):
+            value = node.value
+    return value

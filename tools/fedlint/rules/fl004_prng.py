@@ -1,0 +1,169 @@
+"""FL004: a PRNG key consumed twice without an intervening split.
+
+JAX key discipline: a key feeds exactly one sampler (or is split /
+folded into fresh subkeys); reusing a consumed key correlates draws that
+should be independent — silently, since nothing fails at runtime. This
+rule tracks, per function scope, which key *expressions* (``rng``,
+``ks[0]``, …) have been consumed by a ``jax.random.*`` sampler and flags
+
+* a second sampler consumption of the same expression, and
+* a later ``split``/``fold_in`` of an already-consumed expression (the
+  split belongs *before* the first consumption);
+* a sampler consuming a loop-invariant key name inside a loop body
+  (every iteration would redraw the same numbers).
+
+Reassigning the key's base name (``rng, sub = split(rng)``) resets it.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional
+
+from fedlint.core import Finding, Rule, register_rule
+from fedlint.project import assigned_names
+
+#: jax.random functions that derive keys rather than consuming entropy.
+_DERIVERS = frozenset({"split", "fold_in", "key", "PRNGKey", "key_data",
+                       "wrap_key_data", "clone"})
+_FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+
+@register_rule
+class PrngKeyReuse(Rule):
+    """Flag PRNG keys consumed more than once without a split."""
+
+    id = "FL004"
+    name = "prng-key-reuse"
+    description = ("a PRNGKey/fold_in value must be consumed by at most "
+                   "one sampler; split first")
+
+    def check(self, project) -> Iterator[Finding]:
+        """Run the per-scope key tracker over every function."""
+        for mod in project.modules.values():
+            for info in mod.func_index.values():
+                if isinstance(info.node, ast.Lambda):
+                    continue
+                yield from _Tracker(self.id, mod).scan(info.node)
+
+
+class _Tracker:
+    """Tracks consumed key expressions through one function scope."""
+
+    def __init__(self, rule_id: str, mod):
+        """Track key consumption for module ``mod``."""
+        self.rule_id = rule_id
+        self.mod = mod
+        self.consumed: Dict[str, int] = {}   # key expr text -> line
+        self.findings: List[Finding] = []
+
+    def scan(self, func_node) -> List[Finding]:
+        """Process the scope's statements in source order."""
+        for stmt in func_node.body:
+            self._stmt(stmt)
+        return self.findings
+
+    def _stmt(self, stmt):
+        """Handle one statement: events in order, then rebind resets."""
+        if isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+            self._events(stmt, loop=stmt)
+            self._reset(assigned_names(stmt))
+            return
+        if hasattr(stmt, "body") and not isinstance(stmt, _FUNC_NODES):
+            for field in ("body", "orelse", "finalbody"):
+                for sub in getattr(stmt, field, []) or []:
+                    self._stmt(sub)
+            for handler in getattr(stmt, "handlers", []):
+                for sub in handler.body:
+                    self._stmt(sub)
+            return
+        self._events(stmt, loop=None)
+        self._reset(assigned_names(stmt))
+
+    def _events(self, stmt, loop):
+        """Replay sampler/deriver calls inside ``stmt`` in source order."""
+        calls = [n for n in _walk_scope(stmt) if isinstance(n, ast.Call)]
+        calls.sort(key=lambda c: (c.lineno, c.col_offset))
+        loop_assigned = assigned_names(loop) if loop is not None else set()
+        if loop is not None:
+            for sub in ast.walk(loop):
+                loop_assigned |= assigned_names(sub)
+        for call in calls:
+            kind = self._random_kind(call)
+            if kind is None or not call.args:
+                continue
+            expr = ast.unparse(call.args[0])
+            if kind == "sampler":
+                self._consume(call, expr, loop, loop_assigned)
+            elif expr in self.consumed:
+                self._flag(call, f"`{kind}({expr}, ...)` derives from a key "
+                                 f"already consumed at line "
+                                 f"{self.consumed[expr]}; split before the "
+                                 f"first consumption")
+
+    def _consume(self, call, expr: str, loop, loop_assigned):
+        """Record a sampler consumption, flagging reuse."""
+        if expr in self.consumed:
+            self._flag(call, f"PRNG key `{expr}` already consumed at line "
+                             f"{self.consumed[expr]} is consumed again; "
+                             f"split it instead")
+            return
+        base = _base_name(call.args[0])
+        if (loop is not None and isinstance(call.args[0], ast.Name)
+                and base not in loop_assigned):
+            self._flag(call, f"PRNG key `{expr}` is consumed inside a loop "
+                             f"without a per-iteration split; every "
+                             f"iteration redraws the same numbers")
+        self.consumed[expr] = call.lineno
+
+    def _random_kind(self, call) -> Optional[str]:
+        """'sampler', a deriver's name, or None for non-jax.random calls."""
+        canonical = self.mod.call_canonical(call) or ""
+        head, _, tail = canonical.rpartition(".")
+        if head == "jax.random":
+            return tail if tail in _DERIVERS else "sampler"
+        if tail in ("fold_in", "split") and not head:
+            return tail  # from-imported derivers
+        return None
+
+    def _reset(self, names):
+        """Forget consumptions whose base name was rebound."""
+        if names:
+            self.consumed = {e: ln for e, ln in self.consumed.items()
+                             if _expr_base(e) not in names}
+
+    def _flag(self, call, message: str):
+        """Emit one finding at the offending call."""
+        self.findings.append(Finding(
+            self.rule_id, self.mod.relpath, call.lineno,
+            call.col_offset + 1, message))
+
+
+def _base_name(node) -> Optional[str]:
+    """Leftmost data name of a key expression (``ks[0]`` -> ``ks``)."""
+    while True:
+        if isinstance(node, ast.Name):
+            return node.id
+        if isinstance(node, (ast.Subscript, ast.Attribute, ast.Starred)):
+            node = node.value
+        elif isinstance(node, ast.Call) and node.args:
+            node = node.args[0]
+        else:
+            return None
+
+
+def _expr_base(expr: str) -> str:
+    """Base identifier of a stored key-expression string."""
+    for i, ch in enumerate(expr):
+        if not (ch.isalnum() or ch == "_"):
+            return expr[:i]
+    return expr
+
+
+def _walk_scope(node):
+    """Walk a subtree without descending into nested functions."""
+    stack = [node]
+    while stack:
+        cur = stack.pop()
+        yield cur
+        if not isinstance(cur, _FUNC_NODES):
+            stack.extend(ast.iter_child_nodes(cur))

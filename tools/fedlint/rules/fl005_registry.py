@@ -1,0 +1,216 @@
+"""FL005: registry and FedConfig contract drift.
+
+Three contracts that otherwise only fail at run (or accounting) time:
+
+* a ``@register_algorithm`` class that is stateful must define
+  ``init_client_state``; one that reshapes its payload (overriding any of
+  the accumulator-space hooks) must define ``abstract_payload``; one that
+  overrides ``broadcast`` must define ``abstract_broadcast_extras`` —
+  otherwise the bytes accounting silently reports the wrong uplink or the
+  state store has no template;
+* every attribute read off a ``FedConfig``-typed expression must name a
+  declared field/property (typos read as ``AttributeError`` deep inside a
+  traced round otherwise);
+* every ``FedConfig`` field that is *read* anywhere must also be
+  *validated by name* somewhere in the validation scope —
+  ``__post_init__`` / ``_validate_*`` / an algorithm ``validate()`` —
+  so bad knob values surface at construction, not trace time.
+
+Fed-typed expressions are recognized by convention: a name or parameter
+called ``fed``, anything assigned from ``*.fed``, and ``self`` inside
+``FedConfig``'s own methods.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from fedlint.core import Finding, Rule, register_rule
+from fedlint.project import ClassInfo, Project, dotted_name
+
+#: Overriding any of these means the payload left bare-delta space.
+_PAYLOAD_HOOKS = frozenset({"init_accum", "payload_accum", "accumulate",
+                            "reduce_stacked"})
+#: Attributes allowed on fed-typed expressions beyond declared fields.
+_DUNDER_OK = frozenset({"__class__", "__dict__", "replace"})
+
+
+@register_rule
+class RegistryContractDrift(Rule):
+    """Flag algorithm-registry and FedConfig contract violations."""
+
+    id = "FL005"
+    name = "registry-contract-drift"
+    description = ("registered algorithms must declare their payload/state "
+                   "contracts; FedConfig fields must be validated by name")
+
+    def check(self, project) -> Iterator[Finding]:
+        """Run the class-contract and config-field checks."""
+        yield from self._check_algorithm_contracts(project)
+        cfg = _find_fedconfig(project)
+        if cfg is not None:
+            yield from self._check_config_fields(project, cfg)
+
+    # -- (a) registered algorithm class contracts ---------------------------
+    def _check_algorithm_contracts(self, project) -> Iterator[Finding]:
+        """Stateful/payload/broadcast contracts of registered classes."""
+        for cls in project.subclasses_of("FedAlgorithm"):
+            if not _is_registered(cls):
+                continue
+            chain = project.class_chain(cls, stop="FedAlgorithm")
+            defined = {m for c in chain for m in c.methods}
+            loc = (cls.module.relpath, cls.node.lineno)
+            if _is_stateful(chain) and "init_client_state" not in defined:
+                yield self._cls_finding(
+                    cls, f"stateful algorithm `{cls.name}` does not define "
+                         f"init_client_state; the client store has no "
+                         f"state template", loc)
+            if defined & _PAYLOAD_HOOKS and "abstract_payload" not in defined:
+                yield self._cls_finding(
+                    cls, f"`{cls.name}` reshapes its payload "
+                         f"({sorted(defined & _PAYLOAD_HOOKS)}) but does "
+                         f"not define abstract_payload; bytes accounting "
+                         f"will report the wrong uplink", loc)
+            if ("broadcast" in defined
+                    and "abstract_broadcast_extras" not in defined):
+                yield self._cls_finding(
+                    cls, f"`{cls.name}` overrides broadcast but not "
+                         f"abstract_broadcast_extras; downlink accounting "
+                         f"will miss the extras", loc)
+
+    def _cls_finding(self, cls: ClassInfo, message: str, loc) -> Finding:
+        """Finding anchored at the class definition line."""
+        return Finding(self.id, loc[0], loc[1], 1, message)
+
+    # -- (b)+(c) FedConfig field reads --------------------------------------
+    def _check_config_fields(self, project, cfg: ClassInfo
+                             ) -> Iterator[Finding]:
+        """Unknown-field reads and read-but-unvalidated fields."""
+        fields = _config_fields(cfg)
+        allowed = fields | set(cfg.methods) | _DUNDER_OK
+        validation_funcs = _validation_scope(project, cfg)
+        validated: Set[str] = set()
+        reads: Dict[str, Tuple[str, int]] = {}
+        for mod in project.modules.values():
+            for attr, node, in_validation in _fed_attr_reads(
+                    mod, cfg, validation_funcs):
+                if attr not in allowed:
+                    yield Finding(
+                        self.id, mod.relpath, node.lineno,
+                        node.col_offset + 1,
+                        f"unknown FedConfig field `{attr}`; declared "
+                        f"fields: check configs/base.py")
+                elif attr in fields:
+                    if in_validation:
+                        validated.add(attr)
+                    else:
+                        reads.setdefault(attr, (mod.relpath, node.lineno))
+        for field in sorted(set(reads) - validated):
+            path, line = reads[field]
+            yield Finding(
+                self.id, path, line, 1,
+                f"FedConfig.{field} is read here but never validated by "
+                f"name in __post_init__/_validate_*/validate(); bad values "
+                f"surface only at trace time")
+
+
+# ---------------------------------------------------------------------------
+# FedConfig discovery
+# ---------------------------------------------------------------------------
+
+def _find_fedconfig(project: Project) -> Optional[ClassInfo]:
+    """The class literally named FedConfig, if analyzed."""
+    for cls in project.all_classes():
+        if cls.name == "FedConfig":
+            return cls
+    return None
+
+
+def _config_fields(cfg: ClassInfo) -> Set[str]:
+    """Declared dataclass fields (annotated class-level names)."""
+    fields = set()
+    for stmt in cfg.node.body:
+        if isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target,
+                                                          ast.Name):
+            fields.add(stmt.target.id)
+    return fields
+
+
+def _validation_scope(project: Project, cfg: ClassInfo) -> Set[int]:
+    """id() of every function node that counts as validation code."""
+    funcs: Set[int] = set()
+    for name, info in cfg.methods.items():
+        if name == "__post_init__" or name.startswith("_validate"):
+            funcs.add(id(info.node))
+    for cls in project.subclasses_of("FedAlgorithm", include_marker=True):
+        if "validate" in cls.methods:
+            funcs.add(id(cls.methods["validate"].node))
+    return funcs
+
+
+# ---------------------------------------------------------------------------
+# Fed-typed expression scanning
+# ---------------------------------------------------------------------------
+
+def _fed_attr_reads(mod, cfg: ClassInfo, validation_funcs: Set[int]):
+    """Yield (attr, node, in_validation) for reads off fed-typed exprs."""
+    in_cfg_module = cfg.module is mod
+    for info in mod.func_index.values():
+        fed_names = _fed_locals(info)
+        if in_cfg_module and info.cls is cfg:
+            fed_names.add("self")
+        in_validation = id(info.node) in validation_funcs
+        for node in ast.walk(info.node):
+            if not isinstance(node, ast.Attribute):
+                continue
+            base = ast.unparse(node.value)
+            if base in fed_names or base == "fed" or base.endswith(".fed"):
+                yield node.attr, node, in_validation
+
+
+def _fed_locals(info) -> Set[str]:
+    """Local names statically known to hold a FedConfig in ``info``."""
+    names: Set[str] = set()
+    args = getattr(info.node, "args", None)
+    if args is not None:
+        for a in list(args.args) + list(args.kwonlyargs):
+            ann = ast.unparse(a.annotation) if a.annotation else ""
+            if a.arg == "fed" or "FedConfig" in ann:
+                names.add(a.arg)
+    for node in ast.walk(info.node):
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)):
+            value = dotted_name(node.value) or ""
+            if value == "fed" or value.endswith(".fed"):
+                names.add(node.targets[0].id)
+    return names
+
+
+def _is_registered(cls: ClassInfo) -> bool:
+    """True when the class carries a ``@register_algorithm`` decorator."""
+    for deco in cls.decorators:
+        target = deco.func if isinstance(deco, ast.Call) else deco
+        name = dotted_name(target) or ""
+        if name.rsplit(".", 1)[-1] == "register_algorithm":
+            return True
+    return False
+
+
+def _is_stateful(chain: List[ClassInfo]) -> bool:
+    """True when the class (chain) is, or can switch itself, stateful."""
+    for cls in chain:
+        for stmt in cls.node.body:
+            if (isinstance(stmt, ast.Assign)
+                    and any(isinstance(t, ast.Name) and t.id == "stateful"
+                            for t in stmt.targets)
+                    and isinstance(stmt.value, ast.Constant)
+                    and stmt.value.value is True):
+                return True
+        init = cls.methods.get("__init__")
+        if init is not None:
+            for node in ast.walk(init.node):
+                if (isinstance(node, ast.Assign)
+                        and any(dotted_name(t) == "self.stateful"
+                                for t in node.targets)):
+                    return True
+    return False

@@ -1,0 +1,57 @@
+"""FL006: donating jit calls must pin ``out_shardings`` explicitly.
+
+PR 7's population-sharded device store relies on every jit that donates
+the store buffer also pinning its output shardings: without the pin, XLA
+is free to lay the donated output out differently from the population
+sharding, which silently breaks buffer donation (a fresh allocation per
+round) or, worse, resharded client state. Every ``jit_donating_store``
+call and every ``jax.jit(..., donate_argnums=...)`` call must therefore
+pass ``out_shardings`` — explicitly ``None`` where single-device
+execution makes that a decision rather than an omission. Calls that
+forward ``**kwargs`` are exempt (the decision is the caller's).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from fedlint.core import Finding, Rule, register_rule
+
+
+@register_rule
+class UnpinnedOutShardings(Rule):
+    """Flag donating jit wrappers that omit out_shardings."""
+
+    id = "FL006"
+    name = "unpinned-out-shardings"
+    description = ("jit calls that donate buffers must pass out_shardings "
+                   "(None is an explicit decision; omission is not)")
+
+    def check(self, project) -> Iterator[Finding]:
+        """Scan every call site for donation without a sharding pin."""
+        for mod in project.modules.values():
+            for node in ast.walk(mod.tree):
+                if isinstance(node, ast.Call):
+                    problem = _unpinned(mod, node)
+                    if problem:
+                        yield Finding(
+                            self.id, mod.relpath, node.lineno,
+                            node.col_offset + 1, problem)
+
+
+def _unpinned(mod, call: ast.Call) -> str:
+    """Describe the missing pin for a donating call ('' when fine)."""
+    canonical = mod.call_canonical(call) or ""
+    kwargs = {kw.arg for kw in call.keywords}   # None marks a ** splat
+    if None in kwargs or "out_shardings" in kwargs:
+        return ""
+    if canonical.rsplit(".", 1)[-1] == "jit_donating_store":
+        return ("jit_donating_store call without out_shardings; pin the "
+                "population sharding (or pass None explicitly on "
+                "single-device paths)")
+    if canonical in ("jax.jit", "jax.pmap") and (
+            kwargs & {"donate_argnums", "donate_argnames"}):
+        return ("jax.jit with donated arguments but no out_shardings; "
+                "donation without a sharding pin can silently reallocate "
+                "or reshard the donated buffer")
+    return ""

@@ -1,0 +1,50 @@
+"""File collection and the analyze-everything entry point."""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+from fedlint.core import Finding, all_rules, filter_suppressed
+from fedlint.project import Project
+
+#: Directories never worth descending into.
+_SKIP_DIRS = frozenset({"__pycache__", ".git", ".venv", "node_modules"})
+
+
+def collect_files(paths: Iterable) -> List[Path]:
+    """Expand files/directories into a sorted list of ``.py`` files."""
+    out = set()
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            for f in p.rglob("*.py"):
+                if not (_SKIP_DIRS & set(f.parts)):
+                    out.add(f)
+        elif p.suffix == ".py":
+            out.add(p)
+    return sorted(out)
+
+
+def run_paths(paths: Iterable, select: Optional[Iterable[str]] = None,
+              root: Optional[Path] = None) -> Tuple[List[Finding], Project]:
+    """Analyze ``paths`` and return (suppression-filtered findings, project).
+
+    ``select`` restricts to a subset of rule ids; ``root`` anchors the
+    relative paths findings are reported under (defaults to the CWD).
+    """
+    root = Path(root) if root is not None else Path.cwd()
+    project = Project(collect_files(paths), root)
+    wanted = set(select) if select else None
+    findings: List[Finding] = []
+    for rule_id, rule_cls in all_rules().items():
+        if wanted is None or rule_id in wanted:
+            findings.extend(rule_cls().check(project))
+    findings = filter_suppressed(findings, project.lines_for_path)
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return findings, project
+
+
+def run(paths: Iterable, select: Optional[Sequence[str]] = None,
+        root: Optional[Path] = None) -> List[Finding]:
+    """Convenience wrapper returning only the findings list."""
+    return run_paths(paths, select=select, root=root)[0]
