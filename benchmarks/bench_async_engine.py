@@ -1,13 +1,19 @@
 """Sync vs async round throughput on the EMNIST CNN config at 16
-clients/round (core/async_engine.py).
+clients/round — both lanes drive the unified ``core.engine.RoundEngine``
+through ``FedSim``.
 
-The sync baseline is ``FedSim.run``'s synchronous loop: per-round host-side
-cohort fetch + decode + batch stacking, one fused jitted round dispatch,
-and a blocking per-round metrics sync. The async path is the same
-``FedSim`` with ``fed.async_rounds=True``: cohort t+1's client compute is
-dispatched before round t's server update lands (``max_staleness=1``,
-deltas discounted by ``staleness_discount**s``), the input pipeline runs on
-a prefetch thread, and metrics stay on device until the loop ends.
+The sync baseline is the engine's window=1 fused path: per-round host-side
+cohort fetch + decode + batch stacking, then one fused jitted round
+dispatch. The async path is the same ``FedSim`` with
+``fed.async_rounds=True``: cohort t+1's client compute is dispatched
+before round t's server update lands (``max_staleness=1``, deltas
+discounted by ``staleness_discount**s``) and the input pipeline runs on a
+prefetch thread. Both lanes keep metrics on device until the loop's single
+end-of-history sync — the old sync loop's blocking per-round metrics sync
+is gone, so the async speedup here is the input-pipeline overlap alone
+(expect ratios near 1 on a lone CPU device, where the split backend's two
+dispatches offset the overlap; the gate pins that the overhead does not
+grow).
 
 The host-bound part of the pipeline is modeled explicitly: clients hold
 raw uint8 images behind a store with ``FETCH_MS`` of per-client read
@@ -16,8 +22,8 @@ fetch is an I/O wait, which is exactly what the prefetch thread hides
 behind device compute), and the round's batches are decoded to normalized
 float on the host each round. In this dispatch/host-bound cross-device
 regime (smoke-scale CNN, a handful of local steps per round — the paper's
-own operating point) the async engine removes the serialized fetch/decode
-+ per-round sync from the critical path; in the compute-bound ``--full``
+own operating point) the async pipeline removes the serialized
+fetch/decode from the critical path; in the compute-bound ``--full``
 regime both paths converge toward pure device time. Writes
 ``BENCH_async_engine.json`` for the CI artifact lane.
 

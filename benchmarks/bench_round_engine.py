@@ -5,10 +5,13 @@ clients/round.
 The legacy baseline reproduces the pre-engine ``FedSim.round`` exactly: one
 jitted client-update dispatch per client with a blocking per-client loss
 sync, then eager (un-jitted) list aggregation and an eager server update.
-The engine runs the identical round math as ONE jitted program per round
-(placements: vmap over clients / scan-of-vmap chunks). Cohort batches for
-all timed rounds are pre-generated so both paths time the round itself,
-not the (identical) data pipeline.
+The engine lane drives the unified ``core.engine.RoundEngine`` round loop
+(window=1, fused backend) over the identical round math compiled as ONE
+jitted program per round (placements: vmap over clients / scan-of-vmap
+chunks) — the loop that ``FedSim``/``launch.train`` run in production,
+history recording included. Cohort batches for all timed rounds are
+pre-generated so both paths time the round itself, not the (identical)
+data pipeline.
 
 Quick mode uses the smoke-scale EMNIST CNN in the paper's cross-device
 regime (small per-client datasets => a handful of local steps per round),
@@ -31,10 +34,12 @@ import numpy as np
 from repro.configs.base import FedConfig
 from repro.configs.emnist_cnn import config as cnn_full, smoke as cnn_smoke
 from repro.core.client import make_client_update
+from repro.core.engine import RoundEngine
 from repro.core.round_program import make_round_program
 from repro.core.server import (aggregate_deltas_list, init_server_state,
                                server_update)
 from repro.data.dirichlet import make_dirichlet_classification
+from repro.data.prefetch import Cohort
 from repro.models.cnn import cnn_loss, init_cnn_params
 from repro.optim import get_optimizer
 
@@ -102,16 +107,24 @@ def _bench_one(cfg, fed, rounds, batch_size, seed=0):
 
     out = {"legacy_ms": timed(legacy_round)}
 
-    # --- engine: one jitted program per round ------------------------------
+    # --- engine: the unified round loop, one jitted dispatch per round -----
     for place in PLACEMENTS:
-        round_fn = jax.jit(make_round_program(
+        engine = RoundEngine(round_fn=make_round_program(
             grad_fn, fed, placement=place, server_opt=server_opt))
 
-        def engine_round(state, r, round_fn=round_fn):
-            state, _ = round_fn(state, {"x": xs[r], "y": ys[r]})
+        def run_engine(n, lo, engine=engine):
+            state, _ = engine.run(
+                state0,
+                lambda i: Cohort(i, None, {"x": xs[lo + i],
+                                           "y": ys[lo + i]}), n)
             return state
 
-        out[f"{place}_ms"] = timed(engine_round)
+        state = run_engine(1, 0)                  # warm-up / compile
+        jax.block_until_ready(state.params)
+        t0 = time.perf_counter()
+        state = run_engine(rounds, 1)
+        jax.block_until_ready(state.params)
+        out[f"{place}_ms"] = (time.perf_counter() - t0) / rounds * 1e3
         out[f"{place}_speedup"] = out["legacy_ms"] / out[f"{place}_ms"]
     out["best_speedup"] = max(out[f"{p}_speedup"] for p in PLACEMENTS)
     return out

@@ -248,6 +248,12 @@ class FedConfig:
     # parameter site update, site <- (1-alpha)*site + alpha*new. 1.0 makes
     # every round a full site replacement (stateless fedpa_precision).
     fedep_damping: float = 0.5
+    # q-FFL (Li et al. 2020): tilt the cohort aggregation toward
+    # high-loss clients — client k's weight becomes
+    # w_k * max(loss_first_k, 0)**q, renormalized over the cohort
+    # (core/round_program.py). q=0 is today's plain weighting, bitwise;
+    # larger q trades mean loss for worst-client loss (fairness).
+    qffl_q: float = 0.0
     # --- round engine (core/round_program.py) ---
     # How the cohort is laid out inside the one-jit-per-round program:
     # "parallel" (vmap over clients), "sequential" (scan, memory-bound
@@ -373,6 +379,11 @@ class FedConfig:
             raise ValueError(
                 f"client_momentum must be in [0, 1], got "
                 f"{self.client_momentum}")
+        if not (isinstance(self.qffl_q, (int, float))
+                and math.isfinite(self.qffl_q) and self.qffl_q >= 0.0):
+            raise ValueError(
+                f"qffl_q must be a finite float >= 0 (q-FFL's fairness "
+                f"exponent; 0 disables the loss tilt), got {self.qffl_q!r}")
         if not isinstance(self.error_feedback, bool):
             raise ValueError(
                 f"error_feedback must be a bool (it gates the residual "

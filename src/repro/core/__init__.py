@@ -3,7 +3,8 @@
 Layers (bottom-up): tree_math -> shrinkage/dp_delta/posterior/iasg
 (the posterior machinery) -> repro.algorithms (the registered FedAlgorithm
 strategies: client updates, payload aggregation, server steps) ->
-round_program (the one-jit-per-round engine) -> round (simulation) /
+round_program (the one-jit-per-round programs) -> engine (the ONE
+staleness-general round loop + history recorder) -> round (simulation) /
 sharded_round (multi-pod SPMD), both thin frontends over the engine.
 ``client``/``server`` keep the historical per-piece entry points.
 """
@@ -34,7 +35,8 @@ from repro.core.dp_delta import (  # noqa: F401
     online_dp_init,
     online_dp_update,
 )
-from repro.core.history import json_scalar  # noqa: F401
+from repro.core.engine import RoundEngine  # noqa: F401
+from repro.core.history import RoundRecorder, json_scalar  # noqa: F401
 from repro.core.iasg import IASGResult, iasg_sample, sgd_steps  # noqa: F401
 from repro.core.posterior import (  # noqa: F401
     QuadraticClient,

@@ -1,327 +1,38 @@
-"""Async double-buffered round engine with staleness-aware server updates.
+"""Deprecated alias: ``AsyncRoundEngine`` is now ``core.engine.RoundEngine``.
 
-The paper's server is a serial consumer of cohort deltas (Algorithm 1), but
-its posterior-inference framing treats the aggregated delta as a stochastic
-pseudo-gradient of the surrogate quadratic (Proposition 2) — which
-tolerates *bounded staleness*: FA-LD-style analyses (Deng et al. 2022) show
-server-side averaging remains convergent when the delta was computed at a
-slightly older iterate. This engine exploits that to buy wall-clock:
+The double-buffered async pipeline this module used to implement —
+up to ``max_staleness`` cohorts in flight, deltas down-weighted by
+``staleness_discount ** s``, apply-order CAS write-back of per-client
+state — lives in the unified staleness-general ``RoundEngine``
+(``core/engine.py``), whose synchronous path is the same loop with an
+in-flight window of one. History records are assembled by the shared
+``core.history.RoundRecorder`` (uniform schema, one end-of-loop sync).
 
-  * cohort t+1's client compute is dispatched on device *before* round t's
-    server update has been applied (up to ``max_staleness`` cohorts in
-    flight beyond the one being applied);
-  * a delta computed at params version ``v`` and applied at version
-    ``v + s`` is down-weighted by ``staleness_discount ** s`` before the
-    server optimizer sees it;
-  * the host-side input pipeline (cohort sampling + batch stacking) runs
-    ``prefetch_rounds`` ahead on a background thread
-    (``data.prefetch.CohortPrefetcher``);
-  * per-round metrics stay on device until the loop finishes — the
-    synchronous path's per-round blocking ``float(loss)`` sync is gone.
-
-``max_staleness=0`` dispatches exactly one cohort at a time and applies it
-immediately (discount ``1.0``), reproducing the synchronous fused round
-numerically (tests/test_async_engine.py).
-
-The two stages come from ``round_program.make_cohort_program`` /
-``make_server_program``; this module jits each once and owns the pipeline
-bookkeeping. ``FedSim`` (``fed.async_rounds=True``) and ``launch.train
---async-rounds`` are the frontends.
+Migration: construct ``repro.core.engine.RoundEngine`` directly — the
+constructor is a superset of this one (same field names; note
+``RoundEngine`` defaults ``max_staleness=0`` where this alias keeps the
+historic ``1``). ``AsyncRoundEngine`` remains import- and
+constructor-compatible but will not grow new features.
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from typing import Callable, List, NamedTuple, Optional, Tuple, Union
 
-import jax
+from repro.core.engine import BuildCohort, RoundEngine  # noqa: F401
 
-from repro.core.client_state import (ClientStateStore, DeviceClientStateStore,
-                                     device_scatter, jit_donating_store)
-from repro.core.history import json_scalar
-from repro.core.server import ServerState
-from repro.data.prefetch import Cohort, close_prefetcher, make_prefetcher
-
-#: build_cohort(round_idx) -> Cohort (see data/prefetch.py)
-BuildCohort = Callable[[int], Cohort]
-
-
-class _InFlight(NamedTuple):
-    """One dispatched-but-unapplied cohort in the pipeline.
-
-    ``version`` is the params version the cohort saw when dispatched;
-    ``client_ids`` / ``new_states`` / ``stamps`` carry the per-client
-    state write-back (None for stateless regimes): the gather-time write
-    stamps let the store drop a stale write from a cohort that overlapped
-    an already-applied one on the same client. With the device store the
-    three are device arrays (the traced id vector, the cohort program's
-    stacked state output, the on-device stamp snapshot) and the write-back
-    never touches the host. ``survivors`` / ``extra_staleness`` /
-    ``dropped`` are the cohort's fault annotations (``data.cohort_source``):
-    the survivors mask was already threaded through the dispatched cohort
-    program and gates the state write-back; straggler lateness is added to
-    the staleness exponent at apply time.
-    """
-
-    agg: object
-    metrics: dict
-    version: int
-    round_idx: int
-    is_burn: bool
-    client_ids: object = None
-    new_states: object = None
-    stamps: object = None
-    survivors: object = None
-    extra_staleness: int = 0
-    dropped: int = 0
+__all__ = ["AsyncRoundEngine", "BuildCohort"]
 
 
 @dataclasses.dataclass
-class AsyncRoundEngine:
-    """Drives ``num_rounds`` staleness-aware rounds over split programs.
+class AsyncRoundEngine(RoundEngine):
+    """Deprecated thin alias of :class:`repro.core.engine.RoundEngine`.
 
-    ``cohort_fn(state, batches, weights) -> (agg, metrics)`` and
-    ``server_fn(state, agg, discount) -> state`` are jitted here
-    (pass the raw builders, not pre-jitted functions). ``burn_cohort_fn`` /
-    ``burn_server_fn`` (optional) are used for the first ``burn_in_rounds``
-    rounds — the burn regime of the config's algorithm (e.g. the FedAvg
-    regime of a FedPA config, Section 5.2); the burn server stage exists
-    because a burn regime may aggregate in a different payload space than
-    the sampling regime (``fedpa_precision`` burns in as fedavg).
-
-    Stateful algorithms (``stateful=True`` + a ``client_store``): each
-    dispatched cohort gathers its clients' persistent state from the store
-    and its ``cohort_fn`` returns ``(agg, metrics, new_states)``; the
-    write-back happens at APPLY time, in round order, tagged with the
-    gather-time stamps — so when two in-flight cohorts overlap on a
-    client, the one applied second (which gathered before the first wrote)
-    is dropped for that client instead of clobbering the fresher state.
-
-    With the host ``ClientStateStore`` the write-back pulls ``new_states``
-    to the host, which syncs on that cohort's compute — one device sync
-    per stateful round that stateless rounds avoid. With a
-    ``DeviceClientStateStore`` the gather happens *inside* the dispatched
-    cohort program (``cohort_fn(state, batches, weights, store_state,
-    client_ids) -> (agg, metrics, new_states, stamps)``, the device-store
-    signature of ``make_cohort_program``) and the write-back is a small
-    jitted ``device_scatter`` (store buffers donated): the CAS runs
-    against the on-device stamps, the dropped-write count stays a device
-    counter folded into the end-of-loop sync with the losses, and the
-    stateful pipeline regains the stateless path's sync-free round loop.
+    Kept so existing frontends keep constructing (and validating) the
+    async pipeline under its old name; only the ``max_staleness`` default
+    differs (1, the historic async default, vs the unified engine's 0).
+    Without a fused ``round_fn`` every run — including ``max_staleness=0``
+    — takes the split-stage pipeline, exactly as the standalone async
+    engine always did.
     """
 
-    cohort_fn: Callable
-    server_fn: Callable
     max_staleness: int = 1
-    staleness_discount: float = 1.0
-    burn_cohort_fn: Optional[Callable] = None
-    burn_server_fn: Optional[Callable] = None
-    burn_in_rounds: int = 0
-    prefetch_rounds: int = 0
-    prefetch_backend: str = "thread"
-    client_store: Optional[Union[ClientStateStore,
-                                 DeviceClientStateStore]] = None
-    stateful: bool = False
-    burn_stateful: bool = False
-    #: Record per-round ``dropped`` / ``straggled`` counts in history
-    #: (``FedSim`` sets it from ``fed.fault_injection``).
-    record_faults: bool = False
-    #: Per-round communicated bytes (``compression.round_bytes`` dicts with
-    #: ``bytes_up`` / ``bytes_down``), stamped on every history record;
-    #: ``burn_round_bytes`` covers the burn regime's (dense) payloads.
-    round_bytes: Optional[dict] = None
-    burn_round_bytes: Optional[dict] = None
-
-    def __post_init__(self):
-        """Validate knobs, normalize the burn-regime flags, jit the stages."""
-        if self.max_staleness < 0:
-            raise ValueError("max_staleness must be >= 0")
-        if not 0.0 <= self.staleness_discount <= 1.0:
-            raise ValueError("staleness_discount must be in [0, 1]")
-        if self.burn_cohort_fn is None:
-            # no dedicated burn stage: burn rounds run the main cohort_fn,
-            # so they are stateful exactly when the main regime is
-            self.burn_stateful = self.stateful
-        if (self.stateful or self.burn_stateful) and self.client_store is None:
-            raise ValueError(
-                "stateful=True requires a client-state store (client_store)")
-        self._device_store = isinstance(self.client_store,
-                                        DeviceClientStateStore)
-        # the device write-back stage: donate the store so the (N, ...)
-        # buffers alias in place instead of doubling per-client state;
-        # a population-sharded store additionally pins the scatter's store
-        # output to its own placement so the alias is shard-for-shard
-        self._scatter = None
-        if self._device_store:
-            pop_sh = self.client_store.population_sharding
-            self._scatter = jit_donating_store(
-                device_scatter, 0,
-                out_shardings=None if pop_sh is None else (pop_sh, None))
-        self._cohort = jax.jit(self.cohort_fn)
-        self._burn = (jax.jit(self.burn_cohort_fn)
-                      if self.burn_cohort_fn is not None else self._cohort)
-        self._server = jax.jit(self.server_fn)
-        self._burn_server = (jax.jit(self.burn_server_fn)
-                             if self.burn_server_fn is not None
-                             else self._server)
-
-    def _dispatch(self, state: ServerState, cohort: Cohort, t_next: int,
-                  version: int) -> _InFlight:
-        """Dispatch one cohort program and wrap its outputs as ``_InFlight``.
-
-        Stateful regimes also carry the per-client state write-back: with
-        the device store the gather happens inside the dispatched program
-        against the store's current device buffers (the returned stamps
-        snapshot tags the CAS); with the host store the gather is a host
-        numpy slice."""
-        is_burn = t_next < self.burn_in_rounds
-        fn = self._burn if is_burn else self._cohort
-        surv = cohort.survivors
-        fault = (surv, cohort.extra_staleness, cohort.dropped)
-        if not (self.burn_stateful if is_burn else self.stateful):
-            agg, metrics = fn(state, cohort.batches, cohort.weights, surv)
-            return _InFlight(agg, metrics, version, t_next, is_burn,
-                             None, None, None, *fault)
-        if self._device_store:
-            ids = self.client_store.prepare_ids(cohort.client_ids)
-            agg, metrics, new_states, stamps = fn(
-                state, cohort.batches, cohort.weights,
-                self.client_store.device_state(), ids, surv)
-            return _InFlight(agg, metrics, version, t_next, is_burn,
-                             ids, new_states, stamps, *fault)
-        cstates, stamps = self.client_store.gather(cohort.client_ids)
-        agg, metrics, new_states = fn(state, cohort.batches, cohort.weights,
-                                      cstates, surv)
-        return _InFlight(agg, metrics, version, t_next, is_burn,
-                         cohort.client_ids, new_states, stamps, *fault)
-
-    def _write_back_states(self, fl: _InFlight, rec: dict) -> None:
-        """Apply-order client-state write-back, tagged with the gather-time
-        stamps: a client already updated by an overlapping cohort keeps
-        that fresher value (stale write dropped); a dropped client's
-        half-finished state must not land."""
-        if fl.new_states is None:
-            return
-        if self._device_store:
-            # one jitted scatter, store buffers donated; the drop count
-            # stays a device scalar until the end-of-loop sync — no
-            # per-round host pull
-            new_store, drops = self._scatter(
-                self.client_store.device_state(), fl.client_ids,
-                fl.new_states, fl.stamps, fl.survivors)
-            self.client_store.set_device_state(new_store)
-            rec["state_drops"] = drops
-        else:
-            rec["state_drops"] = self.client_store.scatter(
-                fl.client_ids, fl.new_states, fl.stamps,
-                write_mask=fl.survivors)
-
-    @staticmethod
-    def _to_history(raw: List[dict]) -> List[dict]:
-        """Convert the on-device round records into JSON-safe history in one
-        end-of-loop sync (eval metrics and the device store's state_drops
-        counters convert with the losses)."""
-        history = []
-        for rec in raw:
-            entry = {"round": rec["round"], "staleness": rec["staleness"],
-                     "loss_first": float(rec["metrics"]["loss_first"]),
-                     "loss_last": float(rec["metrics"]["loss_last"])}
-            entry["client_loss"] = entry["loss_last"]
-            for k in ("dropped", "straggled"):
-                if k in rec:
-                    entry[k] = rec[k]
-            for k in ("bytes_up", "bytes_down"):
-                if k in rec:
-                    entry[k] = json_scalar(rec[k])
-            if "state_drops" in rec:
-                entry["state_drops"] = json_scalar(rec["state_drops"])
-            entry.update({k: json_scalar(v)
-                          for k, v in rec.get("eval", {}).items()})
-            history.append(entry)
-        return history
-
-    def run(
-        self,
-        state: ServerState,
-        build_cohort: BuildCohort,
-        num_rounds: int,
-        *,
-        eval_fn: Optional[Callable] = None,
-        eval_every: int = 1,
-        on_round: Optional[Callable] = None,
-    ) -> Tuple[ServerState, List[dict]]:
-        """Returns ``(state, history)``; one history entry per applied round
-        with ``loss_first`` / ``loss_last`` / ``client_loss`` / ``staleness``
-        (+ ``eval_fn`` metrics every ``eval_every`` rounds, converted to
-        plain Python in the same final sync as the losses, and
-        ``state_drops`` — overlap-dropped client-state writes — for
-        stateful regimes). Every entry is JSON-serializable.
-
-        ``on_round(record, state)`` fires after each server update with the
-        raw (possibly still-on-device) metrics and the post-update state —
-        for live logging/checkpointing. Forcing metrics there re-introduces
-        a per-round sync, so log sparingly in throughput-sensitive loops.
-        """
-        if eval_fn is not None and eval_every < 1:
-            raise ValueError(
-                f"eval_every must be >= 1 when eval_fn is set, got "
-                f"{eval_every} (evaluate every round with eval_every=1, or "
-                f"pass eval_fn=None to disable evaluation)")
-        source = (make_prefetcher(self.prefetch_backend, build_cohort, 0,
-                                  num_rounds, depth=self.prefetch_rounds)
-                  if self.prefetch_rounds > 0 else None)
-        get = source.get if source is not None else build_cohort
-        pending: deque = deque()   # _InFlight, in dispatch (== apply) order
-        raw: List[dict] = []
-        version = 0                # server updates applied so far
-        t_next = 0                 # next round to dispatch
-        completed = False
-        try:
-            for t_apply in range(num_rounds):
-                # keep up to max_staleness cohorts in flight beyond the one
-                # being applied; each remembers the params version it saw
-                while (t_next < num_rounds
-                       and len(pending) <= self.max_staleness):
-                    pending.append(self._dispatch(state, get(t_next),
-                                                  t_next, version))
-                    t_next += 1
-
-                fl = pending.popleft()
-                assert fl.round_idx == t_apply, (fl.round_idx, t_apply)
-                # a straggling cohort is applied at its slot but discounted
-                # as if it were extra_staleness rounds later — the late
-                # delta rides the existing staleness_discount**s path
-                staleness = version - fl.version + fl.extra_staleness
-                server = self._burn_server if fl.is_burn else self._server
-                state = server(state, fl.agg,
-                               self.staleness_discount ** staleness)
-                version += 1
-
-                rec = {"round": t_apply, "staleness": staleness,
-                       "metrics": fl.metrics}
-                bts = (self.burn_round_bytes if fl.is_burn
-                       else self.round_bytes) or self.round_bytes
-                if bts is not None:
-                    rec["bytes_up"] = bts["bytes_up"]
-                    rec["bytes_down"] = bts["bytes_down"]
-                if self.record_faults:
-                    rec["dropped"] = int(fl.dropped)
-                    rec["straggled"] = int(fl.extra_staleness)
-                self._write_back_states(fl, rec)
-                if eval_fn is not None and (t_apply % eval_every == 0
-                                            or t_apply == num_rounds - 1):
-                    rec["eval"] = eval_fn(state.params)
-                raw.append(rec)
-                if on_round is not None:
-                    on_round(rec, state)
-            completed = True
-        finally:
-            if source is not None:
-                # a hung prefetch worker stays loud on a clean exit but
-                # must not mask an exception unwinding out of the loop
-                close_prefetcher(source, unwinding=not completed)
-
-        # one sync at the end instead of one per round — splicing raw
-        # device arrays into history broke JSON serialization and hid a
-        # sync on first access
-        return state, self._to_history(raw)

@@ -1,11 +1,37 @@
-"""Round-history helpers shared by the sync and async engines.
+"""Round-history assembly, shared by every round-loop frontend.
 
-Both ``FedSim.run`` and ``AsyncRoundEngine.run`` return a per-round
-``history`` list whose entries must be plain-Python JSON-serializable
-dicts — splicing raw device arrays in breaks ``json.dumps(history)`` and
-hides a blocking device sync behind the first consumer access.
+``RoundRecorder`` is the ONLY place per-round history records are
+assembled (fedlint FL007 enforces this): ``core.engine.RoundEngine``
+feeds it one call per applied round and converts to plain-Python JSON
+in a single end-of-loop sync. Before the unified engine, the sync loop
+(``core/round.py``) and the async engine (``core/async_engine.py``)
+each hand-rolled their own records — and drifted: sync records lacked
+the ``staleness`` / ``state_drops`` / ``straggled`` keys async stamped,
+and JSON-breaking device arrays had to be fixed twice (PR 4, PR 5).
+
+Every finalized record carries the same uniform schema:
+
+=============  ============================================================
+key            meaning (explicit default when the round has no signal)
+=============  ============================================================
+round          0-based applied-round index
+staleness      server-version lag (+ straggler lateness) of the delta; 0
+loss_first     cohort mean first-step client loss
+loss_last      cohort mean last-step client loss
+client_loss    alias of ``loss_last`` (legacy consumers)
+bytes_up       per-round uplink bytes (``None`` without byte accounting)
+bytes_down     per-round downlink bytes (``None`` without byte accounting)
+dropped        clients dropped mid-round; 0
+straggled      straggler lateness added to the staleness exponent; 0
+state_drops    CAS-dropped client-state writes; 0
+=============  ============================================================
+
+plus any ``eval_fn`` metrics for rounds that evaluated, converted with
+the losses in the same final sync.
 """
 from __future__ import annotations
+
+from typing import List, Optional
 
 import numpy as np
 
@@ -20,3 +46,69 @@ def json_scalar(v):
     """
     a = np.asarray(v)
     return a.item() if a.ndim == 0 else a.tolist()
+
+
+class RoundRecorder:
+    """Collects raw (possibly device-backed) round records; one sync at
+    the end.
+
+    ``record(...)`` is called once per applied round with whatever the
+    engine measured; values it was not given are stamped with their
+    explicit schema defaults, so both execution modes emit the same key
+    set. ``history()`` converts everything to plain Python in one pass —
+    the single blocking device sync of a whole run.
+    """
+
+    def __init__(self, *, round_bytes: Optional[dict] = None,
+                 burn_round_bytes: Optional[dict] = None):
+        #: ``compression.round_bytes`` dicts ({"bytes_up", "bytes_down"});
+        #: burn rounds may communicate a different (dense) payload
+        self.round_bytes = round_bytes
+        self.burn_round_bytes = burn_round_bytes
+        self._raw: List[dict] = []
+
+    def record(self, *, round_idx: int, metrics: dict, is_burn: bool = False,
+               staleness: int = 0, dropped: int = 0, straggled: int = 0,
+               state_drops=0, eval_metrics: Optional[dict] = None) -> dict:
+        """Assemble one round's raw record (uniform schema, explicit
+        defaults) and append it; returns it for live ``on_round``
+        consumers. ``metrics`` is the cohort program's loss dict and may
+        still live on device — as may ``state_drops`` (the device store's
+        CAS counter) and ``eval_metrics`` values."""
+        bts = (self.burn_round_bytes if is_burn
+               else self.round_bytes) or self.round_bytes
+        rec = {"round": round_idx, "staleness": staleness,
+               "metrics": metrics,
+               "bytes_up": None if bts is None else bts["bytes_up"],
+               "bytes_down": None if bts is None else bts["bytes_down"],
+               "dropped": dropped, "straggled": straggled,
+               "state_drops": state_drops}
+        if eval_metrics is not None:
+            rec["eval"] = eval_metrics
+        self._raw.append(rec)
+        return rec
+
+    def history(self) -> List[dict]:
+        """Finalize: one end-of-loop sync producing JSON-safe entries.
+
+        Splicing raw device arrays into history broke JSON serialization
+        and hid a blocking sync behind the first consumer access; forcing
+        per round costs one sync per round — so everything converts here,
+        once."""
+        history = []
+        for rec in self._raw:
+            entry = {"round": rec["round"], "staleness": rec["staleness"],
+                     "loss_first": float(rec["metrics"]["loss_first"]),
+                     "loss_last": float(rec["metrics"]["loss_last"])}
+            entry["client_loss"] = entry["loss_last"]
+            entry["bytes_up"] = (None if rec["bytes_up"] is None
+                                 else json_scalar(rec["bytes_up"]))
+            entry["bytes_down"] = (None if rec["bytes_down"] is None
+                                   else json_scalar(rec["bytes_down"]))
+            entry["dropped"] = int(rec["dropped"])
+            entry["straggled"] = int(rec["straggled"])
+            entry["state_drops"] = int(json_scalar(rec["state_drops"]))
+            entry.update({k: json_scalar(v)
+                          for k, v in rec.get("eval", {}).items()})
+            history.append(entry)
+        return history

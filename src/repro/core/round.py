@@ -1,42 +1,44 @@
 """Single-process federated simulation (the paper's experimental regime).
 
-Drives Algorithm 1 on top of the unified compiled round engine
-(``round_program``): the host loop only samples client ids and stacks their
-batches — the whole round (cohort of client updates, weighted aggregation,
-server step) is ONE jitted XLA program per round configuration, not one
-dispatch per client. Two execution modes:
+``FedSim`` is a thin frontend over the unified staleness-general
+``core.engine.RoundEngine``: it resolves the config into programs (the
+fused ``make_round_program`` round plus the split
+``make_cohort_program`` / ``make_server_program`` stages), builds the
+client-state store and the fault-injecting ``CohortSource``, and hands
+everything to the one round loop. The host side only samples client ids
+and stacks their batches — the whole round (cohort of client updates,
+weighted aggregation, server step) is jitted XLA, not one dispatch per
+client. Execution modes (both driven by the same engine loop):
 
-  * synchronous (default): the fused ``make_round_program`` round, with the
-    cohort optionally stacked one round ahead on a background thread
-    (``fed.prefetch_rounds > 0``);
-  * async (``fed.async_rounds=True``): the double-buffered
-    ``core.async_engine`` pipeline — cohort t+1's client compute overlaps
-    round t's server update, deltas down-weighted by
-    ``staleness_discount**staleness``; ``max_staleness=0`` reproduces the
-    sync path numerically.
+  * synchronous (default): in-flight window of 1, single-dispatch fused
+    round, with the cohort optionally stacked one round ahead on a
+    background thread (``fed.prefetch_rounds > 0``);
+  * async (``fed.async_rounds=True``): up to ``fed.max_staleness``
+    cohorts in flight beyond the one being applied — cohort t+1's client
+    compute overlaps round t's server update, deltas down-weighted by
+    ``staleness_discount**staleness``; ``max_staleness=0`` reproduces
+    the sync path (bitwise when no stragglers are configured — straggler
+    lateness forces the split pipeline for the discount exponent).
 
 The production multi-pod path (``sharded_round.py``) builds on the same
-engine.
+programs.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional
+from typing import Callable, Optional
 
-import jax
 import numpy as np
 
 from repro.configs.base import FedConfig
-from repro.core.async_engine import AsyncRoundEngine
-from repro.core.client_state import jit_donating_store, make_client_store
-from repro.core.history import json_scalar
+from repro.core.client_state import make_client_store
+from repro.core.engine import RoundEngine
 from repro.core.round_program import (make_cohort_program,
                                       make_round_program,
                                       make_server_program)
 from repro.core.server import ServerState, init_server_state
 from repro.data.cohort_source import CohortSource
-from repro.data.prefetch import (Cohort, close_prefetcher, make_prefetcher,
-                                 stack_host)
+from repro.data.prefetch import Cohort, stack_host
 from repro.optim import get_optimizer
 
 
@@ -53,8 +55,8 @@ class FedSim:
 
     ``mesh`` (optional) makes the population axis a sharded dimension: the
     device client-state store is ``NamedSharding``-placed over the mesh's
-    client axes (``population_layout``; padded, never replicated) and both
-    engines pin the round's store output to that placement so the donated
+    client axes (``population_layout``; padded, never replicated) and the
+    engine pins the round's store output to that placement so the donated
     update aliases shard-for-shard. ``spmd_axes`` additionally names the
     mesh axes the parallel/chunked placements vmap over
     (``spmd_axis_name``), mapping each chunk to a mesh slice. Neither
@@ -73,7 +75,7 @@ class FedSim:
     spmd_axes: Optional[tuple] = None
 
     def __post_init__(self):
-        """Build (and jit) the round programs and the client-state store."""
+        """Resolve the config: round programs, store, cohort source."""
         self.source = CohortSource(self.fed, self.num_clients,
                                    self.stack_cohort, self.client_weights,
                                    self.seed)
@@ -84,60 +86,30 @@ class FedSim:
                                         self.fed.server_lr,
                                         self.fed.server_momentum)
 
-        from repro.algorithms import (get_algorithm,  # noqa: PLC0415 — cycle
-                                      resolve_algorithm)
+        from repro.algorithms import get_algorithm  # noqa: PLC0415 — cycle
 
         self._state_placement = self.fed.client_state_placement
         # per-client persistent state (SCAFFOLD/FedEP): host or device
         # store per fed.client_state_placement; host gathers/scatters at
         # the round edges, device threads its buffers through the jit —
         # population-sharded over self.mesh when one is given
-        alg = get_algorithm(self.fed)
-        stateful = alg.stateful or (alg.has_burn_regime
-                                    and self.fed.burn_in_rounds > 0
-                                    and alg.burn_algorithm().stateful)
+        self._alg = get_algorithm(self.fed)
+        # burn-in rounds run the algorithm's burn regime, e.g. FedPA's
+        # FedAvg regime (Section 5.2)
+        self._has_burn_regime = (self._alg.has_burn_regime
+                                 and self.fed.burn_in_rounds > 0)
+        self._stateful = self._alg.stateful
+        self._burn_stateful = (self._alg.burn_algorithm().stateful
+                               if self._has_burn_regime else self._stateful)
         self.client_store = (
             make_client_store(self._state_placement, self.num_clients,
                               mesh=(self.mesh
                                     if self._state_placement == "device"
                                     else None))
-            if stateful else None)
-
-        def build(use_sampling: bool):
-            round_fn = make_round_program(
-                self.grad_fn, self.fed, placement=self.placement,
-                spmd_axes=self.spmd_axes,
-                server_opt=self.server_opt, use_sampling=use_sampling,
-            )
-            if (resolve_algorithm(self.fed, use_sampling).stateful
-                    and self._state_placement == "device"):
-                # round_fn(state, batches, weights, store_state, ids):
-                # donate the store so the (N, ...) buffers update in
-                # place, pinned to the store's own population sharding so
-                # the alias is shard-for-shard
-                out_sh = None
-                if self.client_store.population_sharding is not None:
-                    out_sh = (None, None,
-                              self.client_store.population_sharding)
-                return jit_donating_store(round_fn, 3, out_shardings=out_sh)
-            return jax.jit(round_fn)
-
-        self._alg = get_algorithm(self.fed)
-        self._round = build(use_sampling=True)
-        # burn-in rounds run the algorithm's burn regime, e.g. FedPA's
-        # FedAvg regime (Section 5.2)
-        self._has_burn_regime = (self._alg.has_burn_regime
-                                 and self.fed.burn_in_rounds > 0)
-        if self._has_burn_regime:
-            self._burn_round = build(use_sampling=False)
-        else:
-            self._burn_round = self._round
-        self._stateful = self._alg.stateful
-        self._burn_stateful = (self._alg.burn_algorithm().stateful
-                               if self._has_burn_regime else self._stateful)
-        self._engine: Optional[AsyncRoundEngine] = None
+            if self._stateful or self._burn_stateful else None)
+        self._engine: Optional[RoundEngine] = None
         # per-round communicated bytes, computed once a params template is
-        # seen (init); stamped on every history record by both engines
+        # seen (init); stamped on every history record by the engine
         self._round_bytes: Optional[dict] = None
         self._burn_round_bytes: Optional[dict] = None
 
@@ -176,122 +148,68 @@ class FedSim:
 
     def round(self, state: ServerState, round_idx: int,
               cohort: Optional[Cohort] = None):
-        """One synchronous round; stateful algorithms additionally thread
-        the cohort's client state through the jitted round — gathered and
-        scattered at the host edges for the host store, or passed as the
-        store's device buffers (+ the cohort ids) with the gather/CAS
-        scatter fused into the program for the device store."""
+        """One synchronous round via the engine's fused one-shot API;
+        returns ``(state, record)`` with the uniform-schema record already
+        converted to plain Python."""
         cohort = cohort if cohort is not None else self.cohort(round_idx)
-        is_burn = round_idx < self.fed.burn_in_rounds
-        round_fn = self._burn_round if is_burn else self._round
-        stateful = (self._burn_stateful
-                    if is_burn and self._has_burn_regime else self._stateful)
-        survivors = cohort.survivors   # None traces the mask-free program
-        if stateful and self._state_placement == "device":
-            ids = self.client_store.prepare_ids(cohort.client_ids)
-            state, metrics, new_store = round_fn(
-                state, cohort.batches, cohort.weights,
-                self.client_store.device_state(), ids, survivors)
-            self.client_store.set_device_state(new_store)
-        elif stateful:
-            cstates, stamps = self.client_store.gather(cohort.client_ids)
-            state, metrics, new_states = round_fn(
-                state, cohort.batches, cohort.weights, cstates, survivors)
-            # a dropped client's half-finished state must not land
-            self.client_store.scatter(cohort.client_ids, new_states, stamps,
-                                      write_mask=survivors)
-        else:
-            state, metrics = round_fn(state, cohort.batches, cohort.weights,
-                                      survivors)
-        loss_first = float(metrics["loss_first"])
-        loss_last = float(metrics["loss_last"])
-        record = {"client_loss": loss_last, "loss_first": loss_first,
-                  "loss_last": loss_last}
-        bts = (self._burn_round_bytes if is_burn and self._has_burn_regime
-               else self._round_bytes)
-        if bts is not None:
-            record["bytes_up"] = json_scalar(bts["bytes_up"])
-            record["bytes_down"] = json_scalar(bts["bytes_down"])
-        if survivors is not None:
-            record["dropped"] = int(cohort.dropped)
-        return state, record
+        return self.engine.round(state, cohort, round_idx)
 
     def run(self, params, num_rounds: int,
             eval_fn: Optional[Callable] = None, eval_every: int = 1):
         """Drive ``num_rounds`` rounds from fresh state; returns
-        ``(final_state, history)`` (sync or async per ``fed.async_rounds``)."""
-        if eval_fn is not None and eval_every < 1:
-            raise ValueError(
-                f"eval_every must be >= 1 when eval_fn is set, got "
-                f"{eval_every} (evaluate every round with eval_every=1, or "
-                f"pass eval_fn=None to disable evaluation)")
+        ``(final_state, history)`` (sync or async per ``fed.async_rounds``
+        — one engine loop either way)."""
         state = self.init(params)
-        if self.fed.async_rounds:
-            return self._run_async(state, num_rounds, eval_fn, eval_every)
-
-        prefetch = (make_prefetcher(self.fed.prefetch_backend, self.cohort,
-                                    0, num_rounds,
-                                    depth=self.fed.prefetch_rounds)
-                    if self.fed.prefetch_rounds > 0 else None)
-        history: List[dict] = []
-        completed = False
-        try:
-            for r in range(num_rounds):
-                cohort = prefetch.get(r) if prefetch is not None else None
-                state, metrics = self.round(state, r, cohort)
-                if eval_fn is not None and (r % eval_every == 0
-                                            or r == num_rounds - 1):
-                    # eval metrics may be device arrays: convert here so
-                    # history stays JSON-serializable (the sync path's twin
-                    # of the async engine's end-of-loop conversion)
-                    metrics = {**metrics,
-                               **{k: json_scalar(v)
-                                  for k, v in eval_fn(state.params).items()}}
-                metrics["round"] = r
-                history.append(metrics)
-            completed = True
-        finally:
-            if prefetch is not None:
-                # loud on a clean exit, a warning when the round loop is
-                # already propagating its own exception
-                close_prefetcher(prefetch, unwinding=not completed)
-        return state, history
-
-    def _run_async(self, state: ServerState, num_rounds: int,
-                   eval_fn: Optional[Callable], eval_every: int):
-        engine = self._async_engine
-        return engine.run(state, self.cohort, num_rounds,
-                          eval_fn=eval_fn, eval_every=eval_every)
+        return self.engine.run(state, self.cohort, num_rounds,
+                               eval_fn=eval_fn, eval_every=eval_every)
 
     @property
-    def _async_engine(self) -> AsyncRoundEngine:
-        """Built once so the engine's jit caches survive repeated run()s."""
+    def engine(self) -> RoundEngine:
+        """Built once (lazily, after ``init`` has seen a params template
+        for the byte accounting) so the engine's jit caches survive
+        repeated ``run()``s."""
         if self._engine is None:
-            self._engine = self._build_async_engine()
+            self._engine = self._build_engine()
         return self._engine
 
-    def _build_async_engine(self) -> AsyncRoundEngine:
-        return AsyncRoundEngine(
-            cohort_fn=make_cohort_program(
+    def _build_engine(self) -> RoundEngine:
+        def fused(use_sampling: bool):
+            return make_round_program(
                 self.grad_fn, self.fed, placement=self.placement,
                 spmd_axes=self.spmd_axes,
-                server_opt=self.server_opt, use_sampling=True),
-            server_fn=make_server_program(self.fed,
-                                          server_opt=self.server_opt),
-            burn_cohort_fn=(make_cohort_program(
-                self.grad_fn, self.fed, placement=self.placement,
-                spmd_axes=self.spmd_axes,
-                server_opt=self.server_opt, use_sampling=False)
-                if self._has_burn_regime else None),
-            # the burn regime may aggregate in a different payload space
-            # (fedpa_precision burns in as fedavg), so it gets its own
-            # server stage too
-            burn_server_fn=(make_server_program(
-                self.fed, server_opt=self.server_opt, use_sampling=False)
-                if self._has_burn_regime else None),
+                server_opt=self.server_opt, use_sampling=use_sampling)
+
+        def split(use_sampling: bool):
+            return (make_cohort_program(
+                        self.grad_fn, self.fed, placement=self.placement,
+                        spmd_axes=self.spmd_axes,
+                        server_opt=self.server_opt,
+                        use_sampling=use_sampling),
+                    # a burn regime may aggregate in a different payload
+                    # space (fedpa_precision burns in as fedavg), so it
+                    # gets its own server stage too
+                    make_server_program(self.fed, server_opt=self.server_opt,
+                                        use_sampling=use_sampling))
+
+        cohort_fn, server_fn = split(use_sampling=True)
+        burn_cohort_fn = burn_server_fn = None
+        if self._has_burn_regime:
+            burn_cohort_fn, burn_server_fn = split(use_sampling=False)
+        return RoundEngine(
+            cohort_fn=cohort_fn,
+            server_fn=server_fn,
+            round_fn=fused(use_sampling=True),
+            burn_cohort_fn=burn_cohort_fn,
+            burn_server_fn=burn_server_fn,
+            burn_round_fn=(fused(use_sampling=False)
+                           if self._has_burn_regime else None),
             burn_in_rounds=self.fed.burn_in_rounds,
-            max_staleness=self.fed.max_staleness,
+            max_staleness=(self.fed.max_staleness if self.fed.async_rounds
+                           else 0),
             staleness_discount=self.fed.staleness_discount,
+            # straggler lateness needs the apply-time discount exponent,
+            # which only the split pipeline traces
+            pipeline_only=self.fed.straggler_rate > 0,
             prefetch_rounds=self.fed.prefetch_rounds,
             prefetch_backend=self.fed.prefetch_backend,
             client_store=self.client_store,

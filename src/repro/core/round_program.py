@@ -124,12 +124,32 @@ def _client_axes(ctx: _CohortCtx, n_extra: int):
     return (None, 0) + ((0,) if ctx.stateful else ()) + (None,) * n_extra
 
 
+def _qffl_weights(ctx: _CohortCtx, weights, metrics):
+    """q-FFL effective weights: ``w_k * max(loss_first_k, 0)**q``.
+
+    The fairness tilt of q-FFL (Li et al. 2020) — high-loss clients count
+    for more in the aggregate; ``_run_cohort`` renormalizes the tilted fold
+    by ``sum_k w_k * lam_k`` so the aggregate stays a weighted mean. The
+    gate is trace-time: ``fed.qffl_q == 0`` (the default) returns the
+    weights untouched, so the default program is bitwise the untilted one.
+    ``loss_first`` (the pre-update local loss) is the tilt signal so the
+    weight reflects where the client *started* this round, not what its
+    local steps already fixed. Zero-weight entries (dropped clients,
+    chunk padding) stay zero for any q.
+    """
+    if not ctx.fed.qffl_q:
+        return weights
+    lam = jnp.maximum(metrics["loss_first"], 0.0) ** ctx.fed.qffl_q
+    return weights * lam.astype(weights.dtype)
+
+
 def _run_parallel(ctx, params, client_batches, weights, extras, cstates):
     vm = jax.vmap(ctx.client_update, in_axes=_client_axes(ctx, len(extras)),
                   spmd_axis_name=ctx.spmd_axes)
     res = vm(params, client_batches,
              *((cstates,) if ctx.stateful else ()), *extras)
-    return (ctx.alg.reduce_stacked(res.payload, weights), res.metrics,
+    w = _qffl_weights(ctx, weights, res.metrics)
+    return (ctx.alg.reduce_stacked(res.payload, w), res.metrics,
             res.state_update)
 
 
@@ -146,7 +166,8 @@ def _run_sequential(ctx, params, client_batches, weights, extras, cstates):
         batches, w, cs = xs
         res = ctx.client_update(params, batches,
                                 *((cs,) if ctx.stateful else ()), *extras)
-        return (ctx.alg.accumulate(acc, res.payload, w),
+        return (ctx.alg.accumulate(acc, res.payload,
+                                   _qffl_weights(ctx, w, res.metrics)),
                 (res.metrics, res.state_update))
 
     agg, (metrics, new_states) = jax.lax.scan(
@@ -187,7 +208,8 @@ def _run_chunked(ctx, params, client_batches, weights, extras, cstates,
         res = vm(params, batches,
                  *((cs,) if ctx.stateful else ()), *extras)
         acc = tm.tmap(lambda a, c: a + c.astype(a.dtype),
-                      acc, ctx.alg.reduce_stacked(res.payload, w))
+                      acc, ctx.alg.reduce_stacked(
+                          res.payload, _qffl_weights(ctx, w, res.metrics)))
         return acc, (res.metrics, res.state_update)
 
     agg, (metrics, new_states) = jax.lax.scan(
@@ -225,6 +247,21 @@ def _run_cohort(ctx: _CohortCtx, state: ServerState, client_batches,
         agg, metrics, new_states = _run_chunked(
             ctx, params, client_batches, weights, extras, client_states,
             chunk)
+
+    if ctx.fed.qffl_q:
+        # the placements folded with the q-FFL-tilted weights w_k * lam_k
+        # (_qffl_weights); dividing the linear accumulator by
+        # z = sum_k w_k * lam_k makes the effective weights
+        # (w_k * lam_k) / z — a normalized weighting, same contract as the
+        # untilted path. max() guards the all-dropped / all-zero-loss
+        # cohort (z = 0 -> zero aggregate, matching the untilted path).
+        # Ratio-form aggregates ({num, den} pairs — fedpa_precision,
+        # fedlora) cancel z in finish_cohort, so fedlora's encoded-codec
+        # map_components skipping the division is still exact.
+        lam = jnp.maximum(metrics["loss_first"], 0.0) ** ctx.fed.qffl_q
+        z = jnp.sum(weights * lam.astype(weights.dtype))
+        agg = ctx.alg.map_components(
+            lambda a: a / jnp.maximum(z, 1e-12).astype(a.dtype), agg)
 
     # cohort-stage epilogue on the summed accumulator, still traced inside
     # the cohort program: fedlora decodes its low-rank accumulator here with

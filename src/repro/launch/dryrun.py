@@ -1,6 +1,11 @@
 """Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
 combination against the production mesh and extract the roofline terms.
 
+The programs lowered here are exactly what ``core.engine.RoundEngine``
+dispatches at runtime — the fused round (``make_fed_round``) on the
+window=1 path — so a config that compiles in the dry-run runs in the
+unified loop.
+
 The two ``os.environ`` statements below MUST stay ahead of every other
 import: jax locks the device count on first initialization, and the
 dry-run needs 512 placeholder host devices for ``jax.make_mesh`` to build

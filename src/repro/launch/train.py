@@ -33,14 +33,13 @@ from repro.checkpoint import (restore_checkpoint, restore_store_sharded,
                               save_checkpoint, save_store_sharded)
 from repro.compression import round_bytes
 from repro.configs.base import FedConfig
-from repro.core.async_engine import AsyncRoundEngine
-from repro.core.client_state import jit_donating_store, make_client_store
+from repro.core.client_state import make_client_store
+from repro.core.engine import RoundEngine
 from repro.core.server import init_server_state
 from repro.core.sharded_round import make_fed_round, make_fed_round_split
 from repro.data import SyntheticLMData
 from repro.data.cohort_source import CohortSource
-from repro.data.prefetch import (close_prefetcher, globalize_cohort_batches,
-                                 local_row_range, make_prefetcher,
+from repro.data.prefetch import (globalize_cohort_batches, local_row_range,
                                  replicate_global)
 from repro.launch.mesh import init_distributed, make_host_mesh
 from repro.models import init_params, lm_loss
@@ -121,7 +120,7 @@ def parse_args(argv=None):
     ap.add_argument("--async-rounds", action="store_true",
                     help="double-buffered rounds: overlap cohort t+1's "
                          "client compute with round t's server update "
-                         "(core/async_engine.py)")
+                         "(the wide-window path of core/engine.py)")
     ap.add_argument("--max-staleness", type=int, default=1,
                     help="cohorts in flight beyond the one being applied; "
                          "0 matches the sync path numerically")
@@ -289,7 +288,7 @@ def main():
     # stateful algorithms (scaffold/fedep): per-client persistent state,
     # checkpointed alongside the server state. A burn regime may differ in
     # statefulness from the main regime (fedep burns in as stateless
-    # fedavg) — same rule as FedSim/AsyncRoundEngine.
+    # fedavg) — same rule as FedSim/RoundEngine.
     burn_stateful = (alg.burn_algorithm().stateful
                      if alg.has_burn_regime and fed.burn_in_rounds
                      else alg.stateful)
@@ -321,25 +320,6 @@ def main():
         restore_store_sharded(args.ckpt_dir, store, step=start_round)
 
     q_chunk = min(64, s_text)
-
-    def jit_round(round_fn, stateful_regime):
-        # device-stateful rounds take (state, batches, weights, store, ids)
-        # — donate the store so its buffers update in place; a sharded
-        # store additionally pins the returned buffers to the population
-        # sharding so no round-over-round layout drift creeps in
-        if device_store and stateful_regime:
-            pop_sh = (store.population_sharding
-                      if store is not None else None)
-            out_sh = (None if pop_sh is None
-                      else (None, None, pop_sh))
-            return jit_donating_store(round_fn, 3, out_shardings=out_sh)
-        return jax.jit(round_fn)
-
-    round_sample = jit_round(make_fed_round(cfg, fed, placement="parallel",
-                                            q_chunk=q_chunk), alg.stateful)
-    round_burn = jit_round(make_fed_round(cfg, fed, placement="parallel",
-                                          q_chunk=q_chunk,
-                                          use_sampling=False), burn_stateful)
 
     # faults + sampling + weights live in the cohort source; its draws key
     # off the ABSOLUTE round index, so a checkpoint restart replays the
@@ -385,43 +365,57 @@ def main():
                                    {"arch": cfg.name,
                                     "algorithm": fed.algorithm})
 
-    if fed.async_rounds:
-        state = run_async(args, cfg, fed, alg, state, store, burn_stateful,
-                          start_round, source, eval_fn, emit,
-                          maybe_checkpoint, q_chunk)
-    else:
-        state = run_sync(args, fed, alg, state, store, burn_stateful,
-                         device_store, start_round, source, round_sample,
-                         round_burn, eval_fn, emit, maybe_checkpoint,
-                         pop_mesh=pop_mesh)
+    state = run_rounds(args, cfg, fed, alg, state, store, burn_stateful,
+                       start_round, source, eval_fn, emit, maybe_checkpoint,
+                       q_chunk, pop_mesh=pop_mesh)
     if logf:
         logf.close()
 
 
-def run_async(args, cfg, fed, alg, state, store, burn_stateful, start_round,
-              source, eval_fn, emit, maybe_checkpoint, q_chunk):
-    """Drive the double-buffered async engine; returns the final state.
+def run_rounds(args, cfg, fed, alg, state, store, burn_stateful, start_round,
+               source, eval_fn, emit, maybe_checkpoint, q_chunk,
+               pop_mesh=None):
+    """Drive the unified ``RoundEngine``; returns the final state.
 
-    Cohort t+1 is dispatched before round t's server update lands; deltas
-    are discounted by ``staleness_discount**s``."""
+    One loop for both modes: synchronous runs are the in-flight window of
+    one (single-dispatch fused round — bitwise the historical sync loop);
+    ``fed.async_rounds`` widens the window to ``max_staleness + 1`` so
+    cohort t+1's client compute overlaps round t's server update, deltas
+    discounted by ``staleness_discount**s``. The engine owns all jitting
+    (including the device store's donation + pinned shardings); with
+    ``pop_mesh`` the host-built operands are lifted to global arrays via
+    ``lift_operand`` and the server state is made global up front."""
+    if pop_mesh is not None:
+        # every jit input must be a global array in a multi-process run;
+        # after round one the server state is a round output and stays so
+        state = replicate_global(state, pop_mesh)
+    has_burn = alg.has_burn_regime and fed.burn_in_rounds > 0
     cohort_fn, server_fn = make_fed_round_split(
         cfg, fed, placement="parallel", q_chunk=q_chunk)
     burn_cohort_fn = burn_server_fn = None
-    if alg.has_burn_regime and fed.burn_in_rounds:
+    if has_burn:
         burn_cohort_fn, burn_server_fn = make_fed_round_split(
             cfg, fed, placement="parallel", q_chunk=q_chunk,
             use_sampling=False)
     rb = round_bytes(fed, state.params)
     burn_rb = (round_bytes(fed, state.params, use_sampling=False)
-               if alg.has_burn_regime and fed.burn_in_rounds else rb)
-    engine = AsyncRoundEngine(
+               if has_burn else rb)
+    engine = RoundEngine(
         cohort_fn=cohort_fn,
         server_fn=server_fn,
+        round_fn=make_fed_round(cfg, fed, placement="parallel",
+                                q_chunk=q_chunk),
         burn_cohort_fn=burn_cohort_fn,
         burn_server_fn=burn_server_fn,
+        burn_round_fn=(make_fed_round(cfg, fed, placement="parallel",
+                                      q_chunk=q_chunk, use_sampling=False)
+                       if has_burn else None),
         burn_in_rounds=max(0, fed.burn_in_rounds - start_round),
-        max_staleness=fed.max_staleness,
+        max_staleness=fed.max_staleness if fed.async_rounds else 0,
         staleness_discount=fed.staleness_discount,
+        # straggler lateness needs the apply-time discount exponent, which
+        # only the split pipeline traces
+        pipeline_only=fed.straggler_rate > 0,
         prefetch_rounds=fed.prefetch_rounds,
         prefetch_backend=fed.prefetch_backend,
         client_store=store,
@@ -430,6 +424,8 @@ def run_async(args, cfg, fed, alg, state, store, burn_stateful, start_round,
         record_faults=fed.fault_injection,
         round_bytes=rb,
         burn_round_bytes=burn_rb,
+        lift_operand=(None if pop_mesh is None
+                      else lambda x: replicate_global(x, pop_mesh)),
     )
 
     def build_cohort(i):
@@ -440,9 +436,9 @@ def run_async(args, cfg, fed, alg, state, store, burn_stateful, start_round,
     last_t = time.time()
 
     def on_round(rec, round_state):
-        # live per-round logging + periodic checkpoints, as in the sync
-        # loop; forcing the metrics here costs one sync per round, but
-        # the next cohorts are already dispatched on device
+        # live per-round logging + periodic checkpoints; forcing the
+        # metrics here costs one sync per round, but (async) the next
+        # cohorts are already dispatched on device
         nonlocal last_t
         r = start_round + rec["round"]
         out = {"round": r,
@@ -454,8 +450,7 @@ def run_async(args, cfg, fed, alg, state, store, burn_stateful, start_round,
                "phase": phase_name(fed, r),
                "sec": round(time.time() - last_t, 2)}
         for k in ("dropped", "straggled", "bytes_up", "bytes_down"):
-            if k in rec:
-                out[k] = rec[k]
+            out[k] = rec[k]
         emit(out)
         last_t = time.time()
         maybe_checkpoint(round_state, r)
@@ -464,86 +459,6 @@ def run_async(args, cfg, fed, alg, state, store, burn_stateful, start_round,
         state, build_cohort, args.rounds - start_round,
         eval_fn=lambda p: {"eval_loss": float(eval_fn(p))},
         on_round=on_round)
-    return state
-
-
-def _sync_round(state, fn, cohort, store, device_store, stateful_round,
-                pop_mesh=None):
-    """Apply one synchronous round, routing per client-state placement.
-
-    A dropped client's half-finished state must not land: ``survivors``
-    doubles as the state-store write mask. With ``pop_mesh`` (a sharded /
-    multi-process run) the replicated operands — survivors mask, client
-    ids — are lifted to global arrays first; batches already arrive
-    global from the per-host feeding wrapper, the store lives sharded on
-    device, and the server state stays global round over round."""
-    survivors = cohort.survivors  # None = mask-free program
-    ids, batches = cohort.client_ids, cohort.batches
-    if pop_mesh is not None:
-        survivors = replicate_global(survivors, pop_mesh)
-    if stateful_round and device_store:
-        dev_ids = store.prepare_ids(ids)
-        if pop_mesh is not None:
-            dev_ids = replicate_global(dev_ids, pop_mesh)
-        state, metrics, new_ss = fn(state, batches, None,
-                                    store.device_state(),
-                                    dev_ids, survivors)
-        store.set_device_state(new_ss)
-    elif stateful_round:
-        cstates, stamps = store.gather(ids)
-        state, metrics, new_states = fn(state, batches, None, cstates,
-                                        survivors)
-        store.scatter(ids, new_states, stamps, write_mask=survivors)
-    else:
-        state, metrics = fn(state, batches, None, survivors)
-    return state, metrics
-
-
-def run_sync(args, fed, alg, state, store, burn_stateful, device_store,
-             start_round, source, round_sample, round_burn, eval_fn, emit,
-             maybe_checkpoint, pop_mesh=None):
-    """Drive the synchronous round loop; returns the final state."""
-    if pop_mesh is not None:
-        # every jit input must be a global array in a multi-process run;
-        # after round one the server state is a round output and stays so
-        state = replicate_global(state, pop_mesh)
-    rb = round_bytes(fed, state.params)
-    burn_rb = (round_bytes(fed, state.params, use_sampling=False)
-               if alg.has_burn_regime and fed.burn_in_rounds else rb)
-    prefetch = (make_prefetcher(fed.prefetch_backend, source.cohort,
-                                start_round, args.rounds,
-                                depth=fed.prefetch_rounds)
-                if fed.prefetch_rounds > 0 else None)
-    completed = False
-    try:
-        for r in range(start_round, args.rounds):
-            t0 = time.time()
-            is_burn = r < fed.burn_in_rounds
-            fn = round_burn if is_burn else round_sample
-            cohort = (prefetch.get(r) if prefetch is not None
-                      else source.cohort(r))
-            stateful_round = (store is not None
-                              and (burn_stateful if is_burn
-                                   else alg.stateful))
-            state, metrics = _sync_round(state, fn, cohort, store,
-                                         device_store, stateful_round,
-                                         pop_mesh=pop_mesh)
-            rec = {"round": r, "eval_loss": float(eval_fn(state.params)),
-                   "client_loss_last": float(metrics["loss_last"]),
-                   "client_loss_first": float(metrics["loss_first"]),
-                   "phase": phase_name(fed, r),
-                   "sec": round(time.time() - t0, 2)}
-            bts = burn_rb if is_burn else rb
-            rec["bytes_up"] = bts["bytes_up"]
-            rec["bytes_down"] = bts["bytes_down"]
-            if cohort.survivors is not None:
-                rec["dropped"] = int(cohort.dropped)
-            emit(rec)
-            maybe_checkpoint(state, r)
-        completed = True
-    finally:
-        if prefetch is not None:
-            close_prefetcher(prefetch, unwinding=not completed)
     return state
 
 

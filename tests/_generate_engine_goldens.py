@@ -1,0 +1,43 @@
+"""One-time generator for the engine-equivalence goldens.
+
+Run at the commit immediately BEFORE the unified ``core/engine``
+refactor, so the artifacts under ``tests/goldens/engine/`` capture the
+original sync loop (``FedSim.run``) and the original standalone
+``AsyncRoundEngine`` byte for byte:
+
+    PYTHONPATH=src:tools python tests/_generate_engine_goldens.py
+
+The matrix definition lives in ``engine_goldens_common.py`` (shared
+with the regression test); this script only iterates and writes.
+"""
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent))
+
+import engine_goldens_common as common  # noqa: E402
+
+
+def main():
+    """Generate every golden cell in the matrix."""
+    problem = common.make_problem()
+    t0 = time.time()
+    n = 0
+    for name in common.SPECS:
+        for mode in common.MODES:
+            if mode == "sync" and name in common.ASYNC_ONLY:
+                continue
+            for placement in common.PLACEMENTS:
+                t = time.time()
+                out = common.run_case(name, mode, placement, problem)
+                common.save_case(name, mode, placement, *out)
+                n += 1
+                print(f"[{n}] {common.case_id(name, mode, placement)}"
+                      f"  ({time.time() - t:.1f}s)", flush=True)
+    print(f"done: {n} cells in {time.time() - t0:.1f}s "
+          f"-> {common.GOLDEN_DIR}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""FL007 firing fixture: history assembly outside core/history.py."""
+from repro.core.history import json_scalar
+
+
+def run_rounds(engine, state, cohorts):
+    """A frontend regrowing its own round loop's history assembly."""
+    history = []
+    for t, cohort in enumerate(cohorts):
+        state, metrics = engine.apply(state, cohort)
+        # 1) re-converting metrics instead of consuming recorder records
+        loss = json_scalar(metrics["loss_last"])
+        # 2) a hand-rolled record duplicating the recorder's schema
+        history.append({
+            "round": t,
+            "staleness": 0,
+            "client_loss": loss,
+            "state_drops": 0,
+        })
+    return state, history
+
+
+def summarize(rec):
+    """3) partial schema rebuilds count too (two marker keys)."""
+    return {"staleness": rec["staleness"], "straggled": rec["straggled"]}

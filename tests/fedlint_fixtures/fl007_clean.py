@@ -1,0 +1,21 @@
+"""FL007 clean fixture: frontends consume recorder records, never build
+them."""
+
+
+def run_rounds(engine, state, build_cohort, num_rounds, emit):
+    """The sanctioned shape: the engine's RoundRecorder assembles records;
+    the frontend logs single fields off them."""
+
+    def on_round(rec, round_state):
+        # borrowing ONE schema field for a log line is fine; rebuilding
+        # the record is not
+        emit({"round": rec["round"], "staleness": rec["staleness"],
+              "sec": 0.0})
+
+    return engine.run(state, build_cohort, num_rounds, on_round=on_round)
+
+
+def wire_bytes(params_bytes):
+    """Byte-accounting dicts share key names with the schema but are not
+    records (compression.round_bytes's shape)."""
+    return {"bytes_up": params_bytes, "bytes_down": params_bytes}

@@ -1,0 +1,138 @@
+"""Engine-equivalence matrix: the unified RoundEngine vs pre-refactor
+goldens.
+
+``tests/goldens/engine/`` was generated (once, by
+``tests/_generate_engine_goldens.py``) with the PRE-refactor loops —
+``FedSim.run``'s inline sync loop and the standalone ``AsyncRoundEngine``
+— so these tests pin the refactor's core contract: the one staleness-
+general loop reproduces both loops it replaced **bitwise** (params, full
+client-state store, JSON history) across every registered algorithm ×
+placement × {sync, async staleness=2}, including burn-in regimes, fault
+injection, and both store placements.
+
+Also here:
+
+* the unification dividend — ``async_rounds=True, max_staleness=0``
+  (no stragglers) now takes the fused window=1 path and is bitwise the
+  SYNC goldens (the pre-refactor engines only agreed to float rounding);
+* the golden-schema regression test for the satellite "history schema
+  drift" fix: one uniform record schema over both modes, stamped with
+  explicit defaults, JSON-serializable end to end.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import engine_goldens_common as egc
+from repro.configs.base import FedConfig
+from repro.core import FedSim
+
+MATRIX = [
+    (name, mode, placement)
+    for name in egc.SPECS
+    for mode in egc.MODES
+    if not (mode == "sync" and name in egc.ASYNC_ONLY)
+    for placement in egc.PLACEMENTS
+]
+
+#: Every record the unified engine emits carries exactly these keys
+#: (plus the flattened eval metrics on eval-cadence rounds).
+UNIFORM_KEYS = frozenset({
+    "round", "staleness", "loss_first", "loss_last", "client_loss",
+    "bytes_up", "bytes_down", "dropped", "straggled", "state_drops",
+})
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _x32():
+    """The goldens were generated at jax's default precision; a test
+    module that flips ``jax_enable_x64`` at import time (test_dp_delta,
+    test_posterior, test_shrinkage) must not leak float64 — and doubled
+    byte accounting — into the bitwise comparison."""
+    prev = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", False)
+    yield
+    jax.config.update("jax_enable_x64", prev)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return egc.make_problem()
+
+
+def _assert_bitwise(arrays, history, g_arrays, g_history):
+    assert set(arrays) == set(g_arrays), (
+        set(arrays) ^ set(g_arrays))
+    for k in g_arrays:
+        got, want = arrays[k], g_arrays[k]
+        assert got.dtype == want.dtype and got.shape == want.shape, k
+        assert np.array_equal(got, want, equal_nan=True), k
+    assert len(history) == len(g_history)
+    for rec, g_rec in zip(history, g_history):
+        # key SUBSET on the golden side: the uniform schema stamps keys
+        # (staleness/state_drops/straggled/dropped) the old sync loop
+        # omitted; every key the old loops DID emit must match exactly
+        missing = set(g_rec) - set(rec)
+        assert not missing, missing
+        for k, v in g_rec.items():
+            assert rec[k] == v, (k, rec[k], v)
+
+
+@pytest.mark.parametrize("name,mode,placement", MATRIX,
+                         ids=[egc.case_id(*m) for m in MATRIX])
+def test_bitwise_vs_prerefactor_goldens(name, mode, placement, problem):
+    """Window=1 ≡ the old sync loop; staleness=2 ≡ the old async engine."""
+    arrays_p, arrays_s, history = egc.run_case(name, mode, placement,
+                                               problem)
+    g_arrays, g_history = egc.load_case(name, mode, placement)
+    _assert_bitwise({**arrays_p, **arrays_s}, history, g_arrays, g_history)
+
+
+#: A cross-section of the matrix (stateless + burn-in + device store +
+#: codec + faults) for the async0 == sync unification claim; stragglers
+#: excluded by construction (they force the split pipeline).
+ASYNC0_SPECS = ("fedavg", "fedpa", "scaffold_dev", "fedlora",
+                "fedavg_dropout")
+
+
+@pytest.mark.parametrize("name", ASYNC0_SPECS)
+@pytest.mark.parametrize("placement", ("parallel", "chunked"))
+def test_async0_bitwise_equals_sync_goldens(name, placement, problem):
+    """max_staleness=0 without stragglers now runs the fused window=1
+    path: bitwise the SYNC goldens, where the two pre-refactor loops only
+    agreed to float rounding."""
+    kwargs, weights = egc.SPECS[name]
+    fed = FedConfig(**{**kwargs, "async_rounds": True, "max_staleness": 0})
+    grad_fn, batch_fn = problem
+    sim = FedSim(fed, grad_fn, batch_fn, num_clients=egc.C,
+                 client_weights=weights, placement=placement)
+    state, history = sim.run(jnp.zeros(egc.D), egc.ROUNDS,
+                             eval_fn=egc.eval_fn, eval_every=2)
+    arrays = egc._leaves(state.params, "param")
+    if sim.client_store is not None:
+        arrays.update(egc._leaves(sim.client_store.state_dict(), "store"))
+    g_arrays, g_history = egc.load_case(name, "sync", placement)
+    _assert_bitwise(arrays, history, g_arrays, g_history)
+
+
+@pytest.mark.parametrize("name,mode", [("fedavg", "sync"),
+                                       ("scaffold", "sync"),
+                                       ("fedavg_dropout", "async2"),
+                                       ("fedavg_straggler", "async2")])
+def test_uniform_history_schema(name, mode, problem):
+    """The schema-drift fix: both modes emit ONE record schema with
+    explicit defaults (bytes None without accounting, zero fault/CAS
+    counters), JSON-serializable with no device arrays left inside."""
+    _, _, history = egc.run_case(name, mode, "parallel", problem)
+    assert len(history) == egc.ROUNDS
+    for t, rec in enumerate(history):
+        extra = {"eval_loss"} if (t % 2 == 0 or t == egc.ROUNDS - 1) else set()
+        assert set(rec) == UNIFORM_KEYS | extra, (t, set(rec))
+        assert rec["round"] == t
+        assert rec["client_loss"] == rec["loss_last"]
+        for k in ("staleness", "dropped", "straggled", "state_drops"):
+            assert isinstance(rec[k], int), (k, type(rec[k]))
+    json.dumps(history)  # end-to-end JSON-safety, both modes

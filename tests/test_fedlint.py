@@ -29,6 +29,7 @@ EXPECTED = {
     "FL004": 1,
     "FL005": 4,
     "FL006": 2,
+    "FL007": 3,
 }
 
 

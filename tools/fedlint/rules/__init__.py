@@ -6,4 +6,4 @@ PR/bug that motivated it.
 """
 from fedlint.rules import (fl001_host_sync, fl002_donation,  # noqa: F401
                            fl003_accumulator, fl004_prng, fl005_registry,
-                           fl006_shardings)
+                           fl006_shardings, fl007_history)

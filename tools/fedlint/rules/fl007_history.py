@@ -1,0 +1,93 @@
+"""FL007: history records are assembled in ``core/history.py`` — only.
+
+The sync/async round-loop unification exists because history assembly
+kept drifting apart: PR 4 fixed JSON-breaking device arrays in async
+history only, PR 5 re-fixed the same bug for sync, and PR 8 threaded the
+byte accounting through both loops by hand. ``core.history.RoundRecorder``
+is now the single place round records are built (uniform schema, one
+end-of-loop ``json_scalar`` sync), and this rule keeps it that way: any
+``json_scalar`` call, or any dict literal that looks like a hand-rolled
+round record (two or more of the recorder's schema-marker keys), outside
+``core/history.py`` is a finding. Frontends that *log* per-round lines
+may copy single fields off the recorder's record; what they must not do
+is rebuild the record — that is the duplication this rule exists to stop
+regrowing.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Iterator
+
+from fedlint.core import Finding, Rule, register_rule
+
+#: Keys that mark a dict literal as a round-history record. Two or more
+#: together only ever appear in the recorder's uniform schema — a log line
+#: borrowing one field (e.g. "staleness") stays clean, byte-accounting
+#: dicts ({"bytes_up", "bytes_down"}) stay clean.
+_MARKERS = frozenset({"client_loss", "staleness", "state_drops", "straggled"})
+
+#: The one module allowed to assemble records / call json_scalar.
+_EXEMPT_SUFFIX = "repro/core/history.py"
+
+
+@register_rule
+class HistoryOutsideRecorder(Rule):
+    """Flag history-record assembly outside the shared RoundRecorder."""
+
+    id = "FL007"
+    name = "history-outside-recorder"
+    description = ("history records (and json_scalar conversion) must be "
+                   "assembled by core.history.RoundRecorder, not "
+                   "hand-rolled in round loops")
+
+    def check(self, project) -> Iterator[Finding]:
+        """Scan calls and dict literals everywhere but core/history.py."""
+        for mod in project.modules.values():
+            if Path(mod.relpath).as_posix().endswith(_EXEMPT_SUFFIX):
+                continue
+            for node in ast.walk(mod.tree):
+                if isinstance(node, ast.Call):
+                    problem = _json_scalar_call(mod, node)
+                elif isinstance(node, ast.Dict):
+                    problem = _record_literal(node)
+                else:
+                    continue
+                if problem:
+                    yield Finding(
+                        self.id, mod.relpath, node.lineno,
+                        node.col_offset + 1, problem)
+
+
+def _json_scalar_call(mod, call: ast.Call) -> str:
+    """A json_scalar call outside the recorder ('' when fine)."""
+    name = mod.call_canonical(call) or _dotted(call.func) or ""
+    if name.rsplit(".", 1)[-1] == "json_scalar":
+        return ("json_scalar call outside core/history.py; history "
+                "conversion happens once, in RoundRecorder.history() — "
+                "consume its records instead of re-converting")
+    return ""
+
+
+def _record_literal(node: ast.Dict) -> str:
+    """A dict literal that rebuilds the recorder's schema ('' when fine)."""
+    keys = {k.value for k in node.keys
+            if isinstance(k, ast.Constant) and isinstance(k.value, str)}
+    hits = sorted(keys & _MARKERS)
+    if len(hits) >= 2:
+        return (f"hand-rolled history record (schema keys: "
+                f"{', '.join(hits)}); round records are assembled by "
+                f"core.history.RoundRecorder only")
+    return ""
+
+
+def _dotted(expr) -> str:
+    """Best-effort dotted name of a callee (attribute chains only)."""
+    parts = []
+    while isinstance(expr, ast.Attribute):
+        parts.append(expr.attr)
+        expr = expr.value
+    if isinstance(expr, ast.Name):
+        parts.append(expr.id)
+        return ".".join(reversed(parts))
+    return ""
